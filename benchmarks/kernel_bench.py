@@ -1,0 +1,91 @@
+"""Kernel micro-bench: interpret-mode allclose + host timing of the jnp
+oracle at paper-relevant shapes (the Pallas kernels themselves target TPU;
+on this CPU container the oracle timing is the meaningful number and the
+kernel is validated for correctness at reduced shapes).
+
+CSV: name,us_per_call,derived (derived = max |err| vs oracle).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RNG = np.random.default_rng(0)
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    # LSTM cell: paper dims (batch 224/4 stages, hidden 1024) oracle timing
+    from repro.kernels.lstm_cell.ops import lstm_cell_fused
+    from repro.kernels.lstm_cell.ref import lstm_cell_ref
+
+    B, In, H = 56, 1024, 1024
+    args = (
+        jnp.asarray(RNG.normal(size=(B, In)), jnp.float32),
+        jnp.asarray(RNG.normal(size=(B, H)), jnp.float32),
+        jnp.asarray(RNG.normal(size=(B, H)), jnp.float32),
+        jnp.asarray(RNG.normal(size=(In, 4, H)) * 0.05, jnp.float32),
+        jnp.asarray(RNG.normal(size=(H, 4, H)) * 0.05, jnp.float32),
+        jnp.asarray(RNG.normal(size=(4, H)) * 0.05, jnp.float32),
+    )
+    us = _time(jax.jit(lstm_cell_ref), *args)
+    x, h0, c0, wx, wh, b = args
+    small = (x[:8, :128], h0[:8, :128], c0[:8, :128], wx[:128, :, :128], wh[:128, :, :128], b[:, :128])
+    h1, c1 = lstm_cell_fused(*small, block_b=8, block_h=128)
+    h2, c2 = lstm_cell_ref(*small)
+    err = float(jnp.abs(h1 - h2).max())
+    rows.append(("kernel_lstm_cell", round(us, 1), err, f"oracle @B{B} H{H}; kernel validated interpret"))
+
+    # Luong attention head at paper dims
+    from repro.kernels.luong_attn.ops import luong_attention_fused
+    from repro.kernels.luong_attn.ref import luong_attention_ref
+
+    Bh, N, M, h = 16, 25, 25, 1024
+    Hm = jnp.asarray(RNG.normal(size=(Bh, N, h)), jnp.float32)
+    Sm = jnp.asarray(RNG.normal(size=(Bh, M, h)), jnp.float32)
+    mask = jnp.ones((Bh, M), bool)
+    wa = jnp.asarray(RNG.normal(size=(h, h)) * 0.03, jnp.float32)
+    wc = jnp.asarray(RNG.normal(size=(2 * h, h)) * 0.03, jnp.float32)
+    us = _time(jax.jit(lambda *a: luong_attention_ref(*a)), Hm, Sm, mask, wa, wc[:h], wc[h:])
+    o1 = luong_attention_fused(Hm[:2, :8], Sm[:2], mask[:2], wa, wc, block_n=8)
+    o2 = luong_attention_ref(Hm[:2, :8], Sm[:2], mask[:2], wa, wc[:h], wc[h:])
+    rows.append(("kernel_luong_attn", round(us, 1), float(jnp.abs(o1 - o2).max()), f"oracle @B{Bh} N{N} M{M} h{h}"))
+
+    # Flash attention
+    from repro.kernels.flash_attn.ops import flash_attention
+    from repro.models.attention import chunked_attention
+
+    q = jnp.asarray(RNG.normal(size=(1, 1024, 2, 2, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 1024, 2, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 1024, 2, 64)), jnp.bfloat16)
+    us = _time(jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True, q_chunk=256, kv_chunk=256)), q, k, v)
+    o1 = flash_attention(q[:, :128], k[:, :128], v[:, :128], causal=True, block_q=64, block_kv=64)
+    o2 = chunked_attention(q[:, :128], k[:, :128], v[:, :128], causal=True, q_chunk=64, kv_chunk=64)
+    rows.append(("kernel_flash_attn", round(us, 1), float(jnp.abs(o1.astype(jnp.float32) - o2.astype(jnp.float32)).max()), "oracle @S1024"))
+
+    # MoE grouped GEMM
+    from repro.kernels.moe_gemm.ops import moe_gemm_fused
+    from repro.kernels.moe_gemm.ref import moe_gemm_ref
+
+    E, C, d, F = 8, 256, 512, 768
+    x = jnp.asarray(RNG.normal(size=(E, C, d)), jnp.bfloat16)
+    w1 = jnp.asarray(RNG.normal(size=(E, d, F)) * 0.05, jnp.bfloat16)
+    wg = jnp.asarray(RNG.normal(size=(E, d, F)) * 0.05, jnp.bfloat16)
+    w2 = jnp.asarray(RNG.normal(size=(E, F, d)) * 0.05, jnp.bfloat16)
+    us = _time(jax.jit(moe_gemm_ref), x, w1, wg, w2)
+    o1 = moe_gemm_fused(x[:2, :16], w1[:2], wg[:2], w2[:2], block_c=16, block_f=256)
+    o2 = moe_gemm_ref(x[:2, :16], w1[:2], wg[:2], w2[:2])
+    rows.append(("kernel_moe_gemm", round(us, 1), float(jnp.abs(o1.astype(jnp.float32) - o2.astype(jnp.float32)).max()), f"oracle @E{E} C{C}"))
+    return rows

@@ -1,0 +1,42 @@
+"""Roofline table: reads experiments/dryrun/*.json (written by
+repro.launch.dryrun) and emits one row per (arch x shape x mesh x strategy).
+
+CSV: name,us_per_call,derived — us_per_call is the dominant roofline term
+(per-device microseconds), derived the useful-FLOPs ratio; the bottleneck
+and all three terms go in the trailing comment column.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run():
+    rows = []
+    recs = load_records()
+    for r in recs:
+        roof = r["roofline"]
+        dom = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}_{r['strategy']}"
+        if r.get("micro_batches", 1) > 1:
+            name += f"_mb{r['micro_batches']}"
+        detail = (
+            f"bottleneck={roof['bottleneck']} C={roof['compute_s']*1e3:.1f}ms "
+            f"M={roof['memory_s']*1e3:.1f}ms X={roof['collective_s']*1e3:.1f}ms "
+            f"peak={r['memory_analysis']['peak_gb_per_device']}GB"
+        )
+        rows.append((name, round(dom * 1e6, 1), round(roof["useful_flops_ratio"], 3), detail))
+    if not recs:
+        rows.append(("roofline_no_dryrun_artifacts", 0.0, 0, "run repro.launch.dryrun first"))
+    return rows

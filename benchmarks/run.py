@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table3,table4,fig4,roofline,kernels]
+
+Prints ``name,us_per_call,derived[,notes]`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = {
+    "table3": "benchmarks.table3_scaling",  # Table 3: training speed / scaling factors
+    "table4": "benchmarks.table4_accuracy",  # Table 4/5: accuracy with vs without input-feeding
+    "fig4": "benchmarks.fig4_convergence",  # Figure 4: convergence vs wall-clock
+    "kernels": "benchmarks.kernel_bench",  # Pallas kernels vs jnp oracle (interpret timing + allclose)
+    "roofline": "benchmarks.roofline_table",  # §Roofline: terms from the dry-run artifacts
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list of " + ",".join(MODULES))
+    args = ap.parse_args()
+    names = list(MODULES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived,notes")
+    failures = 0
+    for name in names:
+        mod_name = MODULES[name]
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            rows = mod.run()
+            for row in rows:
+                name_, us, derived = row[0], row[1], row[2]
+                notes = row[3] if len(row) > 3 else ""
+                print(f"{name_},{us},{derived},{notes}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,0,", flush=True)
+            traceback.print_exc()
+        print(f"# {name} finished in {time.perf_counter()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Table 3 analogue: training-speed scaling factors per parallelization
+strategy.
+
+Two parts:
+
+1. **Analytic reproduction** of the paper's Table 3 on the paper's own
+   hardware point (4x V100 + NVLink): the calibrated cost model in
+   ``core/hybrid`` predicts scaling factors for data / model / hybrid-IF /
+   hybrid, which we compare against the paper's measured 1.60-1.71 /
+   2.32-2.51 / 3.43-3.57 / 4.13-4.20.  This validates that the paper's
+   observed ordering follows from its communication structure.
+2. **Measured step times** of the actual jit'd train step per strategy on
+   this host (1 CPU device -> strategies share one device; the wall-clock
+   column demonstrates the harness, not parallel speedup — the speedup
+   column is the analytic model's).
+
+CSV: name,us_per_call,derived  (derived = scaling factor vs 1 device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.hybrid import scaling_factor_model
+from repro.data import MTBatchIterator, SyntheticMTTask
+from repro.models import seq2seq as s2s
+from repro.optim import adam
+from repro.train.trainer import init_train_state, make_train_step
+
+# paper hardware point: V100 fp32 peak 15.7 TFLOP/s; the asymptotic sustained
+# rate for the paper's LSTM-size GEMMs is calibrated so the 1-GPU row
+# reproduces the paper's measured 2826-2979 src tok/s (the utilization curve
+# rate(B)=peak*B/(B+64) then gives ~2.35 TF at the paper's batch 64).
+V100_FLOPS = 4.7e12
+NVLINK_BW = 130e9
+PAPER = {  # WMT14 / WMT17 measured scaling factors (Table 3)
+    "data": (1.60, 1.70),
+    "model": (2.32, 2.51),
+    "hybrid_if": (3.43, 3.57),
+    "hybrid": (4.13, 4.20),
+}
+
+
+def analytic_rows():
+    cfg = get_config("seq2seq-rnn")
+    rows = []
+    kw = dict(devices=4, batch=224, src_len=25, tgt_len=25, flops_per_sec=V100_FLOPS, link_bytes_per_sec=NVLINK_BW)
+    kw_data = dict(kw, batch=256)  # Table 3: data parallelism ran mini-batch 256, the rest 224
+    preds = {
+        # Table 3's "w/ model parallelism" row is the BASELINE model, i.e.
+        # WITH input-feeding (the paper pipelines Fig. 1 as-is in Fig. 2).
+        "data": scaling_factor_model(cfg, strategy="data", **kw_data),
+        "model": scaling_factor_model(cfg, strategy="model", input_feeding=True, **kw),
+        "hybrid_if": scaling_factor_model(cfg, strategy="hybrid", input_feeding=True, **kw),
+        "hybrid": scaling_factor_model(cfg, strategy="hybrid", **kw),
+        "hybrid_opt": scaling_factor_model(cfg, strategy="hybrid_opt", **kw),
+    }
+    for name, pred in preds.items():
+        if name in PAPER:
+            lo, hi = PAPER[name]
+            note = f"paper {lo}-{hi}"
+        else:
+            note = "beyond-paper (no Table 3 row)"
+        rows.append((f"table3_analytic_{name}", 0.0, round(pred, 2), note))
+    return rows, preds
+
+
+def measured_rows(steps: int = 6):
+    cfg = dataclasses.replace(get_config("seq2seq-rnn", smoke=True), dropout=0.0)
+    params, specs = s2s.init_seq2seq(jax.random.key(0), cfg)
+    task = SyntheticMTTask(vocab_size=cfg.vocab_size, min_len=6, max_len=12)
+    it = MTBatchIterator(task, batch_size=16, buckets=(13,))
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    rows = []
+    for input_feeding in (False, True):
+        c = dataclasses.replace(cfg, input_feeding=input_feeding)
+        p, _ = s2s.init_seq2seq(jax.random.key(0), c)
+        step, _, _ = make_train_step(c, adam(), strat=__import__("repro.core.strategy", fromlist=["x"]).Strategy.SINGLE)
+        st = init_train_state(p, adam())
+        st, _ = step(st, batch, 1.0, jax.random.key(0))  # compile
+        t0 = time.perf_counter()
+        for i in range(steps):
+            st, m = step(st, batch, 1.0, jax.random.key(i))
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / steps
+        tokens = float(m["tokens"])
+        name = "hybridnmt" if not input_feeding else "baseline_if"
+        rows.append((f"table3_step_{name}", round(dt * 1e6, 1), round(tokens / dt, 1), "src_tok/s proxy"))
+    return rows
+
+
+def run():
+    rows, preds = analytic_rows()
+    rows += measured_rows()
+    ok = (
+        1.3 <= preds["data"] <= 2.2
+        and 2.0 <= preds["model"] <= 3.2
+        and preds["data"] < preds["model"] < preds["hybrid"]
+        and preds["hybrid_if"] < preds["hybrid"]
+        and 3.4 <= preds["hybrid"] <= 5.0
+    )
+    rows.append(("table3_ordering_matches_paper", 0.0, int(ok), "1 = data<model<hybridIF<hybrid"))
+    return rows

@@ -1,0 +1,84 @@
+"""End-to-end driver for the paper's experiment: train the ~100M-parameter
+HybridNMT model (Luong attention Seq2Seq, input-feeding removed) on the
+synthetic MT task for a few hundred steps, with dev-perplexity evals and
+the paper's plateau LR decay, then greedy-decode a sample.
+
+The full paper configuration (hidden 1024 x 4 layers, 32k BPE vocab,
+130M params) is the default; --hidden/--vocab/--steps shrink it for quick
+runs.  On a real TPU mesh add --mesh pod --strategy hybrid (or
+--strategy hybrid --pipeline for the wavefront variant).
+
+    PYTHONPATH=src python examples/train_seq2seq.py --steps 300
+    PYTHONPATH=src python examples/train_seq2seq.py --hidden 512 --vocab 8000 --steps 120
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import MTBatchIterator, SyntheticMTTask
+from repro.models import seq2seq as s2s
+from repro.optim import PlateauDecay, adam
+from repro.train import Trainer, perplexity
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--hidden", type=int, default=1024)
+    ap.add_argument("--emb", type=int, default=512)
+    ap.add_argument("--vocab", type=int, default=32000)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--input-feeding", action="store_true")
+    ap.add_argument("--eval-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("seq2seq-rnn"),
+        d_model=args.hidden,
+        emb_size=args.emb,
+        vocab_size=args.vocab,
+        num_layers=args.layers,
+        input_feeding=args.input_feeding,
+        dropout=0.0,  # synthetic task; the paper's 0.3 is for WMT overfitting
+    )
+    params, specs = s2s.init_seq2seq(jax.random.key(0), cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"HybridNMT{'-IF' if cfg.input_feeding else ''}: {n/1e6:.1f}M params "
+          f"(paper: 138M / 142M with IF)")
+
+    task = SyntheticMTTask(vocab_size=cfg.vocab_size, min_len=4, max_len=12)
+    it = MTBatchIterator(task, batch_size=args.batch, buckets=(13,))
+    trainer = Trainer(cfg, adam(lr=args.lr), it, params=params, specs=specs)
+    sched = PlateauDecay()
+
+    t0 = time.time()
+    done = 0
+    while done < args.steps:
+        k = min(args.eval_every, args.steps - done)
+        trainer.run(k, log_every=k)
+        done += k
+        ppl = perplexity(trainer.state.params, cfg, MTBatchIterator(task, args.batch, seed=999, buckets=(13,)), max_batches=2)
+        trainer.lr_scale = sched.observe(ppl)
+        print(f"  [{done}/{args.steps}] dev ppl {ppl:.2f}  lr_scale {trainer.lr_scale:.3f}  ({time.time()-t0:.0f}s)")
+
+    # greedy decode a batch and report token accuracy vs the synthetic reference
+    b = next(MTBatchIterator(task, 16, seed=123, buckets=(13,)))
+    toks = s2s.greedy_decode(
+        trainer.state.params, cfg, jnp.asarray(b["src"]), jnp.asarray(b["src_mask"]),
+        max_len=b["tgt_out"].shape[1], bos=1, eos=2)
+    acc = (np.asarray(toks) == b["tgt_out"])[b["tgt_mask"]].mean()
+    print(f"greedy token accuracy vs reference: {acc:.3f}")
+    print("sample src :", b["src"][0, :12])
+    print("sample ref :", b["tgt_out"][0, :12])
+    print("sample hyp :", np.asarray(toks)[0, :12])
+
+
+if __name__ == "__main__":
+    main()

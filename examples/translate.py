@@ -1,0 +1,39 @@
+"""Seq2Seq MT inference example: greedy translation with the paper's model
+(encoder -> all hidden states -> per-step Luong attention decode).
+
+    PYTHONPATH=src python examples/translate.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import MTBatchIterator, SyntheticMTTask
+from repro.models import seq2seq as s2s
+from repro.optim import adam
+from repro.train import Trainer
+
+
+def main():
+    cfg = dataclasses.replace(get_config("seq2seq-rnn", smoke=True), dropout=0.0)
+    params, specs = s2s.init_seq2seq(jax.random.key(0), cfg)
+    task = SyntheticMTTask(vocab_size=cfg.vocab_size, min_len=4, max_len=8)
+    print("training briefly so translations are non-random ...")
+    tr = Trainer(cfg, adam(lr=3e-3), MTBatchIterator(task, 32, buckets=(9,)), params=params, specs=specs)
+    tr.run(100, log_every=50)
+
+    b = next(MTBatchIterator(task, 4, seed=7, buckets=(9,)))
+    hyp = s2s.greedy_decode(
+        tr.state.params, cfg, jnp.asarray(b["src"]), jnp.asarray(b["src_mask"]),
+        max_len=b["tgt_out"].shape[1], bos=1, eos=2)
+    for i in range(4):
+        print(f"src: {b['src'][i]}")
+        print(f"ref: {b['tgt_out'][i]}")
+        print(f"hyp: {np.asarray(hyp)[i]}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Must precede any jax import (same rule as launch/dryrun.py).
+
+"""Per-op HBM-traffic breakdown of one dry-run: the §Perf microscope.
+
+    PYTHONPATH=src python experiments/diag_hlo.py --arch xlstm-350m \
+        --shape train_4k --mesh pod --strategy hybrid [--variant chunkwise] [-n 30]
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_shape
+from repro.core.strategy import Strategy
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import apply_variant, default_micro
+from repro.launch.inputs import build_lowerable
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None, help="required unless --hlo")
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--strategy", default="hybrid")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--micro", type=int, default=None)
+    ap.add_argument("-n", type=int, default=30)
+    ap.add_argument("--collectives", action="store_true", help="also list collective ops by line")
+    ap.add_argument("--hlo", default=None, help="read a saved .hlo.gz instead of recompiling")
+    args = ap.parse_args()
+
+    cfg, build_kw = apply_variant(get_config(args.arch), args.variant)
+    if args.hlo:
+        import gzip
+
+        with gzip.open(args.hlo, "rt") as f:
+            text = f.read()
+    else:
+        shape = get_shape(args.shape)
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+        micro = args.micro if args.micro is not None else default_micro(args.arch, args.shape, args.mesh)
+        fn, a = build_lowerable(cfg, shape, mesh, Strategy(args.strategy), micro_batches=micro, **build_kw)
+        with jax.set_mesh(mesh):
+            compiled = fn.lower(*a).compile()
+        text = compiled.as_text()
+    fallback = max(cfg.num_layers // cfg.layer_group, 1)
+    stats = hlo_analysis.analyze_hlo(text, fallback_trip=fallback, detail=True)
+    print(f"total bytes/dev: {stats.bytes/2**40:.2f} TiB   flops/dev: {stats.flops/1e12:.2f} T")
+    print(f"collectives: " + ", ".join(f"{k}={v/2**30:.1f}GiB" for k, v in stats.collectives.items()))
+    print("\ntop HBM-traffic ops (bytes x trip multiplier):")
+    for k, v in stats.top(args.n):
+        print(f"  {v/2**30:10.1f} GiB  {k}")
+    if args.collectives:
+        print("\ncollective op lines:")
+        for line in text.splitlines():
+            s = line.strip()
+            if any(f" {c}" in s or s.startswith(c) for c in hlo_analysis.COLLECTIVES) and "=" in s:
+                print("  " + s[:220])
+
+
+if __name__ == "__main__":
+    main()

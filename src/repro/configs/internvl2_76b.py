@@ -1,0 +1,20 @@
+"""InternVL2-76B config [arXiv:2404.16821] — InternViT (STUB frontend) + Llama3-70B-class LM."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    source="arXiv:2404.16821 (InternVL2-Llama3-76B; LM backbone only, ViT is a stub)",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    attn_flat=True,  # KV/G don't divide model=16; H does
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    frontend="vision",
+    frontend_len=256,  # patch embeddings prepended by the stub projector
+    sliding_window=4096,
+)

@@ -1,0 +1,20 @@
+"""Jamba-v0.1 52B config [arXiv:2403.19887] — Mamba:attn 7:1 interleave, MoE 16e top-2 every 2."""
+from repro.configs.base import MambaConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    source="arXiv:2403.19887 (Jamba v0.1)",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    attn_flat=True,  # KV/G don't divide model=16; H does
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    attn_every=8,   # 1 attention layer per 8 (1:7 with mamba)
+    attn_offset=4,
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=14336, every=2, offset=1),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+)

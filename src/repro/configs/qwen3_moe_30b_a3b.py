@@ -1,0 +1,20 @@
+"""Qwen3-MoE 30B-A3B config [hf:Qwen/Qwen3-30B-A3B]."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    source="hf:Qwen/Qwen3-30B-A3B",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    attn_flat=True,  # KV/G don't divide model=16; H does
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=768,  # per-expert FFN width
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=768),
+    sliding_window=4096,
+)

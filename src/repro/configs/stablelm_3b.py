@@ -1,0 +1,18 @@
+"""StableLM-3B config [hf:stabilityai/stablelm-2-1_6b family] — MHA, partial rotary, LayerNorm."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    family="dense",
+    source="hf:stabilityai/stablelm-2-1_6b (assignment: 3B sibling)",
+    num_layers=32,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,  # full MHA
+    head_dim=80,
+    d_ff=6912,
+    vocab_size=50304,
+    partial_rotary=0.25,
+    norm="layernorm",
+    sliding_window=4096,
+)

@@ -1,0 +1,22 @@
+"""Whisper-base config [arXiv:2212.04356] — enc-dec; conv/mel frontend is a STUB."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    source="arXiv:2212.04356 (Whisper base)",
+    num_layers=6,  # decoder layers
+    encoder_layers=6,
+    cross_attention=True,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    learned_pos_emb=True,
+    norm="layernorm",
+    act="gelu",
+    gated_mlp=False,
+    frontend="audio",
+    frontend_len=1500,  # mel frames after the (stubbed) conv feature extractor
+)

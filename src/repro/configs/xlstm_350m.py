@@ -1,0 +1,15 @@
+"""xLSTM-350m config [arXiv:2405.04517] — sLSTM + mLSTM blocks."""
+from repro.configs.base import ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    source="arXiv:2405.04517 (xLSTM ~350M)",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,  # blocks carry their own projections
+    vocab_size=50304,
+    xlstm=XLSTMConfig(slstm_every=4, slstm_offset=3),
+)

@@ -1,0 +1,13 @@
+"""Core of the reproduction: the paper's hybrid data-model parallelism."""
+from repro.core.strategy import (  # noqa: F401
+    HEAD_KEYS,
+    Strategy,
+    all_axes,
+    batch_spec,
+    cache_entry_spec,
+    data_axes,
+    param_shardings,
+    phase_boundary_fn,
+    resolve_specs,
+    state_entry_spec,
+)

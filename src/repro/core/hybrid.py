@@ -1,0 +1,194 @@
+"""Hybrid data-model parallelism: phase accounting and analytic costs.
+
+``strategy.phase_boundary_fn`` implements the mechanism; this module carries
+the *model* of why it wins — the paper's argument made quantitative so the
+benchmarks and EXPERIMENTS.md can report per-strategy communication volumes
+on any mesh (it also reproduces Table 3's qualitative ordering analytically).
+
+Per training step and global batch B, sequence lengths M (src), N (tgt),
+hidden h, params P_backbone / P_head, devices D:
+
+  DATA    grad all-reduce of (P_backbone + P_head) every step
+          -> bytes ≈ 2 * 4 * (P_b + P_h) * (D-1)/D   per device (ring)
+  MODEL   activations hop between stages (pipeline) or psum per layer (TP);
+          no parameter sync.
+  HYBRID  activations hop (backbone) + ONE reshard of the hidden states
+          S,H (B*(M+N)*h values) + grad all-reduce of P_head only.
+
+The paper's observation "4U of 40U parameters in the head" is exactly the
+statement bytes(HYBRID grad sync) ≈ 0.1 * bytes(DATA grad sync).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class CommCost:
+    """Per-step, per-device communication volume in bytes (fp32 grads,
+    activation dtype 2 bytes)."""
+
+    grad_sync: float
+    activation_reshard: float
+    pipeline_hops: float
+
+    @property
+    def total(self) -> float:
+        return self.grad_sync + self.activation_reshard + self.pipeline_hops
+
+
+def seq2seq_param_split(cfg: ModelConfig) -> tuple[int, int]:
+    """(backbone, head) parameter counts for the paper's model."""
+    h, e, v = cfg.d_model, cfg.emb_size, cfg.vocab_size
+    emb = 2 * v * e
+    lstm = lambda in_dim: 4 * h * (in_dim + h + 1)
+    enc = sum(lstm(e if i == 0 else h) for i in range(cfg.num_layers))
+    dec_in0 = e + (h if cfg.input_feeding else 0)
+    dec = sum(lstm(dec_in0 if i == 0 else h) for i in range(cfg.num_layers))
+    head = h * h + 2 * h * h + h * v  # W_alpha + W_c + F_c
+    return emb + enc + dec, head
+
+
+def strategy_comm_cost(
+    cfg: ModelConfig,
+    *,
+    strategy: str,
+    devices: int,
+    batch: int,
+    src_len: int,
+    tgt_len: int,
+    grad_bytes: int = 4,
+    act_bytes: int = 2,
+) -> CommCost:
+    pb, ph = seq2seq_param_split(cfg)
+    h = cfg.d_model
+    ring = 2 * (devices - 1) / devices  # ring all-reduce factor
+    hidden_vals = batch * (src_len + tgt_len) * h
+    hop_vals = batch * (src_len + tgt_len) * h  # one hand-off per stage boundary
+    if strategy == "data":
+        return CommCost(grad_sync=ring * grad_bytes * (pb + ph), activation_reshard=0.0, pipeline_hops=0.0)
+    if strategy == "model":
+        return CommCost(grad_sync=0.0, activation_reshard=0.0, pipeline_hops=act_bytes * hop_vals)
+    if strategy == "hybrid":
+        return CommCost(
+            grad_sync=ring * grad_bytes * ph,
+            activation_reshard=act_bytes * hidden_vals * (devices - 1) / devices,
+            pipeline_hops=act_bytes * hop_vals,
+        )
+    if strategy == "hybrid_opt":
+        # vocab-sharded head: no head grad all-reduce; reshard replaced by
+        # the logits' psum (counted as activation bytes of the lse stats).
+        return CommCost(
+            grad_sync=0.0,
+            activation_reshard=act_bytes * batch * tgt_len * h,
+            pipeline_hops=act_bytes * hop_vals,
+        )
+    raise ValueError(strategy)
+
+
+def _param_groups(cfg: ModelConfig, input_feeding: bool) -> tuple[float, float, float]:
+    """(encoder-side, decoder-side, head) parameter counts.  Embeddings are
+    split onto their side; ``input_feeding`` widens the first decoder layer."""
+    h, e, v = cfg.d_model, cfg.emb_size, cfg.vocab_size
+    lstm = lambda in_dim: 4 * h * (in_dim + h + 1)
+    enc = v * e + sum(lstm(e if i == 0 else h) for i in range(cfg.num_layers))
+    dec_in0 = e + (h if input_feeding else 0)
+    dec = v * e + sum(lstm(dec_in0 if i == 0 else h) for i in range(cfg.num_layers))
+    head = h * h + 2 * h * h + h * v  # W_alpha + W_c + F_c
+    return enc, dec, head
+
+
+def _num_sync_arrays(cfg: ModelConfig) -> int:
+    """Parameter arrays a data-parallel sync must move: (wx, wh, b) per LSTM
+    layer on both sides, two embedding tables, three head matrices."""
+    return 3 * cfg.num_layers * 2 + 2 + 3
+
+
+def scaling_factor_model(
+    cfg: ModelConfig,
+    *,
+    strategy: str,
+    devices: int,
+    batch: int,
+    src_len: int,
+    tgt_len: int,
+    flops_per_sec: float,
+    link_bytes_per_sec: float,
+    input_feeding: bool = False,
+    base_batch: int = 64,
+    batch_half_util: float = 64.0,
+    sync_latency_per_array: float = 0.026,
+) -> float:
+    """Analytic Table-3 scaling factor vs the paper's 1-GPU baseline.
+
+    Throughput ratio (src tokens/s of the D-device config over the 1-device
+    ``base_batch`` run), i.e. ``(batch/base_batch) * t_base / t_strategy``.
+    Three mechanisms, each tied to a paper observation:
+
+    * **Batch-utilization curve** ``rate(B) = flops_per_sec * B/(B+B0)``:
+      per-step kernel-launch overhead and partial GEMM tiles make small
+      per-device batches inefficient.  Multi-GPU configs run ~4x the
+      mini-batch (Table 3 note) — this is where the super-linear
+      4.13-4.20x comes from.
+    * **Per-array sync latency**: 2019-era synchronous data parallelism
+      (MXNet kvstore / OpenNMT-lua) pushes each parameter array to a root
+      device, updates, and broadcasts — per-array round-trip latency
+      dominates the wire time.  ``sync_latency_per_array`` is calibrated
+      once against the paper's own measured data-parallel row (1.60x);
+      both toolkits measure the same, so it is a framework constant, not
+      a NVLink property.  The ring-bandwidth term is kept for the bytes.
+    * **Wavefront bubble** ``(L+D-1)/(L*D)`` for the pipelined stacks;
+      with input-feeding the decoder (and the head chained behind it)
+      cannot wavefront and runs serially (paper Fig. 2) — Table 3's
+      "w/ model parallelism" row IS the input-feeding baseline, so pass
+      ``input_feeding=True`` to reproduce it.
+
+    HYBRID runs the backbone as the wavefront and the head data-parallel
+    on batch shards (lower ``rate(B/D)`` utilization, head-only sync, one
+    activation reshard at link speed) — the paper's §3.2 schedule.
+    """
+    p_enc, p_dec, p_head = _param_groups(cfg, input_feeding)
+    h = cfg.d_model
+    rate = lambda B: flops_per_sec * B / (B + batch_half_util)
+    F = lambda P, B, L: 6.0 * P * B * L  # fwd+bwd flops of group P over B x L tokens
+    ring = 2 * (devices - 1) / devices
+    bubble = lambda L: (L + devices - 1) / (L * devices)
+
+    def sync_t(param_count: float, n_arrays: int) -> float:
+        return ring * 4.0 * param_count / link_bytes_per_sec + n_arrays * sync_latency_per_array
+
+    # the 1-GPU baseline row (batch = base_batch, everything serial)
+    t_base = (
+        F(p_enc, base_batch, src_len) + F(p_dec, base_batch, tgt_len) + F(p_head, base_batch, tgt_len)
+    ) / rate(base_batch)
+
+    f_enc, f_dec, f_head = F(p_enc, batch, src_len), F(p_dec, batch, tgt_len), F(p_head, batch, tgt_len)
+    reshard = 2.0 * batch * (src_len + tgt_len) * h * (devices - 1) / devices / link_bytes_per_sec
+
+    if strategy == "data":
+        Bd = batch / devices
+        t = (F(p_enc, Bd, src_len) + F(p_dec, Bd, tgt_len) + F(p_head, Bd, tgt_len)) / rate(Bd)
+        t += sync_t(p_enc + p_dec + p_head, _num_sync_arrays(cfg))
+    elif strategy == "model":
+        # paper Fig. 2: layers on 3 GPUs, attention-softmax on the 4th, all
+        # wavefronted; input-feeding serializes decoder + head.
+        if input_feeding:
+            t = f_enc * bubble(src_len) / rate(batch) + (f_dec + f_head) / rate(batch)
+        else:
+            t = (f_enc * bubble(src_len) + (f_dec + f_head) * bubble(tgt_len)) / rate(batch)
+    elif strategy in ("hybrid", "hybrid_opt"):
+        Bd = batch / devices
+        if input_feeding:  # HybridNMTIF: decoder serial, head data-parallel per step
+            t_bb = f_enc * bubble(src_len) / rate(batch) + f_dec / rate(batch)
+        else:  # HybridNMT: full wavefront backbone
+            t_bb = (f_enc * bubble(src_len) + f_dec * bubble(tgt_len)) / rate(batch)
+        if strategy == "hybrid":
+            t_head = F(p_head, Bd, tgt_len) / rate(Bd)
+            t = t_bb + t_head + sync_t(p_head, 3) + reshard
+        else:  # beyond-paper: vocab-sharded head — no head sync, full-batch GEMMs
+            t = t_bb + f_head / devices / rate(batch) + reshard / 2
+    else:
+        raise ValueError(strategy)
+    return (batch / base_batch) * t_base / t

@@ -1,0 +1,181 @@
+"""Wavefront (systolic) pipeline parallelism for stacked LSTMs — the
+paper's model parallelism, faithfully.
+
+The paper places each LSTM layer on its own GPU (Fig. 2/3); node (layer l,
+time t) starts as soon as (l-1, t) and (l, t-1) finish, so the stack fills a
+diagonal wavefront.  On TPU we realize the same schedule with ``shard_map``
+over the ``model`` mesh axis: stage s owns layers [s*Lp, (s+1)*Lp); a
+``lax.scan`` over TT = S + NS - 1 clock ticks runs every stage in lockstep,
+and a ``ppermute`` hands the stage-top hidden state to the next stage each
+tick.  At tick τ stage s computes its layers for timestep t = τ - s (idle
+ticks are masked — the pipeline bubble is (NS-1)/TT, which the roofline's
+compute term exposes honestly).
+
+Removing input-feeding is precisely what makes the *decoder* runnable
+through this pipeline (the paper's §3.2): with input-feeding the first layer
+at t+1 needs the attention output at t, which lives after the last layer —
+the wavefront collapses to serial execution.  ``forward_input_feeding``
+therefore never uses this module.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def stack_pipeline_params(layer_params: List[dict], num_stages: int):
+    """[{wx [in,4,H], wh [H,4,H], b [4,H]}] * L  ->  stacked trees with
+    leading [NS, Lp] dims.  Layer-0's input rows are zero-padded up to the
+    hidden size so all layers share one wx shape (the padded input slots
+    carry zeros at runtime)."""
+    L = len(layer_params)
+    if L % num_stages:
+        raise ValueError(f"{L} layers cannot split into {num_stages} stages")
+    hidden = layer_params[0]["wh"].shape[0]
+    in_max = max(p["wx"].shape[0] for p in layer_params)
+    assert in_max <= hidden + hidden, "pipeline assumes in_dim <= 2*hidden"
+
+    def padded_wx(p):
+        wx = p["wx"]
+        pad = in_max - wx.shape[0]
+        return jnp.pad(wx, ((0, pad), (0, 0), (0, 0))) if pad else wx
+
+    wx = jnp.stack([padded_wx(p) for p in layer_params]).reshape(num_stages, L // num_stages, in_max, 4, hidden)
+    wh = jnp.stack([p["wh"] for p in layer_params]).reshape(num_stages, L // num_stages, hidden, 4, hidden)
+    b = jnp.stack([p["b"] for p in layer_params]).reshape(num_stages, L // num_stages, 4, hidden)
+    return {"wx": wx, "wh": wh, "b": b}, in_max
+
+
+def pipeline_lstm(
+    mesh: Mesh,
+    stacked,
+    x: jax.Array,
+    *,
+    in_dim: int,
+    model_axis: str = "model",
+):
+    """Run a stacked LSTM over ``x`` [B, S, in_dim] in wavefront order.
+
+    ``stacked``: output of :func:`stack_pipeline_params` (leading [NS, Lp]).
+    Returns hidden states of the top layer, [B, S, H].
+    """
+    num_stages = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
+    batch_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    B, S, _ = x.shape
+    hidden = stacked["wh"].shape[2]
+    in_max = stacked["wx"].shape[2]
+    if in_dim < in_max:  # zero-pad the embedded inputs to the padded wx rows
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, in_max - in_dim)))
+    TT = S + num_stages - 1
+
+    def stage_fn(w, xloc):
+        wx, wh, b = w["wx"][0], w["wh"][0], w["b"][0]  # [Lp, in_max, 4, H], [Lp, H, 4, H], [Lp, 4, H]
+        Lp = wx.shape[0]
+        stage = jax.lax.axis_index(model_axis)
+        B_loc = xloc.shape[0]
+        dt = xloc.dtype
+        perm = [(i, i + 1) for i in range(num_stages - 1)]
+
+        def cell(l, x_in, h_prev, c_prev):
+            # x_in [B, K] where K = in_max (l==0) or hidden; pad to in_max
+            if x_in.shape[-1] < in_max:
+                x_in = jnp.pad(x_in, ((0, 0), (0, in_max - x_in.shape[-1])))
+            gates = (
+                jnp.einsum("bi,igh->bgh", x_in, wx[l].astype(dt))
+                + jnp.einsum("bj,jgh->bgh", h_prev.astype(dt), wh[l].astype(dt))
+                + b[l].astype(dt)
+            ).astype(jnp.float32)
+            i, f, g, o = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+            c = jax.nn.sigmoid(f) * c_prev + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return h, c
+
+        def tick(carry, tau):
+            h, c, left = carry  # h,c [Lp, B, H] fp32; left [B, H] from prev stage
+            t = tau - stage
+            valid = ((t >= 0) & (t < S))[None, None]
+            tc = jnp.clip(t, 0, S - 1)
+            x_t = jax.lax.dynamic_index_in_dim(xloc, tc, axis=1, keepdims=False)
+            # stage 0 layer 0 input: the embedded token; other stages: handoff
+            first_in = jnp.where(stage == 0, x_t, jnp.pad(left, ((0, 0), (0, in_max - hidden))))
+            cur = first_in
+            hs, cs = [], []
+            for l in range(Lp):
+                hl, cl = cell(l, cur, h[l], c[l])
+                hl = jnp.where(valid, hl, h[l])
+                cl = jnp.where(valid, cl, c[l])
+                hs.append(hl)
+                cs.append(cl)
+                cur = hl.astype(dt)
+            top = cur  # [B, H] this stage's output at tick tau
+            nxt_left = jax.lax.ppermute(top, model_axis, perm)
+            return (jnp.stack(hs), jnp.stack(cs), nxt_left), top
+
+        vary = lambda a: jax.lax.pcast(a, tuple(mesh.axis_names), to="varying")
+        h0 = vary(jnp.zeros((Lp, B_loc, hidden), jnp.float32))
+        c0 = vary(jnp.zeros((Lp, B_loc, hidden), jnp.float32))
+        left0 = vary(jnp.zeros((B_loc, hidden), dt))
+        _, tops = jax.lax.scan(tick, (h0, c0, left0), jnp.arange(TT))
+        return tops  # [TT, B_loc, H]
+
+    in_specs = (
+        jax.tree.map(lambda _: P(model_axis), stacked),
+        P(batch_axes if batch_axes else None, None, None),
+    )
+    out_specs = P(model_axis, batch_axes if batch_axes else None, None)
+    tops = jax.shard_map(stage_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)(stacked, x)
+    # tops: [NS*TT, B, H]; the last stage's outputs for t in [0, S) sit at
+    # rows (NS-1)*TT + (NS-1) + t.
+    start = (num_stages - 1) * TT + (num_stages - 1)
+    hs = jax.lax.dynamic_slice_in_dim(tops, start, S, axis=0)  # [S, B, H]
+    return hs.swapaxes(0, 1)
+
+
+def batch_shard_backbone(mesh: Mesh, batch_axes: tuple, dropout: float = 0.0):
+    """Beyond-paper backbone (§Perf pair 3): run the stacked LSTMs inside a
+    shard_map with the batch over ``batch_axes`` and parameters replicated.
+
+    Under pjit, the scan backward all-reduces every LSTM weight grad each
+    timestep (sum-of-psums over the batch shards; GSPMD cannot reassociate
+    across the loop) — 2048 steps x 8 layers of ARs for the paper model.
+    Inside shard_map the replicated params transpose to ONE boundary psum
+    each: psum-of-sum, identical value, ~100x less collective traffic."""
+    from repro.models import lstm as lstm_mod
+
+    def run(layer_params, xs, rng):
+        B = xs.shape[0]
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dsz = 1
+        for a in batch_axes:
+            dsz *= sizes[a]
+        if not batch_axes or B % dsz:
+            return lstm_mod.run_stacked_lstm(layer_params, xs, dropout_rng=rng, dropout=dropout)[0]
+        pspec = jax.tree.map(lambda _: P(), layer_params)
+        xspec = P(batch_axes, None, None)
+
+        def body(pl, xl):
+            r = rng
+            if r is not None:  # distinct dropout masks per batch shard
+                for a in batch_axes:
+                    r = jax.random.fold_in(r, jax.lax.axis_index(a))
+            return lstm_mod.run_stacked_lstm(pl, xl, dropout_rng=r, dropout=dropout)[0]
+
+        return jax.shard_map(body, mesh=mesh, in_specs=(pspec, xspec), out_specs=xspec, check_vma=False)(layer_params, xs)
+
+    return run
+
+
+def pipeline_backbone(mesh: Mesh, model_axis: str = "model"):
+    """Adapter for ``seq2seq.forward_no_input_feeding(backbone=...)``: runs
+    the stacked-LSTM encoder/decoder through the wavefront pipeline."""
+
+    def run(layer_params, xs, rng):  # rng unused: no dropout inside the pipeline
+        del rng
+        stacked, in_max = stack_pipeline_params(layer_params, dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis])
+        return pipeline_lstm(mesh, stacked, xs, in_dim=xs.shape[-1], model_axis=model_axis)
+
+    return run

@@ -1,0 +1,286 @@
+"""Parallelization strategies: logical-axis -> mesh PartitionSpec resolution.
+
+The paper's three training configurations (plus ours) map to:
+
+========== =============================================================
+SINGLE     one device (smoke tests / CPU examples)
+DATA       paper §2.1: every parameter replicated, batch sharded over
+           ALL mesh axes, grads all-reduced by GSPMD at the jit boundary.
+MODEL      paper §2.2 idiomatically on TPU: tensor-parallel backbone over
+           the ``model`` axis (no parameter sync; activations move),
+           batch over ``(pod, data)``.  The faithful layer-pipelined
+           variant for stacked RNNs lives in ``core/pipeline.py``.
+HYBRID     the paper's contribution (§3.2): backbone exactly as MODEL,
+           but the attention-softmax head parameters are REPLICATED and
+           the head runs data-parallel on batch shards spread over ALL
+           axes.  ``phase_boundary`` performs the reshard in between —
+           the paper's "intermediate results ... distributed equally".
+HYBRID_OPT beyond-paper: backbone as MODEL, head vocab-sharded instead
+           of replicated (the paper's small-head assumption breaks at
+           150k vocabularies), remaining large parameter dims
+           FSDP-sharded over ``data`` (ZeRO-3 style).
+========== =============================================================
+
+Resolution is *shape-aware*: a logical axis is only mapped to a mesh axis if
+the dimension is divisible by the axis size; otherwise that dim stays
+replicated.  This is what lets one model definition serve every assigned
+architecture on the fixed (16, 16) / (2, 16, 16) production meshes (e.g.
+qwen2-7b's 28 heads cannot shard 16 ways -> its attention runs
+batch-parallel, which the roofline table then shows honestly).
+"""
+from __future__ import annotations
+
+import enum
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class Strategy(str, enum.Enum):
+    SINGLE = "single"
+    DATA = "data"
+    MODEL = "model"
+    HYBRID = "hybrid"
+    HYBRID_OPT = "hybrid_opt"
+
+
+# Logical names that may be sharded over the `model` axis, in priority order:
+# if several dims of one parameter are eligible, the first divisible one
+# wins and the rest stay replicated (one mesh axis shards at most one dim).
+MODEL_AXIS_PRIORITY = (
+    "expert",
+    "vocab",
+    "kv_heads",
+    "q_groups",
+    "ff",
+    "qdim",
+    "kvdim",
+    "hdv",
+    "heads",
+)
+# Dims eligible for FSDP over `data` in HYBRID_OPT (weight-matrix dims).
+FSDP_ELIGIBLE = ("embed", "ff", "vocab", "qdim", "kvdim")
+
+HEAD_KEYS = ("head", "lm_head", "final_norm")  # the attention-softmax part
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def all_axes(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def batch_spec(strategy: Strategy, mesh: Optional[Mesh]) -> P:
+    """PartitionSpec axis set for the batch dimension of inputs."""
+    if mesh is None or strategy == Strategy.SINGLE:
+        return P()
+    if strategy == Strategy.DATA:
+        return P(all_axes(mesh))
+    return P(data_axes(mesh))
+
+
+# ---------------------------------------------------------------------------
+# leaf resolution
+# ---------------------------------------------------------------------------
+
+
+def _resolve_leaf(spec: tuple, shape: tuple, mesh: Mesh, shard_model: bool, fsdp: bool) -> P:
+    assigned = [None] * len(shape)
+    used = set()
+    if spec is None:
+        spec = (None,) * len(shape)
+    if shard_model:
+        for name in MODEL_AXIS_PRIORITY:
+            if "model" in used:
+                break
+            for i, s in enumerate(spec):
+                if s == name and assigned[i] is None and "model" not in used:
+                    if shape[i] % _axis_size(mesh, "model") == 0:
+                        assigned[i] = "model"
+                        used.add("model")
+    if fsdp and "data" in mesh.axis_names:
+        # FSDP over every batch axis (pod included) — otherwise the pod
+        # axis replicates the optimizer state and 235B does not fit.
+        daxes = data_axes(mesh)
+        dsz = 1
+        for a in daxes:
+            dsz *= _axis_size(mesh, a)
+        cands = [
+            (shape[i], i)
+            for i, s in enumerate(spec)
+            if s in FSDP_ELIGIBLE and assigned[i] is None and shape[i] % dsz == 0 and shape[i] >= 1024
+        ]
+        if cands:
+            _, i = max(cands)
+            assigned[i] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*assigned)
+
+
+def _is_spec_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(s is None or isinstance(s, str) for s in x)
+
+
+def resolve_specs(
+    specs: Any,
+    shapes: Any,
+    mesh: Optional[Mesh],
+    strategy: Strategy,
+    *,
+    is_head: bool = False,
+) -> Any:
+    """Map a logical-axis spec tree (+ matching shape tree) to PartitionSpecs."""
+    if mesh is None or strategy == Strategy.SINGLE:
+        return jax.tree.map(lambda s: P(), specs, is_leaf=_is_spec_leaf)
+    if strategy == Strategy.DATA:
+        shard_model, fsdp = False, False
+    elif strategy == Strategy.MODEL:
+        shard_model, fsdp = True, False
+    elif strategy == Strategy.HYBRID:
+        # head replicated (paper); backbone model-sharded
+        shard_model, fsdp = (not is_head), False
+    else:  # HYBRID_OPT
+        shard_model, fsdp = True, True
+
+    def leaf(spec, shaped):
+        shape = shaped.shape if hasattr(shaped, "shape") else tuple(shaped)
+        return _resolve_leaf(spec, shape, mesh, shard_model, fsdp)
+
+    return jax.tree.map(leaf, specs, shapes, is_leaf=_is_spec_leaf)
+
+
+def param_shardings(specs: Any, shapes: Any, mesh: Optional[Mesh], strategy: Strategy) -> Any:
+    """Resolve the full parameter tree; top-level keys in HEAD_KEYS get the
+    head treatment (the paper's data-parallel attention-softmax part)."""
+    if mesh is None or strategy == Strategy.SINGLE:
+        return jax.tree.map(lambda s: None if mesh is None else NamedSharding(mesh, P()), specs, is_leaf=_is_spec_leaf)
+    out = {}
+    for key, sub in specs.items():
+        ps = resolve_specs(sub, shapes[key], mesh, strategy, is_head=key in HEAD_KEYS)
+        out[key] = jax.tree.map(lambda p: NamedSharding(mesh, p), ps, is_leaf=lambda x: isinstance(x, P))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the paper's phase boundary
+# ---------------------------------------------------------------------------
+
+
+def phase_boundary_fn(strategy: Strategy, mesh: Optional[Mesh]):
+    """Returns the reshard callback applied to backbone outputs (S, H for the
+    seq2seq model; the final hidden states for LMs) before the
+    attention-softmax phase.
+
+    HYBRID: batch goes from (pod, data) shards to shards over *all* axes —
+    the model-parallel devices become data-parallel replicas, which is the
+    paper's hand-off realized as one GSPMD resharding collective.
+    """
+    if mesh is None or strategy in (Strategy.SINGLE, Strategy.DATA, Strategy.MODEL):
+        return lambda x: x
+    if strategy == Strategy.HYBRID:
+        axes = all_axes(mesh)
+
+        def reshard(x):
+            spec = P(axes, *(None,) * (x.ndim - 1))
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+        return reshard
+    # HYBRID_OPT: no batch reshard; keep (pod, data) batch sharding explicit
+    daxes = data_axes(mesh)
+
+    def constrain(x):
+        spec = P(daxes, *(None,) * (x.ndim - 1))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def residual_pin(strategy: Strategy, mesh: Optional[Mesh]):
+    """Sharding constraints for activations inside the layer scan (§Perf
+    pair 2: without these GSPMD can "involuntarily fully rematerialize" —
+    replicate — hidden states inside the while body, which costs TBs of HBM
+    traffic and a collective-permute storm at 32k sequence lengths).
+
+    The returned callable pins by rank:
+      3D [B, S, d]         -> (batch_axes, None, None)        residual stream
+      4D [B, S, KV, D]     -> (batch_axes, None, model?, None)   k/v
+      5D [B, S, KV, G, D]  -> (batch_axes, None, kv?, g?, None)  grouped q/o
+    where model-axis placements mirror the strategy resolver (divisibility-
+    gated, kv_heads before q_groups, never under DATA)."""
+    if mesh is None or strategy == Strategy.SINGLE:
+        return None
+    shard_model = strategy != Strategy.DATA
+    axes = all_axes(mesh) if strategy == Strategy.DATA else data_axes(mesh)
+    if not axes:
+        return None
+    msz = _axis_size(mesh, "model") if "model" in mesh.axis_names else 0
+
+    def pin(x, last=None):
+        if last is not None:  # e.g. MLP hidden [B, S, ff] with ff on `model`
+            last_ax = "model" if shard_model and msz and x.shape[-1] % msz == 0 else None
+            spec = P(axes, *(None,) * (x.ndim - 2), last_ax)
+        elif x.ndim == 3:
+            spec = P(axes, None, None)
+        elif x.ndim == 4 and msz:
+            kv_ax = "model" if shard_model and x.shape[2] % msz == 0 else None
+            spec = P(axes, None, kv_ax, None)
+        elif x.ndim == 5 and msz:
+            kv_ax = "model" if shard_model and x.shape[2] % msz == 0 else None
+            g_ax = "model" if shard_model and not kv_ax and x.shape[3] % msz == 0 else None
+            spec = P(axes, None, kv_ax, g_ax, None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return pin
+
+
+# ---------------------------------------------------------------------------
+# serve-side cache sharding
+# ---------------------------------------------------------------------------
+
+
+def cache_entry_spec(shape: tuple, mesh: Mesh, kv_heads: int) -> P:
+    """Sharding for a stacked KV cache entry [G, B, C, KV, D]: batch over
+    data axes; KV heads over `model` when divisible, else the cache
+    *sequence* dim goes over `model` (sequence-parallel decode: GSPMD
+    reduces the sharded softmax with small stat collectives instead of
+    gathering the cache)."""
+    daxes = data_axes(mesh)
+    msz = _axis_size(mesh, "model")
+    G, B, C, KV, D = shape
+    kv_ax = "model" if KV % msz == 0 else None
+    seq_ax = None if kv_ax else ("model" if C % msz == 0 else None)
+    bax = daxes if B % _prod(mesh, daxes) == 0 else None
+    return P(None, bax, seq_ax, kv_ax, None)
+
+
+def _prod(mesh: Mesh, axes: tuple) -> int:
+    n = 1
+    for a in axes:
+        n *= _axis_size(mesh, a)
+    return n
+
+
+def state_entry_spec(shape: tuple, mesh: Mesh) -> P:
+    """Recurrent state [G, B, ...]: batch over data axes, largest inner dim
+    over model when divisible."""
+    daxes = data_axes(mesh)
+    msz = _axis_size(mesh, "model")
+    bax = daxes if shape[1] % _prod(mesh, daxes) == 0 else None
+    inner = [None] * (len(shape) - 2)
+    if inner:
+        order = sorted(range(len(inner)), key=lambda i: -shape[2 + i])
+        for i in order:
+            if shape[2 + i] % msz == 0 and shape[2 + i] >= msz:
+                inner[i] = "model"
+                break
+    return P(None, bax, *inner)

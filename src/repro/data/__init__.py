@@ -1,0 +1,8 @@
+"""Data pipeline: synthetic corpora, tokenization, bucketing, batching."""
+from repro.data.pipeline import (  # noqa: F401
+    LMBatchIterator,
+    MTBatchIterator,
+    SyntheticLMTask,
+    SyntheticMTTask,
+    pad_to,
+)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel subpackage provides:
+  kernel.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py     jit'd public wrapper (layout adaptation, padding, interpret switch)
+  ref.py     pure-jnp oracle used by the allclose tests
+
+The container is CPU-only: kernels are validated with ``interpret=True``
+(kernel body executed in Python); the BlockSpecs are written for TPU v5e
+VMEM (~16 MB/core) and MXU tile alignment (multiples of 128).
+"""
+import os
+
+INTERPRET = os.environ.get("REPRO_PALLAS_FORCE_TPU", "") != "1"  # CPU container default

@@ -1,0 +1,23 @@
+"""Public wrapper: grouped-layout adaptation for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=512, block_kv=512, interpret=None):
+    """Model-layout entry point: q [B,S,KV,G,D], k/v [B,T,KV,D] ->
+    [B,S,KV,G,D] (same contract as models/attention.attend)."""
+    if interpret is None:
+        interpret = kernels.INTERPRET
+    B, S, KV, G, D = q.shape
+    T = k.shape[1]
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * KV * G, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+    of = flash_attention_pallas(
+        qf, kf, vf, causal=causal, window=window, block_q=block_q, block_kv=block_kv, group=G, interpret=interpret
+    )
+    return of.reshape(B, KV, G, S, D).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,17 @@
+"""Oracle: dense_attention from models/attention.py, adapted to the kernel layout."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import dense_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, group=1):
+    """q [BH, S, D], k/v [BKV, T, D] -> [BH, S, D]."""
+    BH, S, D = q.shape
+    BKV, T, _ = k.shape
+    B = BKV  # treat kv rows as (batch*kv_heads); groups expand q
+    qg = q.reshape(B, group, S, D).transpose(0, 2, 1, 3)[:, :, None]  # [B, S, 1, G, D]
+    kk = k[:, :, None]  # [B, T, 1, D] -> KV dim 1
+    out = dense_attention(qg, kk, v[:, :, None], causal=causal, window=window)
+    return out[:, :, 0].transpose(0, 2, 1, 3).reshape(BH, S, D)

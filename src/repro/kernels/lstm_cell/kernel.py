@@ -1,0 +1,87 @@
+"""Fused LSTM cell kernel (the paper's backbone hot-spot).
+
+One kernel invocation computes, for a (batch-block, hidden-block) tile:
+
+    gates = x @ Wx + h @ Wh + b          (two MXU GEMMs)
+    c'    = σ(f)·c + σ(i)·tanh(g)        (VPU elementwise)
+    h'    = σ(o)·tanh(c')
+
+fusing the gate GEMMs with the state update so gates never round-trip to
+HBM (the MXNet/cuDNN baseline in the paper materializes them).  Weights are
+kept in the [in, 4, H] layout of ``models/lstm.py`` so the i/f/g/o split is
+a static index, and the hidden dim H is the tiled/sharded axis.
+
+VMEM per (Bb=256, Hb=256) tile at fp32, paper dims (in=1024, H=1024):
+  x 1.0MB + h 1.0MB + wx 4.2MB + wh 4.2MB + gates 1.0MB  ≈ 11.5 MB < 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out_ref, c_out_ref):
+    x = x_ref[...].astype(jnp.float32)  # [Bb, In]
+    h = h_ref[...].astype(jnp.float32)  # [Bb, H]
+    c = c_ref[...].astype(jnp.float32)  # [Bb, Hb]
+    In = x.shape[1]
+    H = h.shape[1]
+    Hb = c.shape[1]
+    wx = wx_ref[...].reshape(In, 4 * Hb).astype(jnp.float32)
+    wh = wh_ref[...].reshape(H, 4 * Hb).astype(jnp.float32)
+    b = b_ref[...].reshape(4 * Hb).astype(jnp.float32)
+    gates = jnp.dot(x, wx, preferred_element_type=jnp.float32)
+    gates += jnp.dot(h, wh, preferred_element_type=jnp.float32)
+    gates = (gates + b).reshape(x.shape[0], 4, Hb)
+    i, f, g, o = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_h", "interpret"))
+def lstm_cell_pallas(
+    x: jax.Array,  # [B, In]
+    h: jax.Array,  # [B, H]
+    c: jax.Array,  # [B, H]
+    wx: jax.Array,  # [In, 4, H]
+    wh: jax.Array,  # [H, 4, H]
+    b: jax.Array,  # [4, H]
+    *,
+    block_b: int = 256,
+    block_h: int = 256,
+    interpret: bool = False,
+):
+    B, In = x.shape
+    H = h.shape[1]
+    bb, bh = min(block_b, B), min(block_h, H)
+    if B % bb or H % bh:
+        raise ValueError(f"B={B}, H={H} must divide blocks ({bb},{bh})")
+    grid = (B // bb, H // bh)
+    out_shape = (
+        jax.ShapeDtypeStruct((B, H), h.dtype),
+        jax.ShapeDtypeStruct((B, H), c.dtype),
+    )
+    h_new, c_new = pl.pallas_call(
+        _lstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, In), lambda i, j: (i, 0)),  # x: full input row block
+            pl.BlockSpec((bb, H), lambda i, j: (i, 0)),  # h: full hidden row block
+            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),  # c tile
+            pl.BlockSpec((In, 4, bh), lambda i, j: (0, 0, j)),  # wx column tile
+            pl.BlockSpec((H, 4, bh), lambda i, j: (0, 0, j)),  # wh column tile
+            pl.BlockSpec((4, bh), lambda i, j: (0, j)),  # bias tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, h, c, wx, wh, b)
+    return h_new, c_new

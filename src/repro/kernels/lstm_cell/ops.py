@@ -1,0 +1,18 @@
+"""Public wrapper for the fused LSTM cell."""
+from __future__ import annotations
+
+import jax
+
+from repro import kernels
+from repro.kernels.lstm_cell.kernel import lstm_cell_pallas
+
+
+def lstm_cell_fused(x, h, c, wx, wh, b, *, block_b: int = 256, block_h: int = 256, interpret: bool | None = None):
+    """Drop-in replacement for the models/lstm.py cell math.
+
+    x [B, In], h/c [B, H], wx [In, 4, H], wh [H, 4, H], b [4, H] ->
+    (h', c').  Blocks clamp to the array sizes; B and H must divide them.
+    """
+    if interpret is None:
+        interpret = kernels.INTERPRET
+    return lstm_cell_pallas(x, h, c, wx, wh, b, block_b=block_b, block_h=block_h, interpret=interpret)

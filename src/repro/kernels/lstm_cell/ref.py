@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused LSTM cell (same math as models/lstm.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    gates = (
+        jnp.einsum("bi,igh->bgh", x.astype(jnp.float32), wx.astype(jnp.float32))
+        + jnp.einsum("bj,jgh->bgh", h.astype(jnp.float32), wh.astype(jnp.float32))
+        + b.astype(jnp.float32)
+    )
+    i, f, g, o = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+    c_new = jax.nn.sigmoid(f) * c.astype(jnp.float32) + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new.astype(h.dtype), c_new.astype(c.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.luong_attn.ops import luong_attention_fused  # noqa: F401

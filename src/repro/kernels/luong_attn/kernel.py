@@ -1,0 +1,80 @@
+"""Fused Luong global-attention head (paper eq. 1-4).
+
+For a block of decoder positions the kernel fuses:
+
+    scores = (H W_a) S^T        -> masked, fp32 softmax   (eq. 1-2)
+    C      = alpha S            (eq. 3)
+    Hc     = tanh(H W_ch + C W_cc)                        (eq. 4)
+
+W_c is pre-split into its H-half and C-half (W_c = [W_ch; W_cc]) so no
+concat buffer is materialized; scores/probs live only in VMEM.  This is the
+whole data-parallel phase of the paper's hybrid scheme minus the vocab
+GEMM (eq. 5 stays a plain XLA matmul — it is a pure GEMM already).
+
+Grid: (batch, decoder-position blocks).  The encoder block (S, mask) is
+loaded whole per batch element: MT source lengths (M ≤ 128) at h=1024 are
+M*h*4 ≈ 0.5 MB — far under VMEM; long-M variants would add an M grid dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _luong_kernel(h_ref, s_ref, mask_ref, wa_ref, wch_ref, wcc_ref, out_ref):
+    hb = h_ref[0].astype(jnp.float32)  # [Nb, h]
+    s = s_ref[0].astype(jnp.float32)  # [M, h]
+    mask = mask_ref[0]  # [M] bool/int
+    wa = wa_ref[...].astype(jnp.float32)  # [h, h]
+    scores = jnp.dot(jnp.dot(hb, wa, preferred_element_type=jnp.float32), s.T)  # [Nb, M]
+    scores = jnp.where(mask[None, :] != 0, scores, NEG_INF)
+    m = scores.max(axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / e.sum(axis=-1, keepdims=True)
+    ctx = jnp.dot(probs, s, preferred_element_type=jnp.float32)  # [Nb, h]
+    hc = jnp.tanh(
+        jnp.dot(hb, wch_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32)
+        + jnp.dot(ctx, wcc_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32)
+    )
+    out_ref[0] = hc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def luong_attention_pallas(
+    H: jax.Array,  # [B, N, h] decoder hidden states
+    S: jax.Array,  # [B, M, h] encoder hidden states
+    src_mask: jax.Array,  # [B, M]
+    w_alpha: jax.Array,  # [h, h]
+    w_ch: jax.Array,  # [h, h]  (top half of the paper's W_c)
+    w_cc: jax.Array,  # [h, h]  (bottom half)
+    *,
+    block_n: int = 128,
+    interpret: bool = False,
+):
+    B, N, h = H.shape
+    M = S.shape[1]
+    bn = min(block_n, N)
+    if N % bn:
+        raise ValueError(f"N={N} must divide block_n={bn}")
+    grid = (B, N // bn)
+    out = pl.pallas_call(
+        _luong_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, h), lambda b, n: (b, n, 0)),
+            pl.BlockSpec((1, M, h), lambda b, n: (b, 0, 0)),
+            pl.BlockSpec((1, M), lambda b, n: (b, 0)),
+            pl.BlockSpec((h, h), lambda b, n: (0, 0)),
+            pl.BlockSpec((h, h), lambda b, n: (0, 0)),
+            pl.BlockSpec((h, h), lambda b, n: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, h), lambda b, n: (b, n, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N, h), H.dtype),
+        interpret=interpret,
+    )(H, S, src_mask.astype(jnp.int32), w_alpha, w_ch, w_cc)
+    return out

@@ -1,0 +1,17 @@
+"""Public wrapper for the fused Luong attention head."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.kernels.luong_attn.kernel import luong_attention_pallas
+
+
+def luong_attention_fused(H, S, src_mask, w_alpha, w_c, *, block_n: int = 128, interpret: bool | None = None):
+    """H [B,N,h], S [B,M,h], src_mask [B,M], w_alpha [h,h], w_c [2h,h]
+    (the paper's layout: tanh(W_c [H; C])) -> Hc [B,N,h]."""
+    if interpret is None:
+        interpret = kernels.INTERPRET
+    h = H.shape[-1]
+    w_ch, w_cc = w_c[:h], w_c[h:]
+    return luong_attention_pallas(H, S, src_mask, w_alpha, w_ch, w_cc, block_n=block_n, interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: the attention-softmax head of models/seq2seq.py (eq. 1-4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def luong_attention_ref(H, S, src_mask, w_alpha, w_ch, w_cc):
+    Hf = H.astype(jnp.float32)
+    Sf = S.astype(jnp.float32)
+    scores = jnp.einsum("bnh,hk,bmk->bnm", Hf, w_alpha.astype(jnp.float32), Sf)
+    scores = jnp.where(src_mask[:, None, :], scores, -1e30)
+    alpha = jax.nn.softmax(scores, axis=-1)
+    C = jnp.einsum("bnm,bmh->bnh", alpha, Sf)
+    hc = jnp.tanh(Hf @ w_ch.astype(jnp.float32) + C @ w_cc.astype(jnp.float32))
+    return hc.astype(H.dtype)

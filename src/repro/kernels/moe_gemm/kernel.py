@@ -1,0 +1,69 @@
+"""Grouped expert GEMM: the MoE dispatch buffer through each expert's gated
+FFN,  out[e] = (silu(x[e] @ w1[e]) * (x[e] @ wg[e])) @ w2[e].
+
+Grid: (experts, capacity-blocks, ff-blocks).  The ff dimension is blocked so
+per-expert weights never exceed VMEM (qwen3-235b: d=4096, f_expert=1536 ->
+full w1+wg+w2 at bf16 is 37 MB; with block_f=512 it is 12.6 MB).  The ff
+axis is the *innermost* grid dim and the output block index ignores it, so
+Pallas keeps the [Cb, d] output tile resident in VMEM and the kernel
+accumulates partial f-contributions into it across iterations — the gated
+nonlinearity is applied per f-block, which is exact (silu/elementwise acts
+pointwise on the f axis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_kernel(x_ref, w1_ref, wg_ref, w2_ref, o_ref):
+    fi = pl.program_id(2)
+    x = x_ref[0].astype(jnp.float32)  # [Cb, d]
+    w1 = w1_ref[0].astype(jnp.float32)  # [d, Fb]
+    wg = wg_ref[0].astype(jnp.float32)
+    w2 = w2_ref[0].astype(jnp.float32)  # [Fb, d]
+    h = jax.nn.silu(jnp.dot(x, w1, preferred_element_type=jnp.float32))
+    h = h * jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    part = jnp.dot(h, w2, preferred_element_type=jnp.float32)
+
+    @pl.when(fi == 0)
+    def _init():
+        o_ref[0] = part.astype(o_ref.dtype)
+
+    @pl.when(fi != 0)
+    def _acc():
+        o_ref[0] = (o_ref[0].astype(jnp.float32) + part).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "interpret"))
+def moe_gemm_pallas(
+    x: jax.Array,  # [E, C, d] dispatch buffer
+    w1: jax.Array,  # [E, d, F]
+    wg: jax.Array,  # [E, d, F]
+    w2: jax.Array,  # [E, F, d]
+    *,
+    block_c: int = 512,
+    block_f: int = 512,
+    interpret: bool = False,
+):
+    E, C, d = x.shape
+    F = w1.shape[2]
+    bc, bf = min(block_c, C), min(block_f, F)
+    if C % bc or F % bf:
+        raise ValueError(f"C={C}, F={F} must divide blocks ({bc},{bf})")
+    return pl.pallas_call(
+        _moe_kernel,
+        grid=(E, C // bc, F // bf),
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e, c, f: (e, c, 0)),
+            pl.BlockSpec((1, d, bf), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, d, bf), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, bf, d), lambda e, c, f: (e, f, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, c, f: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, wg, w2)

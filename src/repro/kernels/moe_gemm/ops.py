@@ -1,0 +1,12 @@
+"""Public wrapper for the grouped expert GEMM."""
+from __future__ import annotations
+
+from repro import kernels
+from repro.kernels.moe_gemm.kernel import moe_gemm_pallas
+
+
+def moe_gemm_fused(x, w1, wg, w2, *, block_c: int = 512, block_f: int = 512, interpret: bool | None = None):
+    """x [E,C,d] dispatch buffer -> [E,C,d] through each expert's gated FFN."""
+    if interpret is None:
+        interpret = kernels.INTERPRET
+    return moe_gemm_pallas(x, w1, wg, w2, block_c=block_c, block_f=block_f, interpret=interpret)

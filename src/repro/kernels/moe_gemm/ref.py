@@ -1,0 +1,12 @@
+"""Oracle: models/moe.expert_ffn (gated path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x, w1, wg, w2):
+    xf = x.astype(jnp.float32)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xf, w1.astype(jnp.float32)))
+    h = h * jnp.einsum("ecd,edf->ecf", xf, wg.astype(jnp.float32))
+    return jnp.einsum("ecf,efd->ecd", h, w2.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,275 @@
+"""Analyze post-SPMD HLO text: FLOPs, HBM-traffic proxy and collective
+traffic with while-loop trip-count multiplication.
+
+Why not ``compiled.cost_analysis()``: XLA's analysis counts each while body
+ONCE — a model scanned over G layer groups under-reports by ~G (verified
+empirically: a scan of 8 matmuls reports the flops of 1).  All our models
+scan over layers (and chunked attention / CE scan over sequence), so the
+terms must be computed from the HLO structure:
+
+* computations are traversed from the entry; a ``while`` body/cond inherits
+  ``multiplier x trip_count`` (trip count recovered from the
+  ``compare(counter, constant)`` in the condition computation);
+  ``call`` / ``conditional`` inherit the caller's multiplier; ``fusion``
+  called computations are NOT traversed — a fusion's traffic is its
+  operands + output, which models TPU fusion locality.
+* FLOPs: 2 * output_elements * contraction_size per ``dot`` (operand shapes
+  resolved within the computation), which captures >99% of model FLOPs.
+* HBM bytes: for every materializing op, output bytes + operand bytes
+  (parameters/constants/GTE/bitcast/tuple are layout ops and excluded).
+* collectives: output shard bytes per op, bucketed by type.
+
+All numbers are PER DEVICE (HLO shapes are shard shapes after SPMD).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^=]*?\))|(?:\w+\[[^\]]*\]\S*))\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^()]*\))|(?:\w+\[[^\]]*\]))")
+_WHILE_RE = re.compile(r"while\(([^)]*)\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:call|conditional)\([^)]*\).*?to_apply=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_FUSION_KIND_RE = re.compile(r"kind=(k\w+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count.*?"?n"?\s*[:=]\s*"?(\d+)')
+_REDUCING_OPS_RE = re.compile(r"=\s*\S+\s+(reduce|reduce-window|scatter|sort)\(")
+_LHS_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    # while-carried buffer copies are elided by buffer aliasing on TPU;
+    # the host backend materializes them in text — don't count.
+    "copy",
+}
+
+
+def _dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None, []
+    dt = m.group(1)
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dt, dims
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    # opt-in (analyze_hlo(detail=True)): bytes per "computation/op[shape]"
+    # key — the §Perf hillclimb uses this to find the dominant traffic.
+    detail: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(self.collectives.values()))
+
+    def top(self, n: int = 20):
+        return sorted(self.detail.items(), key=lambda kv: -kv[1])[:n]
+
+
+def _split_computations(text: str) -> Dict[str, dict]:
+    """name -> {header, lines} for every computation in the module."""
+    comps: Dict[str, dict] = {}
+    cur = None
+    header_re = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*\S.*\{")
+    for line in text.splitlines():
+        if cur is None:
+            m = header_re.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = {"header": line, "lines": [], "entry": bool(m.group(1))}
+                continue
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur]["lines"].append(line)
+    return comps
+
+
+def _local_shapes(comp: dict) -> Dict[str, str]:
+    """name -> shape string for params and defs in a computation."""
+    shapes: Dict[str, str] = {}
+    for m in _PARAM_RE.finditer(comp["header"]):
+        shapes[m.group(1)] = m.group(2)
+    for line in comp["lines"]:
+        d = _DEF_RE.match(line)
+        if d:
+            shapes[d.group(1)] = d.group(2)
+    return shapes
+
+
+def _dot_flops(line: str, shapes: Dict[str, str], out_shape: str) -> float:
+    _, out_dims = _dims(out_shape)
+    ops = _OPERANDS_RE.search(line[line.index("dot(") :] if "dot(" in line else line)
+    if not ops:
+        return 0.0
+    operands = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+    if not operands:
+        return 0.0
+    lhs = operands[0]
+    lhs_shape = shapes.get(lhs)
+    if lhs_shape is None:
+        return 0.0
+    _, lhs_dims = _dims(lhs_shape)
+    cd = _LHS_CDIMS_RE.search(line)
+    k = 1
+    if cd:
+        for i in cd.group(1).split(","):
+            if i and int(i) < len(lhs_dims):
+                k *= lhs_dims[int(i)]
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    return 2.0 * n_out * k
+
+
+def analyze_hlo(text: str, fallback_trip: int = 1, detail: bool = False) -> HloStats:
+    comps = _split_computations(text)
+    entry = next((n for n, c in comps.items() if c["entry"]), None)
+    if entry is None and comps:
+        entry = next(iter(comps))
+    stats = HloStats(collectives=defaultdict(float))
+    if entry is None:
+        return stats
+
+    coll_re = re.compile(
+        r"=\s*((?:\([^=]*?\))|(?:\w+\[[^\]]*\]\S*))\s+(" + "|".join(COLLECTIVES) + r")[\-\w]*\("
+    )
+    visited = set()
+    reducing_cache: Dict[str, bool] = {}
+
+    def _is_reducing_fusion(line: str) -> bool:
+        """A fusion whose called computation reduces (reduce/scatter/sort)
+        genuinely reads its operands in full; host HLO marks these kLoop,
+        so the kind= attribute alone is unreliable."""
+        cm = _CALLS_RE.search(line)
+        if not cm:
+            return _FUSION_KIND_RE.search(line) and _FUSION_KIND_RE.search(line).group(1) == "kInput"
+        called = cm.group(1)
+        if called not in reducing_cache:
+            body = "\n".join(comps.get(called, {"lines": []})["lines"])
+            reducing_cache[called] = bool(_REDUCING_OPS_RE.search(body))
+        return reducing_cache[called]
+
+    def visit(name: str, mult: float):
+        if name not in comps:
+            return
+        key = (name, round(mult, 6))
+        if key in visited:
+            return
+        visited.add(key)
+        comp = comps[name]
+        shapes = _local_shapes(comp)
+        for line in comp["lines"]:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(2), wm.group(3)
+                tm = _TRIP_RE.search(line)  # XLA annotates known trip counts
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    cond_text = "\n".join(comps.get(cond, {"lines": []})["lines"])
+                    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+                    trips = max(consts) if consts else fallback_trip
+                visit(body, mult * trips)
+                continue
+            d = _DEF_RE.match(line)
+            if not d:
+                continue
+            out_shape, op = d.group(2), d.group(3)
+            cm = coll_re.search(line)
+            if cm:
+                stats.collectives[cm.group(2)] += mult * _shape_bytes(out_shape)
+            if op == "dot":
+                stats.flops += mult * _dot_flops(line, shapes, out_shape)
+            if op not in _SKIP_BYTES_OPS and op not in COLLECTIVES:
+                out_b = _shape_bytes(out_shape)
+                operand_b = []
+                ops_m = _OPERANDS_RE.search(line[line.index(op + "(") :]) if (op + "(") in line else None
+                if ops_m:
+                    for o in ops_m.group(1).split(","):
+                        o = o.strip().lstrip("%")
+                        if o in shapes:
+                            operand_b.append(_shape_bytes(shapes[o]))
+                if op == "dynamic-slice":
+                    b = out_b  # reads only the sliced region
+                elif op == "dynamic-update-slice":
+                    upd = operand_b[1] if len(operand_b) > 1 else 0
+                    b = 2 * upd  # read update + write region (buffer is in place)
+                elif op == "fusion":
+                    if _is_reducing_fusion(line):
+                        # reduction fusion: genuinely reads operands in full
+                        b = out_b + sum(operand_b)
+                    elif operand_b and max(operand_b) == out_b:
+                        # output-aliased fusion.  Two shapes share this
+                        # signature: a scan-buffer slice append (traffic =
+                        # 2 x the small update operands) and a whole-carry
+                        # in-place rewrite (traffic = read + write the
+                        # buffer).  rest==0 distinguishes them.
+                        rest = sum(operand_b) - max(operand_b)
+                        b = 2 * rest if rest else 2 * out_b
+                    else:
+                        # loop fusion emits output-shaped loops: each operand
+                        # contributes at most out-many element reads (slices,
+                        # elementwise, broadcasts).  Counting full operands
+                        # inflates every scan body by the whole xs/carry
+                        # buffer per step (see EXPERIMENTS.md §Perf pair 1,
+                        # iteration 2 — instrument fix).
+                        b = out_b + sum(min(o, out_b) for o in operand_b)
+                elif op in ("gather", "dynamic-gather"):
+                    # embedding-style lookup reads out-many elements + indices
+                    b = out_b + sum(min(o, out_b) for o in operand_b)
+                else:
+                    b = out_b + sum(operand_b)
+                stats.bytes += mult * b
+                if detail and b:
+                    stats.detail[f"{name}/{op} {out_shape[:48]}"] = stats.detail.get(
+                        f"{name}/{op} {out_shape[:48]}", 0.0
+                    ) + mult * b
+            cmm = _CALL_RE.search(line)
+            if cmm and op in ("call", "conditional"):
+                visit(cmm.group(1), mult)
+
+    visit(entry, 1.0)
+    stats.collectives = dict(stats.collectives)
+    return stats
+
+
+def parse_collective_bytes(text: str, fallback_trip: int = 1) -> Tuple[Dict[str, float], float]:
+    """Back-compat wrapper: ({type: per-device bytes}, total)."""
+    s = analyze_hlo(text, fallback_trip)
+    return s.collectives, s.collective_bytes

@@ -1,0 +1,192 @@
+"""ShapeDtypeStruct stand-ins + lowerable step builders for the dry-run.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every model input — no device allocation ever happens for the full-size
+configs; shardings ride on the SDS objects so ``jit(...).lower(*specs)``
+sees the production layout.
+
+``build_lowerable`` assembles (jitted_fn, args) for the right step kind:
+  train_*    -> train_step (fwd + bwd + optimizer update)
+  prefill_*  -> forward_prefill
+  decode_* / long_* -> serve_step (ONE token against a seq_len cache /
+                       rolling window / recurrent state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import strategy as stg
+from repro.models import transformer as tfm
+from repro.optim import adam
+from repro.serve import engine as serve_engine
+from repro.train import trainer as trainer_mod
+
+KEY_DTYPE = jax.eval_shape(lambda: jax.random.key(0)).dtype
+
+
+def sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def abstract_init(cfg: ModelConfig, init_fn):
+    """(param_shapes, specs) without allocating anything."""
+    captured = {}
+
+    def f(k):
+        p, s = init_fn(k, cfg)
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, sds((), KEY_DTYPE))
+    return shapes, captured["specs"]
+
+
+def _batch_axes_spec(mesh: Optional[Mesh], strat: stg.Strategy, batch: int) -> P:
+    if mesh is None:
+        return P()
+    bs = stg.batch_spec(strat, mesh)
+    if not bs:
+        return P()
+    prod = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = bs[0] if isinstance(bs[0], tuple) else (bs[0],)
+    for a in axes:
+        prod *= sizes[a]
+    return bs if batch % prod == 0 else P()
+
+
+def _nsh(mesh, spec):
+    return None if mesh is None else NamedSharding(mesh, spec)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh: Optional[Mesh] = None, strat: stg.Strategy = stg.Strategy.HYBRID_OPT) -> dict:
+    """ShapeDtypeStructs for the data inputs of (cfg, shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    bspec = _batch_axes_spec(mesh, strat, B)
+    bsh = lambda *rest: _nsh(mesh, P(*bspec, *rest))
+    out: dict = {}
+    if cfg.family == "seq2seq":
+        M = N = S // 2
+        out = dict(
+            src=sds((B, M), jnp.int32, bsh(None)),
+            tgt_in=sds((B, N), jnp.int32, bsh(None)),
+            tgt_out=sds((B, N), jnp.int32, bsh(None)),
+            src_mask=sds((B, M), jnp.bool_, bsh(None)),
+            tgt_mask=sds((B, N), jnp.bool_, bsh(None)),
+        )
+        return out
+    S_text = S
+    if cfg.frontend == "vision":
+        S_text = S - cfg.frontend_len
+        out["frontend"] = sds((B, cfg.frontend_len, cfg.d_model), jnp.float32, bsh(None, None))
+    elif cfg.frontend == "audio":
+        out["frontend"] = sds((B, cfg.frontend_len, cfg.d_model), jnp.float32, bsh(None, None))
+    if shape.kind == "train":
+        out |= dict(
+            tokens=sds((B, S_text), jnp.int32, bsh(None)),
+            labels=sds((B, S_text), jnp.int32, bsh(None)),
+            mask=sds((B, S_text), jnp.bool_, bsh(None)),
+        )
+    elif shape.kind == "prefill":
+        out["tokens"] = sds((B, S_text), jnp.int32, bsh(None))
+    else:  # decode
+        out["token"] = sds((B,), jnp.int32, bsh())
+    return out
+
+
+def _tree_sds(shapes, shardings=None):
+    if shardings is None:
+        return shapes
+    return jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, sh), shapes, shardings)
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> Optional[int]:
+    """Sliding window applies only to the long-context decode shape for
+    full-attention archs (DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+        return cfg.sliding_window
+    return None
+
+
+def build_lowerable(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh: Optional[Mesh],
+    strat: stg.Strategy,
+    *,
+    micro_batches: int = 1,
+    remat: bool = True,
+    use_pipeline: bool = False,
+    pin_residual: bool = False,
+    batch_backbone: bool = False,
+    q_chunk: int = 128,
+) -> Tuple[Any, tuple]:
+    """Returns (jitted_fn, args) such that jitted_fn.lower(*args) is the
+    production step for this (arch x shape x mesh x strategy)."""
+    init_fn = (lambda k, c: __import__("repro.models.seq2seq", fromlist=["x"]).init_seq2seq(k, c)) if cfg.family == "seq2seq" else (lambda k, c: tfm.init_lm(k, c))
+    shapes, specs = abstract_init(cfg, init_fn)
+    data = input_specs(cfg, shape, mesh, strat)
+
+    if shape.kind == "train":
+        optimizer = adam()
+        step_fn, sshard, _ = trainer_mod.make_train_step(
+            cfg,
+            optimizer,
+            strat=strat,
+            mesh=mesh,
+            specs=specs,
+            params_shapes=shapes,
+            remat=remat,
+            micro_batches=micro_batches,
+            use_pipeline=use_pipeline,
+            pin_residual=pin_residual,
+            batch_backbone=batch_backbone,
+            jit=False,
+        )
+        psh = sshard.params if sshard is not None else None
+        state_sds = trainer_mod.TrainState(
+            params=_tree_sds(shapes, psh),
+            opt_state=trainer_mod.OptState(
+                step=sds((), jnp.int32, _nsh(mesh, P())),
+                m=_tree_sds(jax.tree.map(lambda s: sds(s.shape, jnp.float32), shapes), psh),
+                v=_tree_sds(jax.tree.map(lambda s: sds(s.shape, jnp.float32), shapes), psh),
+            ),
+        )
+        rng = sds((), KEY_DTYPE, _nsh(mesh, P()))
+        lr = sds((), jnp.float32, _nsh(mesh, P()))
+        out_sh = (sshard, None) if sshard is not None else None
+        jitted = jax.jit(step_fn, out_shardings=out_sh, donate_argnums=(0,))
+        return jitted, (state_sds, data, lr, rng)
+
+    psh = stg.param_shardings(specs, shapes, mesh, strat) if mesh is not None else None
+    params_sds = _tree_sds(shapes, psh)
+    window = decode_window(cfg, shape)
+
+    if shape.kind == "prefill":
+        fn = serve_engine.prefill_fn(cfg, strat=strat, mesh=mesh, window=window, jit=False, pin_residual=pin_residual, q_chunk=q_chunk)
+        jitted = jax.jit(fn)
+        return jitted, (params_sds, data["tokens"], data.get("frontend"))
+
+    # decode: one token against a full cache
+    B, S = shape.global_batch, shape.seq_len
+    capacity = min(S, window) if window else S
+    cache_shapes = jax.eval_shape(lambda: tfm.init_cache(cfg, B, capacity, window))
+    csh = serve_engine.cache_shardings(cfg, cache_shapes, mesh)
+    cache_sds = jax.tree.map(
+        lambda s, sh: sds(s.shape, s.dtype, sh), cache_shapes, csh
+    ) if csh is not None else cache_shapes
+    memory_sds = None
+    if cfg.family == "audio":
+        bspec = _batch_axes_spec(mesh, strat, B)
+        memory_sds = sds((B, cfg.frontend_len, cfg.d_model), jnp.bfloat16, _nsh(mesh, P(*bspec, None, None)))
+    fn = serve_engine.serve_step_fn(cfg, strat=strat, mesh=mesh, window=window, jit=False, pin_residual=pin_residual)
+    jitted = jax.jit(fn, donate_argnums=(2,))
+    return jitted, (params_sds, data["token"], cache_sds, memory_sds)
+
+

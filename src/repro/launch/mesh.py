@@ -1,0 +1,33 @@
+"""Production meshes (TPU v5e).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets the forced host-device count before first init).
+
+Single pod:  (16, 16)      axes (data, model)        = 256 chips
+Multi-pod:   (2, 16, 16)   axes (pod, data, model)   = 512 chips
+
+Batch shards over (pod, data); tensor/expert/pipeline parallelism lives on
+``model``; HYBRID_OPT additionally FSDPs parameters over ``data``.  The
+``pod`` axis is pure data parallelism across the inter-pod (DCN-ish) links,
+so the only cross-pod collective a step needs is the gradient reduction.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 4):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# Hardware constants used by the roofline (TPU v5e).
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

@@ -1,0 +1,96 @@
+"""Roofline term derivation from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis`` on the host backend reports per-device FLOPs/bytes of the
+partitioned module — we multiply by chip count to get the global numbers the
+formulas above divide back down (so the terms are per-device seconds).
+Collective bytes come from the HLO parser (per-device traffic) times chips.
+
+MODEL_FLOPS uses 6·N·D for training (2 fwd + 4 bwd MACs per param-token)
+and 2·N_active·D for inference; the ratio MODEL_FLOPS / HLO_FLOPs exposes
+remat recompute, attention FLOPs and bubble/capacity waste.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    strategy: str
+    chips: int
+    # global quantities
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, float]
+    model_flops: float
+    # derived terms (seconds, per device)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_flops_ratio: float = 0.0
+    bytes_per_device: Optional[float] = None  # peak from memory_analysis
+
+    def derive(self):
+        self.compute_s = self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+        self.memory_s = self.hlo_bytes / (self.chips * HBM_BW)
+        self.collective_s = self.collective_bytes / (self.chips * ICI_BW)
+        terms = {"compute": self.compute_s, "memory": self.memory_s, "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_flops_ratio = self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+        return self
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def make_roofline(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh_name: str,
+    strategy: str,
+    chips: int,
+    flops_per_dev: float,
+    bytes_per_dev_accessed: float,
+    collective_per_device: float,
+    breakdown: Dict[str, float],
+    bytes_per_device: Optional[float] = None,
+) -> Roofline:
+    r = Roofline(
+        arch=cfg.name,
+        shape=shape.name,
+        mesh=mesh_name,
+        strategy=strategy,
+        chips=chips,
+        hlo_flops=flops_per_dev * chips,
+        hlo_bytes=bytes_per_dev_accessed * chips,
+        collective_bytes=collective_per_device * chips,
+        collective_breakdown=breakdown,
+        model_flops=model_flops(cfg, shape),
+        bytes_per_device=bytes_per_device,
+    )
+    return r.derive()

@@ -1,0 +1,96 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch seq2seq-rnn --smoke \
+        --strategy hybrid --steps 200 --batch 32
+
+On this CPU container use --smoke (reduced config, 1 device).  On a real
+cluster drop --smoke and pass --mesh pod|multipod; the same code path then
+builds the production mesh and sharded train step.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCH_IDS, get_config
+from repro.core.strategy import Strategy
+from repro.data import LMBatchIterator, MTBatchIterator, SyntheticLMTask, SyntheticMTTask
+from repro.models import seq2seq as s2s
+from repro.models import transformer as tfm
+from repro.optim import adam, sgd, PlateauDecay
+from repro.train import Trainer, perplexity
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="seq2seq-rnn")
+    ap.add_argument("--strategy", default="single", choices=[s.value for s in Strategy])
+    ap.add_argument("--mesh", choices=("none", "pod", "multipod", "test"), default="none")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", choices=("adam", "sgd"), default="adam")
+    ap.add_argument("--input-feeding", action="store_true", help="seq2seq baseline variant")
+    ap.add_argument("--pipeline", action="store_true", help="wavefront pipeline backbone (needs mesh)")
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.input_feeding:
+        cfg = dataclasses.replace(cfg, input_feeding=True)
+
+    mesh = None
+    if args.mesh in ("pod", "multipod"):
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+    elif args.mesh == "test":
+        from repro.launch.mesh import make_test_mesh
+
+        mesh = make_test_mesh()
+    strat = Strategy(args.strategy)
+
+    key = jax.random.key(args.seed)
+    if cfg.family == "seq2seq":
+        params, specs = s2s.init_seq2seq(key, cfg)
+        task = SyntheticMTTask(vocab_size=cfg.vocab_size, min_len=4, max_len=min(16, args.seq))
+        it = MTBatchIterator(task, batch_size=args.batch, seed=args.seed)
+        dev_it = lambda: MTBatchIterator(task, batch_size=args.batch, seed=999)
+    else:
+        params, specs = tfm.init_lm(key, cfg)
+        task = SyntheticLMTask(vocab_size=cfg.vocab_size, branching=16)
+        it = LMBatchIterator(task, batch_size=args.batch, seq_len=args.seq, seed=args.seed)
+        dev_it = lambda: LMBatchIterator(task, batch_size=args.batch, seq_len=args.seq, seed=999)
+
+    opt = adam(lr=args.lr) if args.optimizer == "adam" else sgd(lr=args.lr)
+    trainer = Trainer(cfg, opt, it, strat=strat, mesh=mesh, specs=specs, params=params, use_pipeline=args.pipeline, seed=args.seed)
+
+    sched = PlateauDecay()
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M strategy={strat.value} mesh={args.mesh}")
+    chunk = max(args.eval_every, args.steps if not args.eval_every else args.eval_every)
+    done = 0
+    while done < args.steps:
+        n = min(chunk, args.steps - done)
+        trainer.run(n, log_every=max(n // 4, 1))
+        done += n
+        if args.eval_every:
+            ppl = perplexity(trainer.state.params, cfg, dev_it(), max_batches=4)
+            trainer.lr_scale = sched.observe(ppl)
+            print(f"  dev ppl {ppl:.3f}  lr_scale -> {trainer.lr_scale:.3f}")
+    if args.ckpt_dir:
+        path = save_checkpoint(args.ckpt_dir, args.steps, trainer.state.params)
+        print("checkpoint:", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""Shared model building blocks.
+
+All model code in this package is *functional*: parameters are nested dicts of
+``jnp.ndarray``; each ``init_*`` returns ``(params, specs)`` where ``specs``
+mirrors the parameter tree with tuples of *logical axis names* consumed by
+``repro.core.strategy`` to produce mesh ``PartitionSpec``s.
+
+Logical axes used throughout:
+
+====== =======================================================
+name   meaning
+====== =======================================================
+embed  the d_model dimension
+ff     an FFN hidden dimension
+qdim   flattened heads*head_dim (attention projections)
+kvdim  flattened kv_heads*head_dim
+vocab  vocabulary dimension
+expert MoE expert dimension
+layers stacked-layer leading dimension (scan over layers)
+stage  pipeline-stage leading dimension (RNN wavefront pipeline)
+state  SSM state / conv width / small internal dims
+====== =======================================================
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+class Initializer:
+    """Deterministic per-path initialization (fold path hash into the key).
+
+    Avoids threading split keys through deeply nested init code and keeps
+    parameter values independent of init order.
+    """
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self.key = key
+        self.dtype = dtype
+
+    def _k(self, path: str) -> jax.Array:
+        return jax.random.fold_in(self.key, hash(path) & 0x7FFFFFFF)
+
+    def normal(self, path: str, shape, scale: float | None = None):
+        if scale is None:  # fan-in scaled
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (scale * jax.random.normal(self._k(path), shape)).astype(self.dtype)
+
+    def embedding(self, path: str, shape, scale: float = 0.02):
+        return (scale * jax.random.normal(self._k(path), shape)).astype(self.dtype)
+
+    def uniform(self, path: str, shape, scale: float):
+        return jax.random.uniform(self._k(path), shape, self.dtype, -scale, scale)
+
+    def zeros(self, path: str, shape):
+        del path
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, path: str, shape):
+        del path
+        return jnp.ones(shape, self.dtype)
+
+
+def leaf_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(ini: Initializer, path: str, d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"scale": ini.ones(path + ".scale", (d,))}, {"scale": ("embed",)}
+    return (
+        {"scale": ini.ones(path + ".scale", (d,)), "bias": ini.zeros(path + ".bias", (d,))},
+        {"scale": ("embed",), "bias": ("embed",)},
+    )
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "tanh": jnp.tanh, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float, partial: float = 1.0) -> jax.Array:
+    rot = int(head_dim * partial)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float, partial: float = 1.0, head_ndims: int = 1
+) -> jax.Array:
+    """x: [..., S, *heads, D] with ``head_ndims`` head dims; positions
+    broadcastable to [..., S]."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta, partial)
+    rot = 2 * inv.shape[0]
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, rot/2]
+    expand = (slice(None),) * ang.ndim
+    idx = expand[:-1] + (None,) * head_ndims + (slice(None),)
+    cos = jnp.cos(ang)[idx]  # [..., S, *1s, rot/2]
+    sin = jnp.sin(ang)[idx]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1) if rot < d else yr.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(ini: Initializer, path: str, vocab: int, d: int):
+    return {"table": ini.embedding(path, (vocab, d))}, {"table": ("vocab", "embed")}
+
+
+def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(table_or_head: jax.Array, x: jax.Array) -> jax.Array:
+    """x [..., d] @ head [d, vocab] -> logits [..., vocab] (fp32)."""
+    return jnp.einsum("...d,dv->...v", x.astype(jnp.float32), table_or_head.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# losses / metrics
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None):
+    """Token-level CE with optional mask; returns (mean_loss, denom)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return nll.mean(), jnp.array(nll.size, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom, denom
+
+
+def token_accuracy(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None):
+    pred = jnp.argmax(logits, axis=-1)
+    hit = (pred == labels).astype(jnp.float32)
+    if mask is None:
+        return hit.mean()
+    mask = mask.astype(jnp.float32)
+    return (hit * mask).sum() / jnp.maximum(mask.sum(), 1.0)

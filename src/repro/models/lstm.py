@@ -1,0 +1,104 @@
+"""Stacked LSTM layers — the paper's encoder/decoder backbone.
+
+The cell math is the classic fused-gate formulation (one [in+hidden, 4H]
+GEMM per step).  ``repro.kernels.lstm_cell`` provides the Pallas TPU kernel
+for the cell; this module is the pure-JAX substrate and oracle.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Initializer
+from repro.models.scan_utils import chunked_scan
+
+
+class LSTMCellState(NamedTuple):
+    h: jax.Array  # [B, H]
+    c: jax.Array  # [B, H]
+
+
+def init_lstm_cell(ini: Initializer, path: str, in_dim: int, hidden: int):
+    """Gate weights in explicit [in, 4, H] layout: the hidden dim H carries
+    the tensor-parallel sharding and the i/f/g/o split along the static
+    ``4`` axis never crosses a shard boundary."""
+    p = {
+        "wx": ini.normal(path + ".wx", (in_dim, 4, hidden), scale=in_dim**-0.5),
+        "wh": ini.normal(path + ".wh", (hidden, 4, hidden), scale=hidden**-0.5),
+        "b": ini.zeros(path + ".b", (4, hidden)),
+    }
+    s = {"wx": ("embed", None, "qdim"), "wh": ("embed", None, "qdim"), "b": (None, "qdim")}
+    return p, s
+
+
+def lstm_cell(p, x_t: jax.Array, state: LSTMCellState) -> Tuple[LSTMCellState, jax.Array]:
+    """x_t [B, in_dim] -> (new_state, h [B, H])."""
+    dt = x_t.dtype
+    gates = (
+        jnp.einsum("bi,igh->bgh", x_t, p["wx"].astype(dt))
+        + jnp.einsum("bj,jgh->bgh", state.h.astype(dt), p["wh"].astype(dt))
+        + p["b"].astype(dt)
+    ).astype(jnp.float32)
+    i, f, g, o = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+    c = jax.nn.sigmoid(f) * state.c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return LSTMCellState(h=h, c=c), h.astype(dt)
+
+
+def init_lstm_state(batch: int, hidden: int) -> LSTMCellState:
+    z = jnp.zeros((batch, hidden), jnp.float32)
+    return LSTMCellState(h=z, c=z)
+
+
+def run_lstm_layer(p, xs: jax.Array, state: LSTMCellState | None = None, chunk: int = 256):
+    """xs [B, S, in_dim] -> (hs [B, S, H], final_state).  Scans over time."""
+    B, S, _ = xs.shape
+    hidden = p["wh"].shape[0]
+    if state is None:
+        state = init_lstm_state(B, hidden)
+
+    def step(st, x_t):
+        st, h = lstm_cell(p, x_t, st)
+        return st, h
+
+    final, hs = chunked_scan(step, state, xs.swapaxes(0, 1), chunk)
+    return hs.swapaxes(0, 1), final
+
+
+def init_stacked_lstm(ini: Initializer, path: str, num_layers: int, in_dim: int, hidden: int):
+    """Layer 0 consumes in_dim; layers 1.. consume hidden."""
+    params, specs = [], []
+    for li in range(num_layers):
+        p, s = init_lstm_cell(ini, f"{path}.l{li}", in_dim if li == 0 else hidden, hidden)
+        params.append(p)
+        specs.append(s)
+    return params, specs
+
+
+def run_stacked_lstm(
+    params: List,
+    xs: jax.Array,
+    states: List[LSTMCellState] | None = None,
+    dropout_rng: jax.Array | None = None,
+    dropout: float = 0.0,
+    chunk: int = 256,
+):
+    """Sequential (layer-major) stacked LSTM: layer l runs over the full
+    sequence before layer l+1 starts.  This is the computation the paper's
+    model parallelism pipelines; `core/pipeline.py` runs the same cells in
+    wavefront order across mesh stages.
+    """
+    B, S, _ = xs.shape
+    hidden = params[0]["wh"].shape[0]
+    new_states = []
+    h = xs
+    for li, p in enumerate(params):
+        st = states[li] if states is not None else init_lstm_state(B, hidden)
+        h, fin = run_lstm_layer(p, h, st, chunk=chunk)
+        new_states.append(fin)
+        if dropout > 0.0 and dropout_rng is not None and li < len(params) - 1:
+            keep = jax.random.bernoulli(jax.random.fold_in(dropout_rng, li), 1.0 - dropout, h.shape)
+            h = jnp.where(keep, h / (1.0 - dropout), 0).astype(h.dtype)
+    return h, new_states

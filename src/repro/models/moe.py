@@ -1,0 +1,220 @@
+"""Mixture-of-experts with top-k routing.
+
+Two execution paths sharing one parameter layout:
+
+* ``apply_moe`` — sort-based capacity dispatch expressed as global array ops
+  (stable argsort -> per-expert contiguous groups -> grouped GEMM -> unsort).
+  Works on one device and under GSPMD.  This is the *baseline* path.
+* ``apply_moe_ep`` — the expert-parallel path: meant to run inside
+  ``shard_map`` over the ``model`` mesh axis.  Tokens are routed locally,
+  exchanged with an ``all_to_all`` to the devices owning their experts,
+  processed by the local expert shard, and returned by a second
+  ``all_to_all``.  This reproduces the collective schedule of production
+  MoE systems and is the path the roofline's collective term measures.
+
+No token is ever processed by an expert it was not routed to: over-capacity
+tokens are *dropped* (standard Switch-style behaviour) and contribute zero to
+the block output (the residual stream carries them unchanged).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.common import Initializer, activation
+
+
+def init_moe(ini: Initializer, path: str, d: int, m: MoEConfig, gated: bool = True):
+    f = m.d_ff_expert
+    p = {
+        "router": ini.normal(path + ".router", (d, m.num_experts), scale=0.02),
+        "w1": ini.normal(path + ".w1", (m.num_experts, d, f)),
+        "wg": ini.normal(path + ".wg", (m.num_experts, d, f)),
+        "w2": ini.normal(path + ".w2", (m.num_experts, f, d)),
+    }
+    s = {
+        "router": ("embed", None),
+        "w1": ("expert", "embed", "ff"),
+        "wg": ("expert", "embed", "ff"),
+        "w2": ("expert", "ff", "embed"),
+    }
+    if not gated:
+        del p["wg"], s["wg"]
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+def route(router_w: jax.Array, x: jax.Array, m: MoEConfig):
+    """x: [T, d] -> (top_w [T,k] fp32, top_idx [T,k] int32, stats).
+
+    ``stats = (frac [E], mean_prob [E])`` are the two *linear* (per-token
+    mean) statistics of the Switch load-balance loss.  The loss itself is
+    their product (``aux_from_stats``), which is NOT linear — under token
+    sharding the stats must be pmean'd across shards *before* the product,
+    otherwise mean-of-products != product-of-means.
+    """
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    E = m.num_experts
+    frac = jnp.mean(jax.nn.one_hot(top_idx, E, dtype=jnp.float32).sum(1), axis=0) / m.top_k
+    mean_prob = probs.mean(axis=0)
+    return top_w, top_idx.astype(jnp.int32), (frac, mean_prob)
+
+
+def aux_from_stats(stats, m: MoEConfig) -> jax.Array:
+    """Switch-style load-balance loss from (frac, mean_prob)."""
+    frac, mean_prob = stats
+    return m.num_experts * jnp.sum(frac * mean_prob)
+
+
+# ---------------------------------------------------------------------------
+# sort-based capacity dispatch (shared machinery)
+# ---------------------------------------------------------------------------
+
+
+def sorted_dispatch(ids: jax.Array, num_groups: int, capacity: int):
+    """Assign each slot (token replica) a (group, position) such that each
+    group receives at most ``capacity`` slots, in stable order.
+
+    Returns (dest_pos [N] int32 in [0, capacity], keep [N] bool); dest_pos ==
+    capacity marks a dropped slot (callers pad buffers with one scratch row).
+    """
+    n = ids.shape[0]
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    starts = jnp.searchsorted(sorted_ids, jnp.arange(num_groups, dtype=ids.dtype))
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[sorted_ids].astype(jnp.int32)
+    keep_sorted = pos_sorted < capacity
+    dest_sorted = jnp.where(keep_sorted, pos_sorted, capacity)
+    # scatter back to original slot order
+    dest = jnp.zeros((n,), jnp.int32).at[order].set(dest_sorted)
+    keep = jnp.zeros((n,), bool).at[order].set(keep_sorted)
+    return dest, keep
+
+
+def gather_to_groups(x_slots: jax.Array, ids: jax.Array, dest: jax.Array, keep: jax.Array, num_groups: int, capacity: int):
+    """x_slots [N, d] -> buffer [num_groups, capacity, d] (dropped slots zero)."""
+    d = x_slots.shape[-1]
+    buf = jnp.zeros((num_groups, capacity + 1, d), x_slots.dtype)
+    buf = buf.at[ids, dest].set(jnp.where(keep[:, None], x_slots, 0))
+    return buf[:, :capacity]
+
+
+def scatter_from_groups(buf: jax.Array, ids: jax.Array, dest: jax.Array, keep: jax.Array):
+    """buffer [G, C, d] -> per-slot values [N, d] (dropped slots zero)."""
+    pad = jnp.concatenate([buf, jnp.zeros_like(buf[:, :1])], axis=1)
+    vals = pad[ids, dest]
+    return jnp.where(keep[:, None], vals, 0)
+
+
+def expert_ffn(p, buf: jax.Array, act_name: str) -> jax.Array:
+    """buf [E, C, d] -> [E, C, d] through each expert's (gated) FFN."""
+    dt = buf.dtype
+    act = activation(act_name)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(dt))
+    if "wg" in p:
+        h = act(h) * jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(dt))
+    else:
+        h = act(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(dt))
+
+
+def _capacity(num_slots: int, num_groups: int, factor: float) -> int:
+    c = int(num_slots / num_groups * factor) + 1
+    return min(max(c, 1), num_slots)
+
+
+# ---------------------------------------------------------------------------
+# path 1: global sorted dispatch
+# ---------------------------------------------------------------------------
+
+
+def apply_moe(p, x: jax.Array, m: MoEConfig, act_name: str = "silu") -> Tuple[jax.Array, jax.Array]:
+    """x: [T, d] -> (y [T, d], aux_loss)."""
+    T, d = x.shape
+    top_w, top_idx, stats = route(p["router"], x, m)
+    aux = aux_from_stats(stats, m)
+    k = m.top_k
+    ids = top_idx.reshape(-1)  # [T*k]
+    C = _capacity(T * k, m.num_experts, m.capacity_factor)
+    dest, keep = sorted_dispatch(ids, m.num_experts, C)
+    x_slots = jnp.repeat(x, k, axis=0)  # slot i -> token i//k
+    buf = gather_to_groups(x_slots, ids, dest, keep, m.num_experts, C)
+    y_buf = expert_ffn(p, buf, act_name)
+    y_slots = scatter_from_groups(y_buf, ids, dest, keep)  # [T*k, d]
+    y = jnp.einsum("tkd,tk->td", y_slots.reshape(T, k, d), top_w.astype(y_slots.dtype))
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# path 2: expert parallel (call under shard_map over the `model` axis)
+# ---------------------------------------------------------------------------
+
+
+def apply_moe_ep(p_local, x_loc: jax.Array, m: MoEConfig, act_name: str, axis: str = "model", stat_axes=None):
+    """Per-shard body.  x_loc: [T_loc, d] local tokens; p_local holds the
+    *local expert shard* ([E_loc, d, f]) and the replicated router.
+
+    Token flow: local route -> sorted dispatch by destination *device* ->
+    all_to_all -> local dispatch by *local expert* -> grouped GEMM ->
+    inverse all_to_all -> combine.
+
+    ``stat_axes``: the mesh axes the *token* dimension is sharded over
+    (defaults to ``(axis,)``).  The load-balance stats are pmean'd over
+    these axes before the product, so the returned ``aux`` equals the
+    global-dispatch value exactly (it is replicated across shards).
+    """
+    M = jax.lax.psum(1, axis)
+    me = jax.lax.axis_index(axis)
+    E_loc = p_local["w1"].shape[0]
+    E = E_loc * M
+    T_loc, d = x_loc.shape
+    k = m.top_k
+
+    top_w, top_idx, stats = route(p_local["router"], x_loc, m)
+    if stat_axes is None:
+        stat_axes = (axis,)
+    aux = aux_from_stats(jax.tree.map(lambda s: jax.lax.pmean(s, stat_axes), stats), m)
+    ids = top_idx.reshape(-1)  # global expert id per slot [T_loc*k]
+    dev = ids // E_loc  # destination device per slot
+
+    # --- send side: group slots by destination device -------------------
+    Cs = _capacity(T_loc * k, M, m.capacity_factor)
+    dest, keep = sorted_dispatch(dev, M, Cs)
+    x_slots = jnp.repeat(x_loc, k, axis=0)
+    send_x = gather_to_groups(x_slots, dev, dest, keep, M, Cs)  # [M, Cs, d]
+    # carry each slot's local-expert id (+1, 0 = invalid) alongside
+    eloc_slot = (ids % E_loc + 1).astype(jnp.float32)
+    send_e = gather_to_groups(eloc_slot[:, None], dev, dest, keep, M, Cs)[..., 0]  # [M, Cs]
+
+    recv_x = jax.lax.all_to_all(send_x, axis, split_axis=0, concat_axis=0, tiled=True)
+    recv_e = jax.lax.all_to_all(send_e[..., None], axis, split_axis=0, concat_axis=0, tiled=True)[..., 0]
+
+    # --- expert side: group received slots by local expert --------------
+    flat_x = recv_x.reshape(M * Cs, d)
+    flat_e = recv_e.reshape(M * Cs)
+    valid = flat_e > 0
+    eloc = jnp.where(valid, flat_e - 1, E_loc).astype(jnp.int32)  # invalid -> overflow group
+    Ce = _capacity(M * Cs, E_loc, m.capacity_factor)
+    dest2, keep2 = sorted_dispatch(eloc, E_loc + 1, Ce)
+    keep2 &= valid
+    buf = gather_to_groups(flat_x, eloc, dest2, keep2, E_loc + 1, Ce)[:E_loc]
+    y_buf = expert_ffn(p_local, buf, act_name)
+    y_buf = jnp.concatenate([y_buf, jnp.zeros((1, Ce, d), y_buf.dtype)], axis=0)
+    y_flat = scatter_from_groups(y_buf, eloc, dest2, keep2)  # [M*Cs, d]
+
+    # --- return trip ------------------------------------------------------
+    back = jax.lax.all_to_all(y_flat.reshape(M, Cs, d), axis, split_axis=0, concat_axis=0, tiled=True)
+    y_slots = scatter_from_groups(back, dev, dest, keep)  # [T_loc*k, d]
+    y = jnp.einsum("tkd,tk->td", y_slots.reshape(T_loc, k, d), top_w.astype(y_slots.dtype))
+    # aux is already pmean'd over stat_axes (replicated across shards).
+    return y, aux

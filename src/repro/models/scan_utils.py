@@ -1,0 +1,42 @@
+"""Chunked, rematerialized sequence scans.
+
+Recurrent blocks (LSTM / Mamba / xLSTM) scan over time.  A naive
+``lax.scan`` over S steps saves per-step residuals for the backward pass —
+O(S) memory.  ``chunked_scan`` scans over chunks of ``chunk`` steps with a
+``jax.checkpoint`` around each chunk: only per-chunk carries are saved and
+the inside is recomputed, bounding training memory at O(S/chunk) carries +
+one chunk of residuals.  This is the TPU-friendly analogue of the paper's
+"compute all hidden states first" phase: the full hidden-state tensor for
+the sequence is produced before any attention/softmax work starts.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(step: Callable, carry, xs, chunk: int):
+    """Equivalent to ``jax.lax.scan(step, carry, xs)`` with chunked remat.
+
+    xs: pytree whose leaves have leading dim S (must be divisible by chunk
+    after internal padding); returns (carry, ys) like lax.scan.
+    """
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if S <= chunk:
+        return jax.lax.scan(step, carry, xs)
+    n = S // chunk
+    main = jax.tree.map(lambda a: a[: n * chunk].reshape((n, chunk) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    carry, ys_c = jax.lax.scan(chunk_body, carry, main)
+    ys = jax.tree.map(lambda a: a.reshape((n * chunk,) + a.shape[2:]), ys_c)
+    if S % chunk:  # remainder steps scanned plainly (never padded: padding
+        # would advance the recurrent state past the true sequence end)
+        carry, ys_tail = jax.lax.scan(step, carry, jax.tree.map(lambda a: a[n * chunk :], xs))
+        ys = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0), ys, ys_tail)
+    return carry, ys

@@ -1,0 +1,203 @@
+"""The paper's model: Luong-attention Seq2Seq stacked-LSTM MT
+(Ono et al. 2019, Figures 1 & 3).
+
+Two structurally different forwards:
+
+* ``forward_no_input_feeding`` (HybridNMT, Fig. 3): the backbone phase
+  computes *all* encoder states S [B,M,H] and *all* decoder states H [B,N,H]
+  first (teacher forcing supplies every target word), then the
+  attention-softmax phase computes, for all steps at once::
+
+      alpha = softmax(H^T W_a S)          (paper eq. 1-2)
+      C     = alpha . S                   (eq. 3)
+      Hc    = tanh(W_c [H; C])            (eq. 4)
+      P     = softmax(F_c Hc)             (eq. 5)
+
+  The ``phase_boundary`` callback is invoked on S and H between the two
+  phases — this is exactly where the hybrid strategy reshards from the
+  model-parallel backbone layout to the fully batch-sharded data-parallel
+  layout (the paper's "intermediate results ... distributed equally").
+
+* ``forward_input_feeding`` (baseline / HybridNMTIF, Fig. 1): the decoder
+  scans over time; step t consumes [emb(y_t); Hc_{t-1}], so attention is
+  computed inside the scan and no all-steps-at-once phase exists.  This is
+  the serialization the paper removes.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lstm
+from repro.models.common import Initializer, softmax_cross_entropy
+
+Identity = lambda x: x
+
+
+class Seq2SeqBatch(NamedTuple):
+    src: jax.Array  # [B, M] int32
+    tgt_in: jax.Array  # [B, N] int32 (BOS-shifted)
+    tgt_out: jax.Array  # [B, N] int32 (labels)
+    src_mask: jax.Array  # [B, M] bool
+    tgt_mask: jax.Array  # [B, N] bool
+
+
+def init_seq2seq(key: jax.Array, cfg: ModelConfig):
+    ini = Initializer(key)
+    h, e, v = cfg.d_model, cfg.emb_size, cfg.vocab_size
+    params, specs = {}, {}
+    params["src_emb"] = {"table": ini.embedding("src_emb", (v, e))}
+    specs["src_emb"] = {"table": ("vocab", "embed")}
+    params["tgt_emb"] = {"table": ini.embedding("tgt_emb", (v, e))}
+    specs["tgt_emb"] = {"table": ("vocab", "embed")}
+    params["encoder"], specs["encoder"] = lstm.init_stacked_lstm(ini, "enc", cfg.num_layers, e, h)
+    dec_in = e + (h if cfg.input_feeding else 0)
+    params["decoder"], specs["decoder"] = lstm.init_stacked_lstm(ini, "dec", cfg.num_layers, dec_in, h)
+    # attention-softmax head (the paper's data-parallel part)
+    params["head"] = {
+        "w_alpha": ini.normal("w_alpha", (h, h)),
+        "w_c": ini.normal("w_c", (2 * h, h)),
+        "f_c": ini.normal("f_c", (h, v)),
+    }
+    specs["head"] = {"w_alpha": ("embed", "embed"), "w_c": ("ff", "embed"), "f_c": ("embed", "vocab")}
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# attention-softmax phase (paper eq. 1-5) — all decoder steps at once
+# ---------------------------------------------------------------------------
+
+
+def attention_softmax_head(head, S: jax.Array, H: jax.Array, src_mask: jax.Array):
+    """S [B,M,h] encoder states, H [B,N,h] decoder states ->
+    (Hc [B,N,h], logits [B,N,V])."""
+    dt = H.dtype
+    scores = jnp.einsum("bnh,hk,bmk->bnm", H, head["w_alpha"].astype(dt), S)
+    scores = jnp.where(src_mask[:, None, :], scores.astype(jnp.float32), -1e30)
+    alpha = jax.nn.softmax(scores, axis=-1).astype(dt)  # eq. 1-2
+    C = jnp.einsum("bnm,bmh->bnh", alpha, S)  # eq. 3
+    Hc = jnp.tanh(jnp.einsum("bnh,hk->bnk", jnp.concatenate([H, C], -1), head["w_c"].astype(dt)))  # eq. 4
+    logits = jnp.einsum("bnh,hv->bnv", Hc.astype(jnp.float32), head["f_c"].astype(jnp.float32))  # eq. 5
+    return Hc, logits
+
+
+# ---------------------------------------------------------------------------
+# forwards
+# ---------------------------------------------------------------------------
+
+
+def forward_no_input_feeding(
+    params,
+    cfg: ModelConfig,
+    batch: Seq2SeqBatch,
+    *,
+    dropout_rng: Optional[jax.Array] = None,
+    phase_boundary: Callable = Identity,
+    backbone: Callable | None = None,
+):
+    """HybridNMT forward.  ``backbone`` optionally overrides how the stacked
+    LSTMs are executed (the wavefront pipeline substitutes here); it must map
+    (lstm_params, embedded [B,S,e]) -> hidden states [B,S,h].
+    """
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    run = backbone or (lambda ps, xs, rng: lstm.run_stacked_lstm(ps, xs, dropout_rng=rng, dropout=cfg.dropout)[0])
+    src_e = params["src_emb"]["table"].astype(dt)[batch.src]
+    tgt_e = params["tgt_emb"]["table"].astype(dt)[batch.tgt_in]
+    rng_e = rng_d = None
+    if dropout_rng is not None:
+        rng_e, rng_d = jax.random.split(dropout_rng)
+    # ---- phase 1: model-parallel backbone (all hidden states) ----------
+    S = run(params["encoder"], src_e, rng_e)  # [B, M, h]
+    H = run(params["decoder"], tgt_e, rng_d)  # [B, N, h]
+    # ---- reshard boundary (the paper's hybrid hand-off) ----------------
+    S, H = phase_boundary(S), phase_boundary(H)
+    # ---- phase 2: data-parallel attention-softmax ----------------------
+    _, logits = attention_softmax_head(params["head"], S, H, batch.src_mask)
+    loss, denom = softmax_cross_entropy(logits, batch.tgt_out, batch.tgt_mask)
+    return loss, {"logits": logits, "denom": denom}
+
+
+def forward_input_feeding(
+    params,
+    cfg: ModelConfig,
+    batch: Seq2SeqBatch,
+    *,
+    dropout_rng: Optional[jax.Array] = None,
+    phase_boundary: Callable = Identity,
+):
+    """Baseline / HybridNMTIF forward: Hc_{t-1} concatenated to the first
+    decoder LSTM input (Fig. 1) — the decoder is a single serial scan."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    h = cfg.d_model
+    B, N = batch.tgt_in.shape
+    src_e = params["src_emb"]["table"].astype(dt)[batch.src]
+    tgt_e = params["tgt_emb"]["table"].astype(dt)[batch.tgt_in]
+    S = lstm.run_stacked_lstm(params["encoder"], src_e, dropout_rng=dropout_rng, dropout=cfg.dropout)[0]
+    S = phase_boundary(S)
+    head = params["head"]
+    dec = params["decoder"]
+    states0 = [lstm.init_lstm_state(B, h) for _ in dec]
+
+    def step(carry, emb_t):
+        states, hc_prev = carry
+        x = jnp.concatenate([emb_t, hc_prev.astype(dt)], axis=-1)
+        new_states = []
+        hcur = x
+        for p, st in zip(dec, states):
+            st2, hcur = lstm.lstm_cell(p, hcur, st)
+            new_states.append(st2)
+        Hc, _ = attention_softmax_head(head, S, hcur[:, None, :], batch.src_mask)
+        hc = Hc[:, 0]
+        return (new_states, hc), hcur
+
+    (states, _), Hs = jax.lax.scan(step, (states0, jnp.zeros((B, h), dt)), tgt_e.swapaxes(0, 1))
+    H = Hs.swapaxes(0, 1)  # [B, N, h]
+    _, logits = attention_softmax_head(head, S, H, batch.src_mask)
+    loss, denom = softmax_cross_entropy(logits, batch.tgt_out, batch.tgt_mask)
+    return loss, {"logits": logits, "denom": denom}
+
+
+def forward(params, cfg: ModelConfig, batch: Seq2SeqBatch, **kw):
+    if cfg.input_feeding:
+        kw.pop("backbone", None)
+        return forward_input_feeding(params, cfg, batch, **kw)
+    return forward_no_input_feeding(params, cfg, batch, **kw)
+
+
+# ---------------------------------------------------------------------------
+# greedy decode (serving / BLEU-proxy eval)
+# ---------------------------------------------------------------------------
+
+
+def greedy_decode(params, cfg: ModelConfig, src: jax.Array, src_mask: jax.Array, max_len: int, bos: int, eos: int):
+    """Greedy search; returns [B, max_len] tokens.  Works for both variants
+    (at inference, input feeding feeds Hc back explicitly)."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    B = src.shape[0]
+    h = cfg.d_model
+    src_e = params["src_emb"]["table"].astype(dt)[src]
+    S = lstm.run_stacked_lstm(params["encoder"], src_e)[0]
+    dec = params["decoder"]
+
+    def step(carry, _):
+        tok, states, hc_prev, done = carry
+        emb = params["tgt_emb"]["table"].astype(dt)[tok]
+        x = jnp.concatenate([emb, hc_prev.astype(dt)], -1) if cfg.input_feeding else emb
+        new_states = []
+        hcur = x
+        for p, st in zip(dec, states):
+            st2, hcur = lstm.lstm_cell(p, hcur, st)
+            new_states.append(st2)
+        Hc, logits = attention_softmax_head(params["head"], S, hcur[:, None, :], src_mask)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        nxt = jnp.where(done, eos, nxt)
+        done = done | (nxt == eos)
+        return (nxt, new_states, Hc[:, 0], done), nxt
+
+    states0 = [lstm.init_lstm_state(B, h) for _ in dec]
+    carry0 = (jnp.full((B,), bos, jnp.int32), states0, jnp.zeros((B, h), dt), jnp.zeros((B,), bool))
+    _, toks = jax.lax.scan(step, carry0, None, length=max_len)
+    return toks.swapaxes(0, 1)

@@ -1,0 +1,123 @@
+"""Mamba (selective state space) block for the jamba hybrid architecture.
+
+Faithful S6 structure (in_proj -> causal depthwise conv -> selective
+(dt, B, C) -> discretized diagonal SSM scan -> gated out_proj), scanned over
+time with chunked remat (`scan_utils.chunked_scan`).  Decode carries the
+(conv window, ssm state) explicitly — O(1) per token, which is what makes
+``long_500k`` feasible for the hybrid family.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig
+from repro.models.common import Initializer
+from repro.models.scan_utils import chunked_scan
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # [B, d_conv-1, d_in] trailing inputs for the causal conv
+    ssm: jax.Array  # [B, d_in, d_state]
+
+
+def _dims(cfg: ModelConfig):
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return mc, d_in, dt_rank
+
+
+def init_mamba(ini: Initializer, path: str, cfg: ModelConfig):
+    mc, d_in, dt_rank = _dims(cfg)
+    d = cfg.d_model
+    p = {
+        "in_proj": ini.normal(path + ".in", (d, 2 * d_in)),
+        "conv_w": ini.normal(path + ".conv", (mc.d_conv, d_in), scale=0.5),
+        "conv_b": ini.zeros(path + ".convb", (d_in,)),
+        "x_proj": ini.normal(path + ".xp", (d_in, dt_rank + 2 * mc.d_state)),
+        "dt_proj": ini.normal(path + ".dtp", (dt_rank, d_in)),
+        "dt_bias": ini.uniform(path + ".dtb", (d_in,), 0.5),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (d_in, mc.d_state))),
+        "D": ini.ones(path + ".D", (d_in,)),
+        "out_proj": ini.normal(path + ".out", (d_in, d)),
+    }
+    s = {
+        "in_proj": ("embed", "ff"),
+        "conv_w": ("state", "ff"),
+        "conv_b": ("ff",),
+        "x_proj": ("ff", "state"),
+        "dt_proj": ("state", "ff"),
+        "dt_bias": ("ff",),
+        "A_log": ("ff", "state"),
+        "D": ("ff",),
+        "out_proj": ("ff", "embed"),
+    }
+    return p, s
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    mc, d_in, _ = _dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, mc.d_conv - 1, d_in), dtype),
+        ssm=jnp.zeros((batch, d_in, mc.d_state), dtype),
+    )
+
+
+def _selective(p, cfg: ModelConfig, xc: jax.Array):
+    """xc [..., d_in] (post-conv) -> (dA_log_coef dt [..., d_in], B, C)."""
+    mc, d_in, dt_rank = _dims(cfg)
+    dt = xc.dtype
+    proj = jnp.einsum("...i,ij->...j", xc, p["x_proj"].astype(dt))
+    dt_r, B, C = jnp.split(proj, [dt_rank, dt_rank + mc.d_state], axis=-1)
+    delta = jax.nn.softplus(jnp.einsum("...r,ri->...i", dt_r, p["dt_proj"].astype(dt)).astype(jnp.float32) + p["dt_bias"])
+    return delta, B.astype(jnp.float32), C.astype(jnp.float32)
+
+
+def _ssm_step(A, D):
+    def step(h, inp):
+        """h [B, d_in, N]; inp: delta [B,d_in], Bc/Cc [B,N], x [B,d_in]."""
+        delta, Bc, Cc, x = inp
+        dA = jnp.exp(delta[..., None] * A)  # [B, d_in, N]
+        dBx = delta[..., None] * Bc[:, None, :] * x[..., None]
+        h = dA * h + dBx
+        y = jnp.einsum("bin,bn->bi", h, Cc) + D * x
+        return h, y
+
+    return step
+
+
+def apply_mamba(p, cfg: ModelConfig, x: jax.Array, state: MambaState | None = None):
+    """x [B, S, d] -> (y [B, S, d], new_state).  state!=None selects decode
+    semantics (continues from the carried conv window / ssm state)."""
+    mc, d_in, _ = _dims(cfg)
+    dt = x.dtype
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt))
+    xi, z = jnp.split(xz, 2, axis=-1)  # [B, S, d_in]
+
+    if state is None:
+        state = init_mamba_state(cfg, B, jnp.float32)
+    # causal depthwise conv over (carried ++ current) inputs
+    full = jnp.concatenate([state.conv.astype(dt), xi], axis=1)  # [B, K-1+S, d_in]
+    K = mc.d_conv
+    xc = sum(full[:, i : i + S] * p["conv_w"][i].astype(dt) for i in range(K))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(dt))
+    new_conv = full[:, -(K - 1) :] if K > 1 else state.conv
+
+    delta, Bc, Cc = _selective(p, cfg, xc)
+    A = -jnp.exp(p["A_log"])  # [d_in, N]
+    step = _ssm_step(A, p["D"])
+    xs = (
+        delta.swapaxes(0, 1),  # [S, B, d_in]
+        Bc.swapaxes(0, 1),
+        Cc.swapaxes(0, 1),
+        xc.astype(jnp.float32).swapaxes(0, 1),
+    )
+    h, ys = chunked_scan(step, state.ssm, xs, mc.chunk)
+    y = ys.swapaxes(0, 1).astype(dt)  # [B, S, d_in]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dt))
+    return out, MambaState(conv=new_conv.astype(jnp.float32), ssm=h)

@@ -1,0 +1,498 @@
+"""Decoder-only / encoder-decoder transformer over heterogeneous blocks.
+
+One definition serves the dense, moe, vlm, audio (enc-dec), ssm (xLSTM) and
+hybrid (jamba) families.  Layers are grouped by the architecture's periodic
+block pattern (``cfg.layer_group``); weights are stacked ``[G, ...]`` per
+position-in-group and the forward is a ``lax.scan`` over groups, so HLO size
+is depth-independent (a 94-layer MoE compiles as fast as a 2-layer one).
+
+Modes:
+  train    full-sequence forward + CE loss (remat per layer group)
+  prefill  full-sequence forward, emits KV caches / recurrent states
+  decode   one token against carried caches/states
+
+The ``phase_boundary`` hook before the LM head is the paper's hybrid
+hand-off point (backbone layout -> batch-sharded softmax layout).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import common, mlp, moe, ssm, xlstm
+from repro.models.common import Initializer
+
+Identity = lambda x: x
+
+
+class RunCtx(NamedTuple):
+    mode: str  # "train" | "prefill" | "decode"
+    window: Optional[int] = None  # sliding window (long-context variants)
+    mesh: Any = None  # concrete Mesh for the expert-parallel MoE path
+    ep_axis: Optional[str] = None  # mesh axis carrying experts ("model")
+    data_axes: tuple = ()  # mesh axes carrying tokens/batch
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    remat: bool = True
+    # optional residual-stream sharding constraint (core.strategy.residual_pin)
+    pin: Any = None
+    # optional mesh for shard_map'd prefill/train attention (§Perf pair 2:
+    # bypasses GSPMD propagation through the chunked-attention scans)
+    attn_mesh: Any = None
+    attn_shard_model: bool = True
+
+
+# ---------------------------------------------------------------------------
+# block pattern
+# ---------------------------------------------------------------------------
+
+
+def block_pattern(cfg: ModelConfig):
+    """Kinds for each position in a layer group: 'attn' | 'mamba' | 'mlstm' | 'slstm'."""
+    P = cfg.layer_group
+    kinds = []
+    for p in range(P):
+        if cfg.xlstm is not None:
+            kinds.append("slstm" if cfg.is_slstm_layer(p) else "mlstm")
+        elif cfg.mamba is not None and not cfg.is_attn_layer(p):
+            kinds.append("mamba")
+        else:
+            kinds.append("attn")
+    return kinds
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stack_specs(spec):
+    return jax.tree.map(lambda s: ("layers",) + tuple(s), spec, is_leaf=lambda s: isinstance(s, tuple))
+
+
+def init_block(ini: Initializer, path: str, cfg: ModelConfig, kind: str, use_moe: bool, cross: bool = False):
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = common.init_norm(ini, path + ".n1", cfg.d_model, cfg.norm)
+    if kind == "attn":
+        p["attn"], s["attn"] = attn.init_attention(ini, path + ".attn", cfg)
+    elif kind == "mamba":
+        p["mamba"], s["mamba"] = ssm.init_mamba(ini, path + ".mamba", cfg)
+    elif kind == "mlstm":
+        p["mlstm"], s["mlstm"] = xlstm.init_mlstm(ini, path + ".mlstm", cfg)
+        return p, s  # self-contained block (no separate FFN)
+    elif kind == "slstm":
+        p["slstm"], s["slstm"] = xlstm.init_slstm(ini, path + ".slstm", cfg)
+        return p, s
+    if cross:
+        p["norm_x"], s["norm_x"] = common.init_norm(ini, path + ".nx", cfg.d_model, cfg.norm)
+        p["xattn"], s["xattn"] = attn.init_attention(ini, path + ".xattn", cfg, cross=True)
+    p["norm2"], s["norm2"] = common.init_norm(ini, path + ".n2", cfg.d_model, cfg.norm)
+    if use_moe:
+        p["moe"], s["moe"] = moe.init_moe(ini, path + ".moe", cfg.d_model, cfg.moe, cfg.gated_mlp)
+    elif cfg.d_ff:
+        p["mlp"], s["mlp"] = mlp.init_mlp(ini, path + ".mlp", cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+    return p, s
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig):
+    """Full parameter tree + logical-axis spec tree."""
+    ini = Initializer(key)
+    P = cfg.layer_group
+    G = cfg.num_layers // P
+    kinds = block_pattern(cfg)
+    params: dict = {}
+    specs: dict = {}
+    params["embed"], specs["embed"] = common.init_embedding(ini, "embed", cfg.vocab_size, cfg.emb_size)
+    if cfg.learned_pos_emb:
+        params["pos_emb"] = {"table": ini.embedding("pos_emb", (40960, cfg.d_model))}
+        specs["pos_emb"] = {"table": (None, "embed")}
+    # decoder blocks, stacked per position-in-group
+    blocks_p, blocks_s = [], []
+    for pos, kind in enumerate(kinds):
+        use_moe = cfg.moe is not None and cfg.is_moe_layer(pos)
+        trees = [
+            init_block(ini, f"blk.g{g}.p{pos}", cfg, kind, use_moe, cross=cfg.cross_attention)[0]
+            for g in range(G)
+        ]
+        _, s = init_block(ini, f"blk.g0.p{pos}", cfg, kind, use_moe, cross=cfg.cross_attention)
+        blocks_p.append(_stack(trees))
+        blocks_s.append(_stack_specs(s))
+    params["blocks"] = blocks_p
+    specs["blocks"] = blocks_s
+    # encoder stack (audio enc-dec)
+    if cfg.encoder_layers:
+        enc_trees = [init_block(ini, f"enc.{l}", cfg, "attn", False)[0] for l in range(cfg.encoder_layers)]
+        _, es = init_block(ini, "enc.0", cfg, "attn", False)
+        params["encoder"] = _stack(enc_trees)
+        specs["encoder"] = _stack_specs(es)
+        params["enc_norm"], specs["enc_norm"] = common.init_norm(ini, "encn", cfg.d_model, cfg.norm)
+    if cfg.frontend is not None:
+        # STUB frontend: embeddings arrive precomputed; learn only a projector.
+        params["frontend_proj"] = {"w": ini.normal("fr.w", (cfg.d_model, cfg.d_model))}
+        specs["frontend_proj"] = {"w": ("embed", "embed")}
+    params["final_norm"], specs["final_norm"] = common.init_norm(ini, "fn", cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": ini.normal("lm_head", (cfg.d_model, cfg.vocab_size))}
+        specs["lm_head"] = {"w": ("embed", "vocab")}
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# mixers
+# ---------------------------------------------------------------------------
+
+
+def _self_attention(p, cfg: ModelConfig, x, ctx: RunCtx, cache, positions, length):
+    """cache: None (train) or (k [B,C,KV,D], v).  ``length`` is the absolute
+    position of the incoming token(s) (decode).  Returns (y, new_cache_kv)."""
+    q, k, v = attn.project_qkv(p, cfg, x)
+    if not cfg.learned_pos_emb:
+        q = common.apply_rope(q, positions, cfg.rope_theta, cfg.partial_rotary, head_ndims=2)
+        k = common.apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary)
+    if ctx.pin is not None:  # §Perf pair 2: hold q/k/v layouts through attention
+        q, k, v = ctx.pin(q), ctx.pin(k), ctx.pin(v)
+    if ctx.mode == "decode":
+        ck, cv = cache
+        rolling = ctx.window is not None and ck.shape[1] == ctx.window
+        ck, cv = attn.cache_update(ck, cv, k, v, length, rolling)
+        o = attn.decode_attention(q, ck, cv, length, rolling=rolling)
+        return attn.output_proj(p, cfg, o), (ck, cv)
+    if ctx.attn_mesh is not None and x.shape[1] > ctx.q_chunk:
+        o = attn.attend_shard_map(
+            ctx.attn_mesh, q, k, v, causal=True, window=ctx.window,
+            q_chunk=ctx.q_chunk, kv_chunk=ctx.kv_chunk,
+            data_axes=ctx.data_axes, shard_model=ctx.attn_shard_model,
+        )
+    else:
+        o = attn.attend(q, k, v, causal=True, window=ctx.window, q_chunk=ctx.q_chunk, kv_chunk=ctx.kv_chunk)
+    if ctx.pin is not None:
+        o = ctx.pin(o)
+    y = attn.output_proj(p, cfg, o)
+    if ctx.pin is not None:
+        y = ctx.pin(y)
+    if ctx.mode == "prefill":
+        W = ctx.window
+        if W is not None and k.shape[1] > W:  # keep only the rolling window,
+            S = k.shape[1]  # slot s must hold the position p with p % W == s
+            k, v = k[:, S - W :], v[:, S - W :]
+            order = jnp.argsort(jnp.arange(S - W, S) % W)
+            k, v = k[:, order], v[:, order]
+        return y, (k, v)
+    return y, None
+
+
+def _cross_attention(p, cfg: ModelConfig, x, memory):
+    q, k, v = attn.project_qkv(p, cfg, x, xkv=memory)
+    o = attn.attend(q, k, v, causal=False, q_chunk=512, kv_chunk=512)
+    return attn.output_proj(p, cfg, o)
+
+
+def _ffn(p_block, cfg: ModelConfig, x, ctx: RunCtx):
+    """Dense MLP or MoE.  Returns (y, aux_loss)."""
+    if "mlp" in p_block:
+        return mlp.apply_mlp(p_block["mlp"], x, cfg.act, cfg.gated_mlp, pin=ctx.pin), 0.0
+    if "moe" not in p_block:
+        return jnp.zeros_like(x), 0.0
+    B, S, d = x.shape
+    x2 = x.reshape(B * S, d)
+    if ctx.mesh is not None and ctx.ep_axis is not None:
+        P = jax.sharding.PartitionSpec
+        tok_axes = tuple(a for a in (*ctx.data_axes, ctx.ep_axis))
+        fn = functools.partial(
+            moe.apply_moe_ep, m=cfg.moe, act_name=cfg.act, axis=ctx.ep_axis,
+            stat_axes=(*ctx.data_axes, ctx.ep_axis))
+
+        def shard_fn(xl, router, w1, wg, w2):
+            pl = {"router": router, "w1": w1, "wg": wg, "w2": w2}
+            return fn(pl, xl)
+
+        pm = p_block["moe"]
+        y2, aux = jax.shard_map(
+            shard_fn,
+            mesh=ctx.mesh,
+            in_specs=(P(tok_axes, None), P(None, None), P(ctx.ep_axis), P(ctx.ep_axis), P(ctx.ep_axis)),
+            out_specs=(P(tok_axes, None), P()),
+        )(x2, pm["router"], pm["w1"], pm.get("wg", pm["w1"]), pm["w2"])
+    else:
+        y2, aux = moe.apply_moe(p_block["moe"], x2, cfg.moe, cfg.act)
+    return y2.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# one block
+# ---------------------------------------------------------------------------
+
+
+def apply_block(kind: str, p, cfg: ModelConfig, x, ctx: RunCtx, cache, positions, memory=None, length=None):
+    """Returns (x, new_cache, aux)."""
+    aux = 0.0
+    h = common.apply_norm(p["norm1"], x, cfg.norm)
+    if kind == "attn":
+        y, new_cache = _self_attention(p["attn"], cfg, h, ctx, cache, positions, length)
+    elif kind == "mamba":
+        st = cache if ctx.mode == "decode" else None
+        y, new_st = ssm.apply_mamba(p["mamba"], cfg, h, st)
+        new_cache = new_st if ctx.mode in ("prefill", "decode") else None
+    elif kind == "mlstm":
+        st = cache if ctx.mode == "decode" else None
+        y, new_st = xlstm.apply_mlstm(p["mlstm"], cfg, h, st)
+        x = x + y
+        return x, (new_st if ctx.mode in ("prefill", "decode") else None), aux
+    elif kind == "slstm":
+        st = cache if ctx.mode == "decode" else None
+        if ctx.attn_mesh is not None and ctx.mode == "train" and st is None:
+            baxes = ctx.data_axes if ctx.attn_shard_model else (*ctx.data_axes, "model")
+            y, new_st = xlstm.apply_slstm_shard_map(ctx.attn_mesh, p["slstm"], cfg, h, baxes)
+        else:
+            y, new_st = xlstm.apply_slstm(p["slstm"], cfg, h, st)
+        x = x + y
+        return x, (new_st if ctx.mode in ("prefill", "decode") else None), aux
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if memory is not None and "xattn" in p:
+        hx = common.apply_norm(p["norm_x"], x, cfg.norm)
+        x = x + _cross_attention(p["xattn"], cfg, hx, memory)
+    h2 = common.apply_norm(p["norm2"], x, cfg.norm)
+    y2, aux = _ffn(p, cfg, h2, ctx)
+    return x + y2, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# cache containers
+# ---------------------------------------------------------------------------
+
+
+class LMCache(NamedTuple):
+    """Stacked per-group caches: tuple over positions-in-group, each either
+    (k [G,B,C,KV,D], v) for attention or a stacked recurrent state."""
+
+    entries: tuple
+    length: jax.Array  # absolute position count
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, window: Optional[int] = None) -> LMCache:
+    P = cfg.layer_group
+    G = cfg.num_layers // P
+    C = min(capacity, window) if window else capacity
+    kinds = block_pattern(cfg)
+    entries = []
+    stk = lambda tree: jax.tree.map(lambda a: jnp.broadcast_to(a[None], (G,) + a.shape), tree)
+    for kind in kinds:
+        if kind == "attn":
+            z = jnp.zeros((G, batch, C, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16)
+            entries.append((z, z))
+        elif kind == "mamba":
+            entries.append(stk(ssm.init_mamba_state(cfg, batch)))
+        elif kind == "mlstm":
+            entries.append(stk(xlstm.init_mlstm_state(cfg, batch)))
+        elif kind == "slstm":
+            entries.append(stk(xlstm.init_slstm_state(cfg, batch)))
+    return LMCache(entries=tuple(entries), length=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# trunk
+# ---------------------------------------------------------------------------
+
+
+def _run_encoder(params, cfg: ModelConfig, frames: jax.Array, ctx: RunCtx):
+    """Audio encoder: non-causal attention over frame embeddings."""
+    dt = frames.dtype
+    x = jnp.einsum("bfd,de->bfe", frames, params["frontend_proj"]["w"].astype(dt))
+    if "pos_emb" in params:
+        x = x + params["pos_emb"]["table"][: x.shape[1]].astype(dt)
+
+    def body(h, p_layer):
+        hh = common.apply_norm(p_layer["norm1"], h, cfg.norm)
+        q, k, v = attn.project_qkv(p_layer["attn"], cfg, hh)
+        o = attn.attend(q, k, v, causal=False, q_chunk=512, kv_chunk=512)
+        h = h + attn.output_proj(p_layer["attn"], cfg, o)
+        h2 = common.apply_norm(p_layer["norm2"], h, cfg.norm)
+        y = mlp.apply_mlp(p_layer["mlp"], h2, cfg.act, cfg.gated_mlp)
+        return h + y, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return common.apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def run_trunk(params, cfg: ModelConfig, x: jax.Array, ctx: RunCtx, cache: Optional[LMCache], positions, memory=None):
+    """x [B,S,d] -> (x, new_cache, aux).  Scan over layer groups."""
+    kinds = block_pattern(cfg)
+    # prefill produces caches as scan outputs; it does not consume any.
+    consume = cache is not None and ctx.mode == "decode"
+    cache_entries = cache.entries if consume else tuple(None for _ in kinds)
+    length = cache.length if cache is not None else None
+
+    def group_body(carry, xs):
+        h, aux = carry
+        weights, caches = xs
+        if ctx.pin is not None:
+            h = ctx.pin(h)
+        new_caches = []
+        for pos, kind in enumerate(kinds):
+            h, nc, a = apply_block(kind, weights[pos], cfg, h, ctx, caches[pos], positions, memory, length)
+            if ctx.pin is not None:  # hold the layout through every block
+                h = ctx.pin(h)
+            new_caches.append(nc if nc is not None else 0)
+            aux = aux + a
+        return (h, aux), tuple(new_caches)
+
+    body = group_body
+    if ctx.mode == "train" and ctx.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+
+    xs = (params["blocks"], cache_entries)
+    (x, aux), new_entries = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    new_cache = None
+    if cache is not None:
+        new_cache = LMCache(entries=new_entries, length=cache.length)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# heads / losses
+# ---------------------------------------------------------------------------
+
+
+def lm_head_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def chunked_ce(x: jax.Array, head_w: jax.Array, labels: jax.Array, mask: jax.Array, chunk: int = 1024):
+    """CE loss without materializing [B,S,V] fp32 logits for the whole
+    sequence: scan over sequence chunks."""
+    B, S, d = x.shape
+    if S <= chunk:
+        logits = common.unembed(head_w, x)
+        return common.softmax_cross_entropy(logits, labels, mask)
+    # smallest chunk count whose chunks divide S evenly (S need not be a
+    # multiple of `chunk` — e.g. VLM text length 4096-256 patches = 3840)
+    n = -(-S // chunk)
+    while S % n:
+        n += 1
+    chunk = S // n
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)  # never store logits
+    def body(acc, xs):
+        xc, lc, mc = xs
+        logits = common.unembed(head_w, xc)
+        lg = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc.astype(jnp.float32)
+        return (acc[0] + nll.sum(), acc[1] + mc.sum()), None
+
+    resh = lambda a: a.reshape(B, n, chunk, *a.shape[2:]).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (resh(x), resh(labels), resh(mask)))
+    denom = jnp.maximum(cnt, 1.0)
+    return tot / denom, denom
+
+
+# ---------------------------------------------------------------------------
+# top-level forwards
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, frontend_embeds, dtype):
+    """Token embeddings, with stub-frontend embeddings prepended (vlm) or
+    used as encoder input (audio handled separately)."""
+    x = params["embed"]["table"].astype(dtype)[tokens]
+    if cfg.frontend == "vision" and frontend_embeds is not None:
+        fe = jnp.einsum("bfd,de->bfe", frontend_embeds.astype(dtype), params["frontend_proj"]["w"].astype(dtype))
+        x = jnp.concatenate([fe, x], axis=1)
+    if "pos_emb" in params and cfg.family != "audio":
+        x = x + params["pos_emb"]["table"][: x.shape[1]].astype(dtype)
+    return x
+
+
+def forward_train(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array,
+    *,
+    frontend_embeds: Optional[jax.Array] = None,
+    ctx: RunCtx = RunCtx(mode="train"),
+    phase_boundary: Callable = Identity,
+):
+    """tokens [B, S_text]; for vlm S_text = S - frontend_len and the loss is
+    computed on text positions only; for audio, tokens are the target text
+    and frontend_embeds [B, F, d] feed the encoder."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    memory = None
+    if cfg.family == "audio":
+        memory = _run_encoder(params, cfg, frontend_embeds.astype(dt), ctx)
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds, dt)
+    if "pos_emb" in params and cfg.family == "audio":
+        x = x + params["pos_emb"]["table"][: x.shape[1]].astype(dt)
+    S_total = x.shape[1]
+    positions = jnp.arange(S_total)[None, :]
+    x, _, aux = run_trunk(params, cfg, x, ctx, None, positions, memory)
+    x = common.apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.frontend == "vision" and frontend_embeds is not None:
+        x = x[:, frontend_embeds.shape[1] :]  # loss on text positions only
+    x = phase_boundary(x)
+    ce, denom = chunked_ce(x, lm_head_weight(params, cfg), labels, mask)
+    loss = ce
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux / max(cfg.num_layers // cfg.layer_group, 1)
+    return loss, {"denom": denom, "aux": aux, "ce": ce}
+
+
+def forward_prefill(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    frontend_embeds: Optional[jax.Array] = None,
+    ctx: RunCtx = RunCtx(mode="prefill"),
+    phase_boundary: Callable = Identity,
+):
+    """Returns (logits_last [B, V], cache)."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    memory = None
+    if cfg.family == "audio":
+        memory = _run_encoder(params, cfg, frontend_embeds.astype(dt), ctx)
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds, dt)
+    if "pos_emb" in params and cfg.family == "audio":
+        x = x + params["pos_emb"]["table"][: x.shape[1]].astype(dt)
+    B, S_total = x.shape[:2]
+    positions = jnp.arange(S_total)[None, :]
+    cache0 = LMCache(entries=(), length=jnp.zeros((), jnp.int32))
+    x, cache, _ = run_trunk(params, cfg, x, ctx, cache0, positions, memory)
+    x = common.apply_norm(params["final_norm"], x, cfg.norm)
+    x_last = phase_boundary(x[:, -1:])
+    logits = common.unembed(lm_head_weight(params, cfg), x_last)[:, 0]
+    cache = cache._replace(length=jnp.asarray(S_total, jnp.int32))
+    return logits, cache, memory
+
+
+def forward_decode(
+    params,
+    cfg: ModelConfig,
+    token: jax.Array,  # [B] int32
+    cache: LMCache,
+    *,
+    memory: Optional[jax.Array] = None,
+    ctx: RunCtx = RunCtx(mode="decode"),
+    phase_boundary: Callable = Identity,
+):
+    """One decode step: returns (logits [B, V], new_cache)."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"]["table"].astype(dt)[token][:, None, :]  # [B,1,d]
+    if "pos_emb" in params:
+        x = x + params["pos_emb"]["table"][cache.length][None, None].astype(dt)
+    positions = cache.length[None, None] + jnp.zeros((1, 1), jnp.int32)
+    x, new_cache, _ = run_trunk(params, cfg, x, ctx, cache, positions, memory)
+    x = common.apply_norm(params["final_norm"], x, cfg.norm)
+    x = phase_boundary(x)
+    logits = common.unembed(lm_head_weight(params, cfg), x)[:, 0]
+    return logits, LMCache(entries=new_cache.entries, length=cache.length + 1)

@@ -1,0 +1,309 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, stabilized
+exponential gating) and sLSTM (scalar memory, block-diagonal recurrence).
+
+Both scan over time with chunked remat.  The mLSTM is the modern descendant
+of the paper's stacked LSTM: its per-step state is O(1) in sequence length,
+so decode at 524k context carries a fixed-size state — the reason the ssm
+family runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Initializer
+from repro.models.scan_utils import chunked_scan
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # [B, H, dk, dv]
+    n: jax.Array  # [B, H, dk]
+    m: jax.Array  # [B, H]
+    conv: jax.Array  # [B, K-1, d_in]
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # [B, d]
+    n: jax.Array  # [B, d]
+    h: jax.Array  # [B, d]
+    m: jax.Array  # [B, d]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    xc = cfg.xlstm
+    d_in = int(xc.mlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    return xc, d_in, H, d_in // H
+
+
+def init_mlstm(ini: Initializer, path: str, cfg: ModelConfig):
+    xc, d_in, H, _ = _mlstm_dims(cfg)
+    d = cfg.d_model
+    p = {
+        "up": ini.normal(path + ".up", (d, 2 * d_in)),
+        "conv_w": ini.normal(path + ".conv", (xc.conv_width, d_in), scale=0.5),
+        "conv_b": ini.zeros(path + ".convb", (d_in,)),
+        "wq": ini.normal(path + ".wq", (d_in, d_in)),
+        "wk": ini.normal(path + ".wk", (d_in, d_in)),
+        "wv": ini.normal(path + ".wv", (d_in, d_in)),
+        "wi": ini.normal(path + ".wi", (d_in, H), scale=0.02),
+        "wf": ini.normal(path + ".wf", (d_in, H), scale=0.02),
+        "bi": ini.zeros(path + ".bi", (H,)),
+        "bf": ini.ones(path + ".bf", (H,)) * 3.0,  # forget-open init
+        "down": ini.normal(path + ".down", (d_in, d)),
+    }
+    s = {
+        "up": ("embed", "ff"),
+        "conv_w": ("state", "ff"),
+        "conv_b": ("ff",),
+        # q/k/v outputs stay replicated: their [H, dk] head split (H=4) does
+        # not divide a 16-wide model axis, and the recurrence state is small.
+        "wq": ("ff", None),
+        "wk": ("ff", None),
+        "wv": ("ff", None),
+        "wi": ("ff", None),
+        "wf": ("ff", None),
+        "bi": (None,),
+        "bf": (None,),
+        "down": ("ff", "embed"),
+    }
+    return p, s
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    xc, d_in, H, dk = _mlstm_dims(cfg)
+    f32 = jnp.float32
+    return MLSTMState(
+        C=jnp.zeros((batch, H, dk, dk), f32),
+        n=jnp.zeros((batch, H, dk), f32),
+        m=jnp.full((batch, H), -1e30, f32),
+        conv=jnp.zeros((batch, xc.conv_width - 1, d_in), f32),
+    )
+
+
+def apply_mlstm(p, cfg: ModelConfig, x: jax.Array, state: MLSTMState | None = None):
+    """x [B, S, d] -> (y [B, S, d], state)."""
+    xc, d_in, H, dk = _mlstm_dims(cfg)
+    dt = x.dtype
+    B, S, _ = x.shape
+    up = jnp.einsum("bsd,de->bse", x, p["up"].astype(dt))
+    xi, z = jnp.split(up, 2, axis=-1)
+
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    K = xc.conv_width
+    full = jnp.concatenate([state.conv.astype(dt), xi], axis=1)
+    xconv = sum(full[:, i : i + S] * p["conv_w"][i].astype(dt) for i in range(K))
+    xconv = jax.nn.silu(xconv + p["conv_b"].astype(dt))
+    new_conv = full[:, -(K - 1) :] if K > 1 else state.conv
+
+    heads = lambda a: a.reshape(B, S, H, dk)
+    q = heads(jnp.einsum("bsi,ij->bsj", xconv, p["wq"].astype(dt))).astype(jnp.float32)
+    k = heads(jnp.einsum("bsi,ij->bsj", xconv, p["wk"].astype(dt))).astype(jnp.float32) / jnp.sqrt(float(dk))
+    v = heads(jnp.einsum("bsi,ij->bsj", xi, p["wv"].astype(dt))).astype(jnp.float32)
+    ig = (jnp.einsum("bsi,ih->bsh", xconv, p["wi"].astype(dt)) + p["bi"].astype(dt)).astype(jnp.float32)
+    fg = (jnp.einsum("bsi,ih->bsh", xconv, p["wf"].astype(dt)) + p["bf"].astype(dt)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fg)
+
+    def step(carry, inp):
+        C, n, m, _ = carry
+        qt, kt, vt, it, lft = inp  # [B,H,dk] x3, [B,H] x2
+        m_new = jnp.maximum(lft + m, it)
+        fp = jnp.exp(lft + m - m_new)[..., None]
+        ip = jnp.exp(it - m_new)[..., None]
+        C = fp[..., None] * C + ip[..., None] * (kt[..., :, None] * vt[..., None, :])
+        n = fp * n + ip * kt
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new, carry[3]), h
+
+    if xc.chunkwise_parallel and S > 1:
+        (C, n, m), hs_b = _mlstm_chunkwise(q, k, v, ig, logf, (state.C, state.n, state.m), xc.chunkwise_block)
+        h = hs_b.reshape(B, S, d_in).astype(dt)
+    else:
+        xs = tuple(a.swapaxes(0, 1) for a in (q, k, v, ig, logf))
+        carry0 = (state.C, state.n, state.m, state.conv.astype(jnp.float32))
+        (C, n, m, _), hs = chunked_scan(step, carry0, xs, xc.chunk)
+        h = hs.swapaxes(0, 1).reshape(B, S, d_in).astype(dt)  # [B,S,H,dk] -> flat
+    y = h * jax.nn.sigmoid(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["down"].astype(dt))
+    return out, MLSTMState(C=C, n=n, m=m, conv=new_conv.astype(jnp.float32))
+
+
+def _mlstm_chunkwise(q, k, v, ig, logf, carry, L: int):
+    """Chunkwise-parallel mLSTM (exact, stabilized) — same math as the
+    sequential ``step`` with the exponentials re-associated per block.
+
+    Per block of length L with start-of-block carry (C0, n0, m0) and
+    within-block cumulative log-forget ``b_t = Σ_{s<=t} logf_s``:
+
+        m_t = b_t + M_t,   M_t = max(m0, max_{s<=t}(i_s - b_s))
+        C_t = e^{m0-M_t} C0 + Σ_{s<=t} e^{i_s-b_s-M_t} k_s v_sᵀ
+
+    so h_t needs one [L,L] masked score matmul (decay-weighted) plus one
+    [L,dk]x[dk,dv] read of C0 — the matrix memory touches HBM once per
+    block instead of once per step.  All exponents are <= 0 by
+    construction of M_t (stability).
+
+    q,k,v: [B,S,H,dk] fp32; ig,logf: [B,S,H] fp32; carry (C0 [B,H,dk,dv],
+    n0 [B,H,dk], m0 [B,H]).  Returns ((C,n,m), h [B,S,H,dk]).
+    """
+    B, S, H, dk = q.shape
+    n_blk = -(-S // L)
+    pad = n_blk * L - S
+    if pad:
+        padt = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        # padded steps: i = -inf (no write), logf = 0 (no decay) -> no-ops
+        q, k, v = padt(q), padt(k), padt(v)
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        logf = padt(logf)
+    blk = lambda a: a.reshape(B, n_blk, L, *a.shape[2:]).swapaxes(0, 1)
+    qb, kb, vb, ib, fb = blk(q), blk(k), blk(v), blk(ig), blk(logf)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def block(carry, xs):
+        C0, n0, m0 = carry  # [B,H,dk,dv], [B,H,dk], [B,H]
+        qc, kc, vc, ic, fc = xs  # [B,L,H,dk] x3, [B,L,H] x2
+        b = jnp.cumsum(fc, axis=1)  # [B,L,H]
+        u = ic - b  # log "unforgotten" write gate per source step
+        g = jax.lax.cummax(u, axis=1)
+        M = jnp.maximum(m0[:, None], g)  # [B,L,H]
+        m_t = b + M
+        # ---- intra-block: decay-weighted masked attention ----------------
+        # D[t,s] = e^{u_s - M_t} for s <= t  (exponent <= 0)
+        D = jnp.exp(jnp.where(mask[None, None], u.transpose(0, 2, 1)[:, :, None, :] - M.transpose(0, 2, 1)[:, :, :, None], -jnp.inf))
+        scores = jnp.einsum("bthk,bshk->bhts", qc, kc)
+        W = D * scores
+        num = jnp.einsum("bhts,bshv->bthv", W, vc)
+        nvec = jnp.einsum("bhts,bshk->bthk", D, kc)
+        # ---- inter-block: one read of the carried matrix memory ----------
+        inter = jnp.exp(m0[:, None] - M)  # [B,L,H], <= 1
+        num = num + inter[..., None] * jnp.einsum("bthk,bhkv->bthv", qc, C0)
+        nvec = nvec + inter[..., None] * n0[:, None]
+        den = jnp.maximum(jnp.abs(jnp.einsum("bthk,bthk->bth", nvec, qc)), jnp.exp(-m_t))
+        h = num / den[..., None]
+        # ---- carry update -------------------------------------------------
+        M_L = M[:, -1]  # [B,H]
+        w = jnp.exp(u - M_L[:, None])  # [B,L,H]
+        scale0 = jnp.exp(m0 - M_L)
+        C = scale0[..., None, None] * C0 + jnp.einsum("bshk,bshv,bsh->bhkv", kc, vc, w)
+        n = scale0[..., None] * n0 + jnp.einsum("bshk,bsh->bhk", kc, w)
+        m = b[:, -1] + M_L
+        return (C, n, m), h
+
+    block = jax.checkpoint(block, prevent_cse=False)
+    (C, n, m), hs = jax.lax.scan(block, carry, (qb, kb, vb, ib, fb))
+    h = hs.swapaxes(0, 1).reshape(B, n_blk * L, H, dk)[:, :S]
+    return (C, n, m), h
+
+
+def apply_slstm_shard_map(mesh, p, cfg: ModelConfig, x: jax.Array, batch_axes: tuple):
+    """Train-mode sLSTM under an explicit shard_map (§Perf pair 1, iter 4).
+
+    Under pjit, the backward of the time scan all-reduces the recurrence
+    grad dR EVERY step (sum-of-psums; GSPMD cannot reassociate across the
+    loop) — 24,576 ARs for xlstm-350m/train_4k.  Inside shard_map the
+    params enter replicated (P()) and the transpose rule emits ONE psum
+    per parameter at the region boundary: psum-of-sum, same value."""
+    B = x.shape[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsz = 1
+    for a in batch_axes:
+        dsz *= sizes[a]
+    if not batch_axes or B % dsz:
+        return apply_slstm(p, cfg, x, None)
+    from jax.sharding import PartitionSpec as P
+
+    xspec = P(batch_axes, None, None)
+    pspec = jax.tree.map(lambda _: P(), p)
+
+    def body(pl, xl):
+        y, _ = apply_slstm(pl, cfg, xl, None)
+        return y
+
+    y = jax.shard_map(body, mesh=mesh, in_specs=(pspec, xspec), out_specs=xspec, check_vma=False)(p, x)
+    return y, None
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(ini: Initializer, path: str, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    xc = cfg.xlstm
+    f = -(-int(xc.slstm_proj_factor * d) // 128) * 128  # round up to MXU tile
+    p = {
+        "w": ini.normal(path + ".w", (d, 4 * d)),  # z, i, f, o from input
+        "r": ini.normal(path + ".r", (H, hd, 4 * hd)),  # block-diagonal recurrence
+        "b": ini.zeros(path + ".b", (4 * d,)),
+        "ff_i": ini.normal(path + ".ffi", (d, f)),
+        "ff_g": ini.normal(path + ".ffg", (d, f)),
+        "ff_o": ini.normal(path + ".ffo", (f, d)),
+    }
+    s = {
+        "w": ("embed", None),  # gate split (4, d) does not survive sharding
+        "r": ("heads", "state", "state"),
+        "b": (None,),
+        "ff_i": ("embed", "ff"),
+        "ff_g": ("embed", "ff"),
+        "ff_o": ("ff", "embed"),
+    }
+    return p, s
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    f32 = jnp.float32
+    z = jnp.zeros((batch, d), f32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30, f32))
+
+
+def apply_slstm(p, cfg: ModelConfig, x: jax.Array, state: SLSTMState | None = None):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    dt = x.dtype
+    B, S, _ = x.shape
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    wx = (jnp.einsum("bsd,de->bse", x, p["w"].astype(dt)) + p["b"].astype(dt)).astype(jnp.float32)
+
+    R = p["r"].astype(jnp.float32)
+
+    def step(carry, wxt):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, hd)
+        rec = jnp.einsum("bhk,hkj->bhj", hh, R).reshape(B, 4 * d)
+        za, ia, fa, oa = jnp.split(wxt + rec, 4, axis=-1)
+        zt = jnp.tanh(za)
+        lf = jax.nn.log_sigmoid(fa)
+        m_new = jnp.maximum(lf + m, ia)
+        ip = jnp.exp(ia - m_new)
+        fp = jnp.exp(lf + m - m_new)
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        h = jax.nn.sigmoid(oa) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    carry0 = (state.c, state.n, state.h, state.m)
+    (c, n, h, m), hs = chunked_scan(step, carry0, wx.swapaxes(0, 1), cfg.xlstm.chunk)
+    y = hs.swapaxes(0, 1).astype(dt)
+    # gated FFN
+    ff = jax.nn.silu(jnp.einsum("bsd,df->bsf", y, p["ff_i"].astype(dt))) * jnp.einsum(
+        "bsd,df->bsf", y, p["ff_g"].astype(dt)
+    )
+    out = jnp.einsum("bsf,fd->bsd", ff, p["ff_o"].astype(dt))
+    return out, SLSTMState(c=c, n=n, h=h, m=m)

@@ -1,0 +1,3 @@
+"""Optimizers and schedules (no external deps: optax is not available)."""
+from repro.optim.optimizers import OptState, adam, sgd, apply_updates, global_norm, clip_by_global_norm  # noqa: F401
+from repro.optim.schedule import PlateauDecay, warmup_cosine  # noqa: F401

@@ -1,0 +1,3 @@
+"""Serving substrate: batched prefill/decode with KV caches & SSM states."""
+from repro.serve.engine import ServeEngine, serve_step_fn  # noqa: F401
+from repro.serve.sampling import greedy, temperature_sample  # noqa: F401

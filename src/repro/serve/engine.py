@@ -1,0 +1,151 @@
+"""Batched serving engine.
+
+``serve_step_fn`` builds the jit'd one-token decode step used by the
+decode-shape dry-runs (``decode_32k``, ``long_500k``): one new token per
+sequence against a ``seq_len``-deep KV cache (attention archs), a rolling
+window buffer (sliding-window variants), or an O(1) recurrent state
+(ssm / hybrid archs).  ``ServeEngine`` wraps prefill + decode for the
+runnable examples (padding the prefill cache up to capacity).
+
+Cache sharding comes from ``core.strategy.cache_entry_spec``: batch over
+the data axes, KV heads over ``model`` when divisible — otherwise the cache
+*sequence* dim is model-sharded and the single-query softmax reduces with
+small stat collectives (sequence-parallel decode; see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import strategy as stg
+from repro.models import transformer as tfm
+from repro.serve.sampling import greedy
+
+
+def cache_shardings(cfg: ModelConfig, cache: Any, mesh: Optional[Mesh]):
+    if mesh is None:
+        return None
+
+    kinds = tfm.block_pattern(cfg)
+
+    def entry_sharding(i, entry):
+        if kinds[i] == "attn":
+            k, v = entry
+            spec = stg.cache_entry_spec(k.shape, mesh, cfg.num_kv_heads)
+            return (NamedSharding(mesh, spec), NamedSharding(mesh, spec))
+        return jax.tree.map(lambda a: NamedSharding(mesh, stg.state_entry_spec(a.shape, mesh)), entry)
+
+    entries = tuple(entry_sharding(i, e) for i, e in enumerate(cache.entries))
+    return tfm.LMCache(entries=entries, length=NamedSharding(mesh, P()))
+
+
+def serve_step_fn(
+    cfg: ModelConfig,
+    *,
+    strat: stg.Strategy = stg.Strategy.SINGLE,
+    mesh: Optional[Mesh] = None,
+    window: Optional[int] = None,
+    jit: bool = True,
+    ep: Optional[bool] = None,
+    pin_residual: bool = False,
+):
+    """One-token decode step: (params, token [B], cache, memory?) ->
+    (next_logits [B, V], new_cache).
+
+    ``ep`` (expert parallel): decode steps carry few tokens (one per
+    sequence), usually fewer than devices — default OFF for decode; the
+    global sorted-dispatch path runs with expert-sharded weights instead."""
+    pb = stg.phase_boundary_fn(strat, mesh)
+    if ep is None:
+        ep = False
+    ep = ep and cfg.moe is not None and mesh is not None and strat != stg.Strategy.DATA
+    ctx = tfm.RunCtx(
+        mode="decode",
+        window=window,
+        mesh=mesh if ep else None,
+        ep_axis="model" if ep else None,
+        data_axes=stg.data_axes(mesh) if mesh is not None else (),
+        remat=False,
+        pin=stg.residual_pin(strat, mesh) if pin_residual else None,
+    )
+
+    def step(params, token, cache, memory=None):
+        return tfm.forward_decode(params, cfg, token, cache, memory=memory, ctx=ctx, phase_boundary=pb)
+
+    return jax.jit(step) if jit else step
+
+
+def prefill_fn(cfg: ModelConfig, *, strat=stg.Strategy.SINGLE, mesh=None, window=None, jit=True, ep=True, pin_residual=False, q_chunk=128):
+    pb = stg.phase_boundary_fn(strat, mesh)
+    ep = ep and cfg.moe is not None and mesh is not None and strat != stg.Strategy.DATA
+    ctx = tfm.RunCtx(
+        mode="prefill",
+        window=window,
+        mesh=mesh if ep else None,
+        ep_axis="model" if ep else None,
+        data_axes=stg.data_axes(mesh) if mesh is not None else (),
+        remat=False,
+        q_chunk=q_chunk,
+        pin=stg.residual_pin(strat, mesh) if pin_residual else None,
+        attn_mesh=mesh if (pin_residual and mesh is not None) else None,
+        attn_shard_model=strat != stg.Strategy.DATA,
+    )
+
+    def prefill(params, tokens, frontend=None):
+        return tfm.forward_prefill(params, cfg, tokens, frontend_embeds=frontend, ctx=ctx, phase_boundary=pb)
+
+    return jax.jit(prefill) if jit else prefill
+
+
+def pad_cache(cfg: ModelConfig, cache: tfm.LMCache, capacity: int) -> tfm.LMCache:
+    """Grow attention cache entries (prefill emits exactly-S caches) to
+    ``capacity`` slots so decode can append."""
+    kinds = tfm.block_pattern(cfg)
+
+    def pad_entry(i, e):
+        if kinds[i] != "attn":
+            return e
+        k, v = e
+        extra = capacity - k.shape[2]
+        if extra <= 0:
+            return e
+        z = jnp.zeros(k.shape[:2] + (extra,) + k.shape[3:], k.dtype)
+        return (jnp.concatenate([k, z], 2), jnp.concatenate([v, z], 2))
+
+    return tfm.LMCache(entries=tuple(pad_entry(i, e) for i, e in enumerate(cache.entries)), length=cache.length)
+
+
+class ServeEngine:
+    """Host-side batched generation loop (examples / integration tests)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, mesh=None, strat=stg.Strategy.SINGLE, window=None, max_len=512):
+        self.cfg, self.params = cfg, params
+        self.window = window
+        self.max_len = max_len
+        self._prefill = prefill_fn(cfg, strat=strat, mesh=mesh, window=window)
+        self._step = serve_step_fn(cfg, strat=strat, mesh=mesh, window=window)
+
+    def generate(self, prompt_tokens: jax.Array, steps: int, *, frontend=None, sampler=greedy, rng=None):
+        """prompt_tokens [B, S] -> generated [B, steps]."""
+        logits, cache, memory = self._prefill(self.params, prompt_tokens, frontend)
+        cache = pad_cache(self.cfg, cache, min(self.max_len, prompt_tokens.shape[1] + steps))
+        if rng is not None:
+            rng, sub = jax.random.split(rng)
+            tok = sampler(logits, sub)
+        else:
+            tok = sampler(logits)
+        out = [tok]
+        for i in range(steps - 1):
+            if rng is not None:
+                rng, sub = jax.random.split(rng)
+            else:
+                sub = None
+            logits, cache = self._step(self.params, tok, cache, memory)
+            tok = sampler(logits) if sub is None else sampler(logits, sub)
+            out.append(tok)
+        return jnp.stack(out, axis=1)

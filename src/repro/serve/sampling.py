@@ -1,0 +1,13 @@
+"""Token sampling."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array, rng=None) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits: jax.Array, rng: jax.Array, temperature: float = 1.0) -> jax.Array:
+    return jax.random.categorical(rng, logits / max(temperature, 1e-4), axis=-1).astype(jnp.int32)

@@ -1,0 +1,3 @@
+"""Training loop substrate."""
+from repro.train.trainer import TrainState, Trainer, make_train_step  # noqa: F401
+from repro.train.evaluate import perplexity  # noqa: F401

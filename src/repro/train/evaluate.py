@@ -1,0 +1,36 @@
+"""Evaluation: development-set perplexity (the paper's Fig. 4 metric)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import seq2seq as s2s
+from repro.models import transformer as tfm
+
+
+def perplexity(params, cfg: ModelConfig, batches, *, max_batches: int = 8) -> float:
+    """Token-level perplexity over an iterator of batches."""
+    total_nll, total_tok = 0.0, 0.0
+    if cfg.family == "seq2seq":
+        fwd = jax.jit(lambda p, b: s2s.forward(p, cfg, b))
+    else:
+        fwd = jax.jit(
+            lambda p, t, l, m: tfm.forward_train(p, cfg, t, l, m, ctx=tfm.RunCtx(mode="train", remat=False))
+        )
+    for i, batch in enumerate(batches):
+        if i >= max_batches:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.family == "seq2seq":
+            b = s2s.Seq2SeqBatch(batch["src"], batch["tgt_in"], batch["tgt_out"], batch["src_mask"], batch["tgt_mask"])
+            loss, extras = fwd(params, b)
+        else:
+            loss, extras = fwd(params, batch["tokens"], batch["labels"], batch["mask"])
+            loss = extras.get("ce", loss)  # perplexity excludes the MoE aux term
+        n = float(extras["denom"])
+        total_nll += float(loss) * n
+        total_tok += n
+    return math.exp(min(total_nll / max(total_tok, 1.0), 30.0))

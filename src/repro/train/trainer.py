@@ -1,0 +1,233 @@
+"""Strategy-aware training step factory + a small host-side Trainer loop.
+
+``make_train_step`` builds the jit'd step for any (architecture, strategy,
+mesh).  All sharding decisions come from ``repro.core.strategy``; the
+optimizer state inherits the parameter shardings leaf-for-leaf, and the
+batch is sharded per the strategy's batch spec.  The paper's hybrid phase
+switch enters through ``phase_boundary_fn`` (and for the seq2seq MODEL /
+HYBRID strategies, optionally the wavefront pipeline backbone).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import strategy as stg
+from repro.core.pipeline import pipeline_backbone
+from repro.models import seq2seq as s2s
+from repro.models import transformer as tfm
+from repro.optim.optimizers import OptState, apply_updates, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: OptState
+
+
+def init_train_state(params, optimizer) -> TrainState:
+    return TrainState(params=params, opt_state=optimizer.init(params))
+
+
+def state_shardings(specs, params_shapes, mesh: Optional[Mesh], strat: stg.Strategy):
+    """Shardings for TrainState: optimizer moments mirror the params."""
+    psh = stg.param_shardings(specs, params_shapes, mesh, strat)
+    if mesh is None:
+        return None
+    scalar = NamedSharding(mesh, P())
+    mom = psh
+    return TrainState(params=psh, opt_state=OptState(step=scalar, m=mom, v=jax.tree.map(lambda s: s, mom)))
+
+
+def _sgd_v_fix(shardings, opt_state):
+    """SGD keeps a scalar `v`; patch its sharding if the tree disagrees."""
+    if shardings is None or not isinstance(opt_state.v, jax.Array):
+        return shardings
+    return shardings._replace(opt_state=shardings.opt_state._replace(v=shardings.opt_state.step))
+
+
+def make_loss_fn(cfg: ModelConfig, strat: stg.Strategy, mesh: Optional[Mesh], *, use_pipeline: bool = False, remat: bool = True, pin_residual: bool = False, batch_backbone: bool = False):
+    pb = stg.phase_boundary_fn(strat, mesh)
+    if cfg.family == "seq2seq":
+        backbone = None
+        if use_pipeline and mesh is not None and strat in (stg.Strategy.MODEL, stg.Strategy.HYBRID):
+            backbone = pipeline_backbone(mesh)
+        elif batch_backbone and mesh is not None:
+            from repro.core.pipeline import batch_shard_backbone
+            # batch over ALL axes: the paper's hand-off already spreads the
+            # hidden states over every device for the head phase, so the
+            # backbone uses the same full-batch sharding (no redundant
+            # compute on model ranks, no forward collectives at all).
+            backbone = batch_shard_backbone(mesh, stg.all_axes(mesh), dropout=cfg.dropout)
+
+        def loss_fn(params, batch, rng):
+            b = s2s.Seq2SeqBatch(
+                src=batch["src"],
+                tgt_in=batch["tgt_in"],
+                tgt_out=batch["tgt_out"],
+                src_mask=batch["src_mask"],
+                tgt_mask=batch["tgt_mask"],
+            )
+            kw = dict(dropout_rng=rng, phase_boundary=pb)
+            if backbone is not None and not cfg.input_feeding:
+                kw["backbone"] = backbone
+            loss, extras = s2s.forward(params, cfg, b, **kw)
+            return loss, {"denom": extras["denom"]}
+
+        return loss_fn
+
+    ep = cfg.moe is not None and mesh is not None and strat != stg.Strategy.DATA
+    ctx = tfm.RunCtx(
+        mode="train",
+        mesh=mesh if ep else None,
+        ep_axis="model" if ep else None,
+        data_axes=stg.data_axes(mesh) if mesh is not None else (),
+        remat=remat,
+        pin=stg.residual_pin(strat, mesh) if pin_residual else None,
+        attn_mesh=mesh if (pin_residual and mesh is not None) else None,
+        attn_shard_model=strat != stg.Strategy.DATA,
+    )
+
+    def loss_fn(params, batch, rng):
+        del rng
+        loss, extras = tfm.forward_train(
+            params,
+            cfg,
+            batch["tokens"],
+            batch["labels"],
+            batch["mask"],
+            frontend_embeds=batch.get("frontend"),
+            ctx=ctx,
+            phase_boundary=pb,
+        )
+        return loss, {"denom": extras["denom"], "aux": extras.get("aux", 0.0)}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer,
+    *,
+    strat: stg.Strategy = stg.Strategy.SINGLE,
+    mesh: Optional[Mesh] = None,
+    specs=None,
+    params_shapes=None,
+    clip_norm: float = 5.0,
+    use_pipeline: bool = False,
+    remat: bool = True,
+    micro_batches: int = 1,
+    pin_residual: bool = False,
+    batch_backbone: bool = False,
+    jit: bool = True,
+):
+    """Returns (train_step, state_shardings, batch_sharding_fn).
+
+    ``micro_batches`` > 1 enables gradient accumulation: the global batch is
+    split along dim 0 into micro slices processed by a ``lax.scan`` (one
+    layer-sweep of activations live at a time) and grads are averaged before
+    the single optimizer update — the standard activation-memory lever for
+    the biggest assigned architectures (see EXPERIMENTS.md §Perf)."""
+    loss_fn = make_loss_fn(cfg, strat, mesh, use_pipeline=use_pipeline, remat=remat, pin_residual=pin_residual, batch_backbone=batch_backbone)
+
+    def grads_of(params, batch, rng):
+        if micro_batches == 1:
+            (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch, rng)
+            return loss, extras, grads
+
+        # Reshape [B, ...] -> [micro, B/micro, ...] and let scan consume the
+        # (unsharded) leading axis; the per-micro batch dim keeps the batch
+        # sharding.  (Index-slicing the sharded batch dim instead makes
+        # GSPMD gather + replicate the compute — verified, 8x flops.)
+        bspec = stg.batch_spec(strat, mesh)
+
+        def resh(x):
+            y = x.reshape(micro_batches, x.shape[0] // micro_batches, *x.shape[1:])
+            if mesh is not None:
+                spec = P(None, *bspec, *([None] * (x.ndim - 1)))
+                y = jax.lax.with_sharding_constraint(y, NamedSharding(mesh, spec))
+            return y
+
+        xs = jax.tree.map(resh, batch)
+
+        def body(carry, mb):
+            acc, loss_acc, denom_acc, i = carry
+            (loss, extras), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb, jax.random.fold_in(rng, i))
+            acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+            return (acc, loss_acc + loss, denom_acc + extras["denom"], i + 1), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum, denom, _), _ = jax.lax.scan(body, (zeros, 0.0, 0.0, 0), xs)
+        grads = jax.tree.map(lambda g: (g / micro_batches).astype(jnp.float32), gsum)
+        return loss_sum / micro_batches, {"denom": denom}, grads
+
+    def train_step(state: TrainState, batch, lr_scale, rng):
+        loss, extras, grads = grads_of(state.params, batch, rng)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, state.opt_state, state.params, lr_scale)
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, "tokens": extras["denom"]}
+        if "aux" in extras:
+            metrics["moe_aux"] = extras["aux"]
+        return TrainState(params=params, opt_state=opt_state), metrics
+
+    sshard = None
+    if mesh is not None and specs is not None and params_shapes is not None:
+        sshard = state_shardings(specs, params_shapes, mesh, strat)
+
+    def batch_shardings(batch: dict):
+        if mesh is None:
+            return None
+        bs = stg.batch_spec(strat, mesh)
+        return {
+            k: NamedSharding(mesh, P(*bs, *([None] * (v.ndim - 1)))) for k, v in batch.items()
+        }
+
+    if jit:
+        kw = {}
+        if sshard is not None:
+            kw = dict(in_shardings=(sshard, None, None, None), out_shardings=(sshard, None), donate_argnums=(0,))
+        train_step = jax.jit(train_step, **kw)
+    return train_step, sshard, batch_shardings
+
+
+class Trainer:
+    """Minimal host loop: steps, periodic eval, plateau LR decay (paper)."""
+
+    def __init__(self, cfg, optimizer, train_iter, *, strat=stg.Strategy.SINGLE, mesh=None, specs=None, params=None, clip_norm=5.0, use_pipeline=False, seed=0):
+        shapes = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+        self.step_fn, self.sshard, self.batch_sh = make_train_step(
+            cfg, optimizer, strat=strat, mesh=mesh, specs=specs, params_shapes=shapes, clip_norm=clip_norm, use_pipeline=use_pipeline
+        )
+        self.state = init_train_state(params, optimizer)
+        if self.sshard is not None:
+            self.state = jax.device_put(self.state, self._patched_shard())
+        self.train_iter = train_iter
+        self.lr_scale = 1.0
+        self.rng = jax.random.key(seed)
+        self.history = []
+
+    def _patched_shard(self):
+        return _sgd_v_fix(self.sshard, self.state.opt_state)
+
+    def run(self, steps: int, log_every: int = 50, log=print):
+        import time
+
+        t0 = time.perf_counter()
+        tokens = 0.0
+        for i in range(steps):
+            batch = next(self.train_iter)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.rng, sub = jax.random.split(self.rng)
+            self.state, metrics = self.step_fn(self.state, batch, self.lr_scale, sub)
+            tokens += float(metrics["tokens"])
+            if (i + 1) % log_every == 0:
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.history.append({"step": i + 1, "loss": loss, "tok_per_s": tokens / dt})
+                log(f"step {i+1:5d}  loss {loss:.4f}  tok/s {tokens/dt:,.0f}  lr_scale {self.lr_scale:.3f}")
+        return self.state

@@ -1,0 +1,8 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real (single) device.  Multi-device tests spawn subprocesses or live in
+# test files that are explicitly skipped unless REPRO_MULTIDEV=1 is set by
+# the wrapper that forces the host device count.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,96 @@
+"""Attention substrate: chunked==dense, sliding window, GQA mapping,
+rolling cache, decode-vs-prefill equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+RNG = np.random.default_rng(1)
+
+
+def _arr(shape, dt=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dt)
+
+
+@pytest.mark.parametrize("window", [None, 48])
+@pytest.mark.parametrize("KV,G", [(2, 3), (4, 1), (1, 4)])
+def test_chunked_matches_dense(window, KV, G):
+    q = _arr((2, 128, KV, G, 16))
+    k = _arr((2, 128, KV, 16))
+    v = _arr((2, 128, KV, 16))
+    o1 = A.chunked_attention(q, k, v, causal=True, window=window, q_chunk=32, kv_chunk=32)
+    o2 = A.dense_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_flat_layout_matches_grouped():
+    """flat (KV'=H, G'=1, kv broadcast) == grouped computation."""
+    B, S, KV, G, D = 2, 64, 2, 4, 16
+    H = KV * G
+    qg = _arr((B, S, KV, G, D))
+    k = _arr((B, S, KV, D))
+    v = _arr((B, S, KV, D))
+    # flat view: head h = (kv * G + g) -> reshape grouped q
+    qf = qg.reshape(B, S, H, 1, D)
+    og = A.dense_attention(qg, k, v, causal=True)
+    of = A.dense_attention(qf, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(of.reshape(B, S, KV, G, D)), np.asarray(og), atol=1e-6)
+
+
+def test_decode_equals_dense_last_position():
+    B, S, KV, G, D = 2, 40, 2, 2, 16
+    q_all = _arr((B, S, KV, G, D))
+    k = _arr((B, S, KV, D))
+    v = _arr((B, S, KV, D))
+    full = A.dense_attention(q_all, k, v, causal=True)
+    got = A.decode_attention(q_all[:, -1:], k, v, jnp.asarray(S - 1))
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(full[:, -1]), atol=1e-5)
+
+
+def test_rolling_cache_window_semantics():
+    """A rolling buffer of size W must reproduce windowed attention."""
+    B, KV, G, D, W = 1, 1, 2, 8, 16
+    T = 40  # longer than the window -> buffer wraps
+    ks = _arr((B, T, KV, D))
+    vs = _arr((B, T, KV, D))
+    q = _arr((B, 1, KV, G, D))
+    cache_k = jnp.zeros((B, W, KV, D))
+    cache_v = jnp.zeros((B, W, KV, D))
+    for t in range(T):
+        cache_k, cache_v = A.cache_update(cache_k, cache_v, ks[:, t : t + 1], vs[:, t : t + 1], jnp.asarray(t), rolling=True)
+    got = A.decode_attention(q, cache_k, cache_v, jnp.asarray(T - 1), rolling=True)
+    ref = A.dense_attention(q, ks, vs, causal=True, window=W, q_offset=T - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def test_rope_partial_rotation_preserves_tail():
+    x = _arr((1, 8, 2, 16))
+    pos = jnp.arange(8)[None]
+    y = __import__("repro.models.common", fromlist=["x"]).apply_rope(x, pos, 1e4, partial=0.5)
+    np.testing.assert_allclose(np.asarray(y[..., 8:]), np.asarray(x[..., 8:]))
+    assert not np.allclose(np.asarray(y[..., :8]), np.asarray(x[..., :8]))
+
+
+def test_rope_relative_property():
+    """RoPE: <q_m, k_n> depends only on (m - n)."""
+    from repro.models.common import apply_rope
+
+    D = 32
+    q = _arr((1, 1, 1, D))
+    k = _arr((1, 1, 1, D))
+    def score(m, n):
+        qm = apply_rope(q, jnp.asarray([[m]]), 1e4)
+        kn = apply_rope(k, jnp.asarray([[n]]), 1e4)
+        return float(jnp.sum(qm * kn))
+
+    assert abs(score(5, 3) - score(10, 8)) < 1e-4
+    assert abs(score(5, 3) - score(6, 3)) > 1e-6
+
+
+def test_pick_chunk():
+    assert A.pick_chunk(1500, 1024) == 750
+    assert A.pick_chunk(4096, 1024) == 1024
+    assert A.pick_chunk(7, 4) == 1
+    assert A.pick_chunk(100, 1024) == 100

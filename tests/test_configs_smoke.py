@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture instantiates its REDUCED variant (<= 2 layer
+groups, d_model <= 256, <= 4 experts) and runs one forward/train step on
+CPU, asserting output shapes and the absence of NaNs.  The FULL configs are
+exercised only via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, supported_shapes
+from repro.models import seq2seq as s2s
+from repro.models import transformer as tfm
+
+B, S = 2, 32
+
+
+def _lm_batch(cfg, key):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    fe = None
+    if cfg.frontend:
+        fe = jax.random.normal(jax.random.fold_in(key, 1), (B, cfg.frontend_len, cfg.d_model), jnp.float32)
+    return toks, jnp.roll(toks, -1, 1), jnp.ones((B, S), bool), fe
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.key(0)
+    if cfg.family == "seq2seq":
+        params, _ = s2s.init_seq2seq(key, cfg)
+        batch = s2s.Seq2SeqBatch(
+            src=jax.random.randint(key, (B, 12), 0, cfg.vocab_size),
+            tgt_in=jax.random.randint(key, (B, 10), 0, cfg.vocab_size),
+            tgt_out=jax.random.randint(key, (B, 10), 0, cfg.vocab_size),
+            src_mask=jnp.ones((B, 12), bool),
+            tgt_mask=jnp.ones((B, 10), bool),
+        )
+
+        def loss_fn(p):
+            return s2s.forward(p, cfg, batch)[0]
+
+        loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+        assert jnp.isfinite(loss)
+        assert all(jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(grads))
+        return
+
+    params, specs = tfm.init_lm(key, cfg)
+    toks, labels, mask, fe = _lm_batch(cfg, key)
+
+    def loss_fn(p):
+        loss, extras = tfm.forward_train(p, cfg, toks, labels, mask, frontend_embeds=fe)
+        return loss, extras
+
+    (loss, extras), grads = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))(params)
+    assert jnp.isfinite(loss), arch
+    finite = [bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads)]
+    assert all(finite), f"{arch}: non-finite grads"
+    # spec tree mirrors the param tree
+    assert jax.tree.structure(jax.tree.map(lambda _: 0, params)) == jax.tree.structure(
+        jax.tree.map(lambda _: 0, specs, is_leaf=lambda s: isinstance(s, tuple))
+    )
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if get_config(a).family != "seq2seq"])
+def test_smoke_prefill_logits_shape(arch):
+    cfg = get_config(arch, smoke=True)
+    params, _ = tfm.init_lm(jax.random.key(0), cfg)
+    toks, _, _, fe = _lm_batch(cfg, jax.random.key(1))
+    logits, cache, memory = jax.jit(lambda p, t, f: tfm.forward_prefill(p, cfg, t, frontend_embeds=f))(params, toks, fe)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits))
+    assert int(cache.length) == S + (cfg.frontend_len if cfg.frontend == "vision" else 0)
+
+
+def test_supported_shapes_matrix():
+    """The assigned matrix: 10 archs x 4 shapes = 40, minus the whisper
+    long_500k skip documented in DESIGN.md."""
+    total = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        shapes = supported_shapes(cfg)
+        if cfg.family == "seq2seq":
+            continue  # the paper's own model is extra
+        if arch == "whisper-base":
+            assert "long_500k" not in shapes
+            assert len(shapes) == 3
+        else:
+            assert len(shapes) == 4, arch
+        total += len(shapes)
+    assert total == 39
+
+
+def test_param_counts_match_published():
+    expect = {
+        "qwen3-moe-235b-a22b": (235e9, 0.03),
+        "qwen3-moe-30b-a3b": (30.5e9, 0.05),
+        "qwen2-7b": (7.6e9, 0.05),
+        "jamba-v0.1-52b": (52e9, 0.05),
+        "internvl2-76b": (70e9, 0.10),  # LM backbone only (ViT stubbed)
+        "seq2seq-rnn": (138e6, 0.10),  # paper: 138M for HybridNMT
+    }
+    for arch, (n, tol) in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < tol, f"{arch}: {got:.3e} vs {n:.3e}"

@@ -1,0 +1,123 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as hst
+
+from repro.models import common, moe
+from repro.optim.optimizers import Adam, SGD, apply_updates, clip_by_global_norm
+
+SET = settings(max_examples=25, deadline=None)
+
+floats = hst.floats(min_value=-5, max_value=5, allow_nan=False, width=32)
+
+
+@SET
+@given(hst.integers(2, 6), hst.integers(2, 8), hst.integers(0, 2**31 - 1))
+def test_softmax_ce_bounds(b, v, seed):
+    """CE >= 0 and CE(uniform logits) == log V."""
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(b, 3, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, size=(b, 3)), jnp.int32)
+    loss, _ = common.softmax_cross_entropy(logits, labels)
+    assert float(loss) >= -1e-6
+    uniform = jnp.zeros((b, 3, v))
+    lu, _ = common.softmax_cross_entropy(uniform, labels)
+    assert abs(float(lu) - np.log(v)) < 1e-5
+
+
+@SET
+@given(hst.integers(1, 64), hst.integers(2, 16), hst.integers(1, 30), hst.integers(0, 2**31 - 1))
+def test_sorted_dispatch_conservation(n, groups, cap, seed):
+    """Every slot is either placed at a unique in-capacity position or
+    dropped; kept count == sum over groups of min(count, capacity)."""
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, groups, size=n), jnp.int32)
+    dest, keep = moe.sorted_dispatch(ids, groups, cap)
+    ids_np, dest_np, keep_np = map(np.asarray, (ids, dest, keep))
+    counts = np.bincount(ids_np, minlength=groups)
+    assert keep_np.sum() == np.minimum(counts, cap).sum()
+    for g in range(groups):
+        pos = dest_np[(ids_np == g) & keep_np]
+        assert len(np.unique(pos)) == len(pos)
+        assert (pos < cap).all() if len(pos) else True
+
+
+@SET
+@given(hst.integers(0, 2**31 - 1), hst.floats(0.1, 10.0))
+def test_clip_by_global_norm(seed, max_norm):
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.normal(size=(7, 3)), jnp.float32), "b": jnp.asarray(rng.normal(size=(5,)), jnp.float32)}
+    clipped, norm = clip_by_global_norm(g, max_norm)
+    out_norm = float(jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped))))
+    assert out_norm <= max_norm * (1 + 1e-4) or out_norm <= float(norm) + 1e-4
+
+
+@SET
+@given(hst.integers(0, 2**31 - 1))
+def test_adam_step_decreases_quadratic(seed):
+    """Adam on f(x)=||x||^2 moves toward 0 within a few steps."""
+    rng = np.random.default_rng(seed)
+    x = {"w": jnp.asarray(rng.normal(size=(6,)) + 0.5, jnp.float32)}
+    opt = Adam(lr=0.1)
+    st = opt.init(x)
+    f = lambda p: jnp.sum(p["w"] ** 2)
+    f0 = float(f(x))
+    for _ in range(12):
+        g = jax.grad(f)(x)
+        upd, st = opt.update(g, st, x)
+        x = apply_updates(x, upd)
+    assert float(f(x)) < f0
+
+
+@SET
+@given(hst.integers(2, 32), hst.integers(0, 2**31 - 1))
+def test_rms_norm_scale_invariance(d, seed):
+    """rms_norm(cx) == rms_norm(x) for c>0 (scale invariance)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(3, d)) + 0.1, jnp.float32)
+    s = jnp.ones((d,))
+    y1 = common.rms_norm(x, s)
+    y2 = common.rms_norm(3.7 * x, s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+@SET
+@given(hst.integers(1, 8), hst.integers(1, 6), hst.integers(0, 2**31 - 1))
+def test_token_accuracy_bounds(b, s, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(b, s, 11)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 11, size=(b, s)), jnp.int32)
+    acc = common.token_accuracy(logits, labels)
+    assert 0.0 <= float(acc) <= 1.0
+    perfect = jax.nn.one_hot(labels, 11) * 10.0
+    assert abs(float(common.token_accuracy(perfect, labels)) - 1.0) < 1e-6
+
+
+@SET
+@given(hst.integers(4, 64), hst.integers(0, 2**31 - 1))
+def test_chunked_ce_equals_flat(S, seed):
+    from repro.models.transformer import chunked_ce
+
+    rng = np.random.default_rng(seed)
+    S = (S // 4) * 4 or 4
+    x = jnp.asarray(rng.normal(size=(2, S, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 33)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 33, size=(2, S)), jnp.int32)
+    mask = jnp.asarray(rng.random((2, S)) > 0.3)
+    l1, d1 = chunked_ce(x, w, labels, mask, chunk=S // 4)
+    logits = common.unembed(w, x)
+    l2, d2 = common.softmax_cross_entropy(logits, labels, mask)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5, atol=1e-5)
+    assert float(d1) == float(d2)
+
+
+@SET
+@given(hst.integers(0, 2**31 - 1), hst.integers(1, 4))
+def test_hlo_shape_bytes_parser(seed, n):
+    from repro.launch.hlo_analysis import _shape_bytes
+
+    rng = np.random.default_rng(seed)
+    dims = rng.integers(1, 9, size=n)
+    s = f"f32[{','.join(map(str, dims))}]{{0}}"
+    assert _shape_bytes(s) == 4 * int(np.prod(dims))
