@@ -1,0 +1,21 @@
+"""Microbatch sweep (1, 2, 4) per strategy: predicted vs measured.
+
+Own module so ``--only micro`` runs the sweep without re-deriving the
+Table-3 rows; the logic lives next to the Table-3 analytics in
+``table3_scaling.microbatch_rows``.  For each (strategy, micro_batches):
+
+* **predicted**: the analytic ``scaling_factor_model`` at the paper's
+  4x V100 hardware point, with the microbatch-aware bubble
+  ``(k*L + D - 1)/(k*L*D)``, per-microbatch utilization ``rate(B/k)``,
+  and (for hybrid) per-microbatch head grad syncs — one exposed sync when
+  the overlapped (delayed-psum) schedule is on.
+* **measured**: wall-clock of the ACTUAL jit'd ExecutionPlan step at smoke
+  scale on this host (1 device), proving the schedule compiles and runs.
+"""
+from __future__ import annotations
+
+from benchmarks.table3_scaling import microbatch_rows
+
+
+def run():
+    return microbatch_rows()

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.hybrid import scaling_factor_model
+from repro.core.plan import ExecutionPlan
+from repro.core.strategy import Strategy
 from repro.data import MTBatchIterator, SyntheticMTTask
 from repro.models import seq2seq as s2s
 from repro.optim import adam
@@ -90,6 +92,49 @@ def measured_rows(steps: int = 6):
         tokens = float(m["tokens"])
         name = "hybridnmt" if not input_feeding else "baseline_if"
         rows.append((f"table3_step_{name}", round(dt * 1e6, 1), round(tokens / dt, 1), "src_tok/s proxy"))
+    return rows
+
+
+def microbatch_rows(ks=(1, 2, 4), steps: int = 4):
+    """Microbatch sweep (ExecutionPlan schedules): per (strategy, k) the
+    analytic model's predicted 4-GPU scaling factor at the paper hardware
+    point, next to the measured smoke-scale step time of the SAME schedule
+    on this host (1 device — wall clock demonstrates the harness; the
+    speedup claim is the analytic column's).  ``hybrid+overlap`` rows use
+    the delayed head-grad psum; predicted >= plain hybrid for k > 1."""
+    kw = dict(devices=4, batch=224, src_len=25, tgt_len=25, flops_per_sec=V100_FLOPS, link_bytes_per_sec=NVLINK_BW)
+    cfg_full = get_config("seq2seq-rnn")
+    cfg = dataclasses.replace(get_config("seq2seq-rnn", smoke=True), dropout=0.0)
+    params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    task = SyntheticMTTask(vocab_size=cfg.vocab_size, min_len=6, max_len=12)
+    it = MTBatchIterator(task, batch_size=16, buckets=(13,))
+    batch = {k_: jnp.asarray(v) for k_, v in next(it).items()}
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    variants = [
+        ("data", dict(strategy=Strategy.DATA), dict(strategy="data")),
+        ("model", dict(strategy=Strategy.MODEL, use_pipeline=True), dict(strategy="model")),
+        ("hybrid", dict(strategy=Strategy.HYBRID, use_pipeline=True), dict(strategy="hybrid")),
+        ("hybrid_overlap", dict(strategy=Strategy.HYBRID, overlap=True), dict(strategy="hybrid", overlap=True)),
+    ]
+    rows = []
+    for k in ks:
+        for name, plan_kw, model_kw in variants:
+            pred = scaling_factor_model(cfg_full, micro_batches=k, **model_kw, **kw)
+            plan = ExecutionPlan(mesh=mesh, micro_batches=k, **plan_kw)
+            step, _, _ = make_train_step(cfg, adam(), plan=plan)
+            st = init_train_state(params, adam())
+            st, m = step(st, batch, 1.0, jax.random.key(0))  # compile
+            t0 = time.perf_counter()
+            for i in range(steps):
+                st, m = step(st, batch, 1.0, jax.random.key(i))
+            jax.block_until_ready(m["loss"])
+            dt = (time.perf_counter() - t0) / steps
+            tok_s = float(m["tokens"]) / dt
+            rows.append(
+                (f"micro_sweep_{name}_k{k}", round(dt * 1e6, 1), round(pred, 2),
+                 f"predicted 4-dev factor; measured {tok_s:,.0f} tok/s")
+            )
     return rows
 
 

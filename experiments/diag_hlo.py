@@ -12,6 +12,7 @@ import argparse
 import jax
 
 from repro.configs import get_config, get_shape
+from repro.core import compat
 from repro.core.strategy import Strategy
 from repro.launch import hlo_analysis
 from repro.launch.dryrun import apply_variant, default_micro
@@ -43,7 +44,7 @@ def main():
         mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
         micro = args.micro if args.micro is not None else default_micro(args.arch, args.shape, args.mesh)
         fn, a = build_lowerable(cfg, shape, mesh, Strategy(args.strategy), micro_batches=micro, **build_kw)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             compiled = fn.lower(*a).compile()
         text = compiled.as_text()
     fallback = max(cfg.num_layers // cfg.layer_group, 1)

@@ -1,0 +1,44 @@
+"""Version compatibility shims for the jax APIs this repo uses.
+
+The codebase targets the modern spellings (``jax.shard_map``,
+``jax.set_mesh``, ``jax.lax.pcast``); on older jax (0.4.x) those live under
+``jax.experimental.shard_map`` / the ``Mesh`` context manager / nowhere
+(``check_rep=False`` replaces varying-marking).  Everything that touches a
+mesh goes through this module so the rest of the code reads as one idiom.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` on new jax; ``jax.experimental.shard_map`` (with
+    ``check_vma`` mapped to ``check_rep``) on 0.4.x."""
+    if _HAS_NEW_SHARD_MAP:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient: ``jax.set_mesh`` on new jax,
+    the ``Mesh`` object's own context manager on 0.4.x."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh if mesh is not None else contextlib.nullcontext()
+
+
+def pcast_varying(x, axis_names):
+    """Mark ``x`` as varying over ``axis_names`` inside shard_map.  On jax
+    without ``jax.lax.pcast`` the varying-manifest type system does not
+    exist (callers pass ``check_vma=False``), so this is the identity."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, tuple(axis_names), to="varying")
+    return x

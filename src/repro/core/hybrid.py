@@ -28,15 +28,26 @@ from repro.configs.base import ModelConfig
 @dataclass(frozen=True)
 class CommCost:
     """Per-step, per-device communication volume in bytes (fp32 grads,
-    activation dtype 2 bytes)."""
+    activation dtype 2 bytes).
+
+    ``overlap_hidden`` counts the bytes whose transfer executes UNDER
+    backbone compute (the delayed head-grad psum of every microbatch but
+    the last, when the plan's overlap flag is on): they still cross the
+    wire — ``total`` includes them — but ``exposed`` subtracts them, which
+    is the volume the step-time model should charge for."""
 
     grad_sync: float
     activation_reshard: float
     pipeline_hops: float
+    overlap_hidden: float = 0.0
 
     @property
     def total(self) -> float:
         return self.grad_sync + self.activation_reshard + self.pipeline_hops
+
+    @property
+    def exposed(self) -> float:
+        return self.total - self.overlap_hidden
 
 
 def seq2seq_param_split(cfg: ModelConfig) -> tuple[int, int]:
@@ -61,9 +72,16 @@ def strategy_comm_cost(
     tgt_len: int,
     grad_bytes: int = 4,
     act_bytes: int = 2,
+    micro_batches: int = 1,
+    overlap: bool = False,
 ) -> CommCost:
+    """``micro_batches`` > 1 syncs the hybrid head's grads once per
+    microbatch (the accumulation loop's per-micro all-reduce); ``overlap``
+    hides all but the last of those under the next microbatch's backbone
+    compute (reported via ``CommCost.overlap_hidden``)."""
     pb, ph = seq2seq_param_split(cfg)
     h = cfg.d_model
+    k = micro_batches
     ring = 2 * (devices - 1) / devices  # ring all-reduce factor
     hidden_vals = batch * (src_len + tgt_len) * h
     hop_vals = batch * (src_len + tgt_len) * h  # one hand-off per stage boundary
@@ -72,10 +90,12 @@ def strategy_comm_cost(
     if strategy == "model":
         return CommCost(grad_sync=0.0, activation_reshard=0.0, pipeline_hops=act_bytes * hop_vals)
     if strategy == "hybrid":
+        head_sync = k * ring * grad_bytes * ph
         return CommCost(
-            grad_sync=ring * grad_bytes * ph,
+            grad_sync=head_sync,
             activation_reshard=act_bytes * hidden_vals * (devices - 1) / devices,
             pipeline_hops=act_bytes * hop_vals,
+            overlap_hidden=head_sync * (k - 1) / k if overlap else 0.0,
         )
     if strategy == "hybrid_opt":
         # vocab-sharded head: no head grad all-reduce; reshard replaced by
@@ -120,6 +140,8 @@ def scaling_factor_model(
     base_batch: int = 64,
     batch_half_util: float = 64.0,
     sync_latency_per_array: float = 0.026,
+    micro_batches: int = 1,
+    overlap: bool = False,
 ) -> float:
     """Analytic Table-3 scaling factor vs the paper's 1-GPU baseline.
 
@@ -148,13 +170,27 @@ def scaling_factor_model(
     HYBRID runs the backbone as the wavefront and the head data-parallel
     on batch shards (lower ``rate(B/D)`` utilization, head-only sync, one
     activation reshard at link speed) — the paper's §3.2 schedule.
+
+    **Microbatching** (``micro_batches=k``, the ExecutionPlan schedule):
+
+    * the wavefront interleaves the k slices through ONE fill/drain —
+      bubble ``(k*L + D - 1)/(k*L*D)`` instead of ``(L + D - 1)/(L*D)``
+      per microbatch — but every per-tick GEMM now carries batch B/k, so
+      the utilization curve ``rate(B/k)`` pushes the other way;
+    * the hybrid head syncs its grads once per microbatch (k sync events);
+      ``overlap=True`` is the trainer's delayed psum — every sync but the
+      last executes under the next microbatch's backbone compute, so only
+      one sync event is exposed.  Hybrid-with-overlap therefore dominates
+      hybrid for every k > 1.
     """
     p_enc, p_dec, p_head = _param_groups(cfg, input_feeding)
     h = cfg.d_model
+    k = micro_batches
     rate = lambda B: flops_per_sec * B / (B + batch_half_util)
     F = lambda P, B, L: 6.0 * P * B * L  # fwd+bwd flops of group P over B x L tokens
     ring = 2 * (devices - 1) / devices
-    bubble = lambda L: (L + devices - 1) / (L * devices)
+    # microbatched wavefront: k*L token-steps share one (D-1)-tick fill/drain
+    bubble = lambda L: (k * L + devices - 1) / (k * L * devices)
 
     def sync_t(param_count: float, n_arrays: int) -> float:
         return ring * 4.0 * param_count / link_bytes_per_sec + n_arrays * sync_latency_per_array
@@ -169,26 +205,28 @@ def scaling_factor_model(
 
     if strategy == "data":
         Bd = batch / devices
-        t = (F(p_enc, Bd, src_len) + F(p_dec, Bd, tgt_len) + F(p_head, Bd, tgt_len)) / rate(Bd)
+        # grad accumulation: same total flops at microbatch-size utilization
+        t = (F(p_enc, Bd, src_len) + F(p_dec, Bd, tgt_len) + F(p_head, Bd, tgt_len)) / rate(Bd / k)
         t += sync_t(p_enc + p_dec + p_head, _num_sync_arrays(cfg))
     elif strategy == "model":
         # paper Fig. 2: layers on 3 GPUs, attention-softmax on the 4th, all
         # wavefronted; input-feeding serializes decoder + head.
         if input_feeding:
-            t = f_enc * bubble(src_len) / rate(batch) + (f_dec + f_head) / rate(batch)
+            t = f_enc * bubble(src_len) / rate(batch / k) + (f_dec + f_head) / rate(batch / k)
         else:
-            t = (f_enc * bubble(src_len) + (f_dec + f_head) * bubble(tgt_len)) / rate(batch)
+            t = (f_enc * bubble(src_len) + (f_dec + f_head) * bubble(tgt_len)) / rate(batch / k)
     elif strategy in ("hybrid", "hybrid_opt"):
         Bd = batch / devices
         if input_feeding:  # HybridNMTIF: decoder serial, head data-parallel per step
-            t_bb = f_enc * bubble(src_len) / rate(batch) + f_dec / rate(batch)
+            t_bb = f_enc * bubble(src_len) / rate(batch / k) + f_dec / rate(batch / k)
         else:  # HybridNMT: full wavefront backbone
-            t_bb = (f_enc * bubble(src_len) + f_dec * bubble(tgt_len)) / rate(batch)
+            t_bb = (f_enc * bubble(src_len) + f_dec * bubble(tgt_len)) / rate(batch / k)
         if strategy == "hybrid":
-            t_head = F(p_head, Bd, tgt_len) / rate(Bd)
-            t = t_bb + t_head + sync_t(p_head, 3) + reshard
+            t_head = F(p_head, Bd, tgt_len) / rate(Bd / k)
+            n_exposed_syncs = 1 if overlap else k
+            t = t_bb + t_head + n_exposed_syncs * sync_t(p_head, 3) + reshard
         else:  # beyond-paper: vocab-sharded head — no head sync, full-batch GEMMs
-            t = t_bb + f_head / devices / rate(batch) + reshard / 2
+            t = t_bb + f_head / devices / rate(batch / k) + reshard / 2
     else:
         raise ValueError(strategy)
     return (batch / base_batch) * t_base / t

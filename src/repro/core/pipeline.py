@@ -16,6 +16,15 @@ through this pipeline (the paper's §3.2): with input-feeding the first layer
 at t+1 needs the attention output at t, which lives after the last layer —
 the wavefront collapses to serial execution.  ``forward_input_feeding``
 therefore never uses this module.
+
+**Microbatch interleave** (DESIGN.md §1): with ``micro_batches=k`` the
+batch splits into k slices that enter the wavefront back-to-back —
+microbatch m's timestep t occupies global token-step ``u = m*S + t`` and
+stage s computes it at tick ``tau = s + u``.  Recurrent state resets at
+every ``t == 0`` (microbatches are independent batch slices), so the whole
+step runs in ``k*S + NS - 1`` ticks: ONE fill/drain for the step instead of
+the ``k*(S + NS - 1)`` a per-microbatch wavefront would pay.  The schedule
+arithmetic lives in :class:`repro.core.plan.WavefrontSchedule`.
 """
 from __future__ import annotations
 
@@ -24,7 +33,9 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import compat
 
 
 def stack_pipeline_params(layer_params: List[dict], num_stages: int):
@@ -57,26 +68,42 @@ def pipeline_lstm(
     *,
     in_dim: int,
     model_axis: str = "model",
+    micro_batches: int = 1,
 ):
     """Run a stacked LSTM over ``x`` [B, S, in_dim] in wavefront order.
 
     ``stacked``: output of :func:`stack_pipeline_params` (leading [NS, Lp]).
+    ``micro_batches=k`` splits the batch into k slices interleaved through
+    ONE wavefront (k*S + NS - 1 ticks — fill/drain paid once per step).
     Returns hidden states of the top layer, [B, S, H].
     """
-    num_stages = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
+    from repro.core.plan import WavefrontSchedule
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    num_stages = sizes[model_axis]
     batch_axes = tuple(a for a in mesh.axis_names if a != model_axis)
     B, S, _ = x.shape
+    dsz = 1
+    for a in batch_axes:
+        dsz *= sizes[a]
+    k = micro_batches
+    if B % (dsz * k):
+        raise ValueError(f"batch {B} not divisible by batch shards x micro_batches = {dsz} x {k}")
     hidden = stacked["wh"].shape[2]
     in_max = stacked["wx"].shape[2]
     if in_dim < in_max:  # zero-pad the embedded inputs to the padded wx rows
         x = jnp.pad(x, ((0, 0), (0, 0), (0, in_max - in_dim)))
-    TT = S + num_stages - 1
+    sched = WavefrontSchedule(seq_len=S, num_stages=num_stages, micro_batches=k)
+    TT = sched.ticks
+    assert TT == k * S + num_stages - 1  # one fill/drain per STEP, not per microbatch
 
     def stage_fn(w, xloc):
         wx, wh, b = w["wx"][0], w["wh"][0], w["b"][0]  # [Lp, in_max, 4, H], [Lp, H, 4, H], [Lp, 4, H]
         Lp = wx.shape[0]
         stage = jax.lax.axis_index(model_axis)
         B_loc = xloc.shape[0]
+        B_mb = B_loc // k
+        xmb = xloc.reshape(k, B_mb, S, in_max)
         dt = xloc.dtype
         perm = [(i, i + 1) for i in range(num_stages - 1)]
 
@@ -95,44 +122,60 @@ def pipeline_lstm(
             return h, c
 
         def tick(carry, tau):
-            h, c, left = carry  # h,c [Lp, B, H] fp32; left [B, H] from prev stage
-            t = tau - stage
-            valid = ((t >= 0) & (t < S))[None, None]
-            tc = jnp.clip(t, 0, S - 1)
-            x_t = jax.lax.dynamic_index_in_dim(xloc, tc, axis=1, keepdims=False)
+            h, c, left = carry  # h,c [Lp, B_mb, H] fp32; left [B_mb, H] from prev stage
+            u = tau - stage  # global token-step: microbatch m = u // S, timestep t = u % S
+            valid = ((u >= 0) & (u < k * S))[None, None]
+            uc = jnp.clip(u, 0, k * S - 1)
+            m, t = uc // S, uc % S
+            x_m = jax.lax.dynamic_index_in_dim(xmb, m, axis=0, keepdims=False)
+            x_t = jax.lax.dynamic_index_in_dim(x_m, t, axis=1, keepdims=False)
+            # microbatches are independent slices: recurrent state resets at t == 0
+            h_in = jnp.where(t == 0, jnp.zeros_like(h), h)
+            c_in = jnp.where(t == 0, jnp.zeros_like(c), c)
             # stage 0 layer 0 input: the embedded token; other stages: handoff
             first_in = jnp.where(stage == 0, x_t, jnp.pad(left, ((0, 0), (0, in_max - hidden))))
             cur = first_in
             hs, cs = [], []
             for l in range(Lp):
-                hl, cl = cell(l, cur, h[l], c[l])
+                hl, cl = cell(l, cur, h_in[l], c_in[l])
                 hl = jnp.where(valid, hl, h[l])
                 cl = jnp.where(valid, cl, c[l])
                 hs.append(hl)
                 cs.append(cl)
                 cur = hl.astype(dt)
-            top = cur  # [B, H] this stage's output at tick tau
+            top = cur  # [B_mb, H] this stage's output at tick tau
             nxt_left = jax.lax.ppermute(top, model_axis, perm)
             return (jnp.stack(hs), jnp.stack(cs), nxt_left), top
 
-        vary = lambda a: jax.lax.pcast(a, tuple(mesh.axis_names), to="varying")
-        h0 = vary(jnp.zeros((Lp, B_loc, hidden), jnp.float32))
-        c0 = vary(jnp.zeros((Lp, B_loc, hidden), jnp.float32))
-        left0 = vary(jnp.zeros((B_loc, hidden), dt))
+        vary = lambda a: compat.pcast_varying(a, mesh.axis_names)
+        h0 = vary(jnp.zeros((Lp, B_mb, hidden), jnp.float32))
+        c0 = vary(jnp.zeros((Lp, B_mb, hidden), jnp.float32))
+        left0 = vary(jnp.zeros((B_mb, hidden), dt))
         _, tops = jax.lax.scan(tick, (h0, c0, left0), jnp.arange(TT))
-        return tops  # [TT, B_loc, H]
+        # stage s's valid outputs occupy ticks [s, s + k*S); un-interleave the
+        # microbatches locally so the batch order matches the input shard's.
+        window = jax.lax.dynamic_slice_in_dim(tops, stage, k * S, axis=0)  # [k*S, B_mb, H]
+        out = window.reshape(k, S, B_mb, hidden).transpose(0, 2, 1, 3).reshape(B_loc, S, hidden)
+        return out[None]  # [1, B_loc, S, H]
 
+    # Pin the stacked params replicated BEFORE the shard_map boundary.  When
+    # the stacking (jnp.stack of the per-layer trees) is traced inside the
+    # surrounding jit — the pipeline_backbone training path — GSPMD on jax
+    # 0.4.x mispartitions the producing concatenate against the shard_map's
+    # model-sharded operand spec and silently cross-sums the stages; an
+    # explicit replicated constraint restores the documented layout (the
+    # per-layer params ARE replicated) and the boundary reshard.
+    stacked = jax.tree.map(
+        lambda a: jax.lax.with_sharding_constraint(a, NamedSharding(mesh, P())), stacked
+    )
     in_specs = (
         jax.tree.map(lambda _: P(model_axis), stacked),
         P(batch_axes if batch_axes else None, None, None),
     )
-    out_specs = P(model_axis, batch_axes if batch_axes else None, None)
-    tops = jax.shard_map(stage_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)(stacked, x)
-    # tops: [NS*TT, B, H]; the last stage's outputs for t in [0, S) sit at
-    # rows (NS-1)*TT + (NS-1) + t.
-    start = (num_stages - 1) * TT + (num_stages - 1)
-    hs = jax.lax.dynamic_slice_in_dim(tops, start, S, axis=0)  # [S, B, H]
-    return hs.swapaxes(0, 1)
+    out_specs = P(model_axis, batch_axes if batch_axes else None, None, None)
+    outs = compat.shard_map(stage_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)(stacked, x)
+    # outs [NS, B, S, H]: only the last stage's row carries the top layer.
+    return outs[num_stages - 1]
 
 
 def batch_shard_backbone(mesh: Mesh, batch_axes: tuple, dropout: float = 0.0):
@@ -164,18 +207,19 @@ def batch_shard_backbone(mesh: Mesh, batch_axes: tuple, dropout: float = 0.0):
                     r = jax.random.fold_in(r, jax.lax.axis_index(a))
             return lstm_mod.run_stacked_lstm(pl, xl, dropout_rng=r, dropout=dropout)[0]
 
-        return jax.shard_map(body, mesh=mesh, in_specs=(pspec, xspec), out_specs=xspec, check_vma=False)(layer_params, xs)
+        return compat.shard_map(body, mesh=mesh, in_specs=(pspec, xspec), out_specs=xspec, check_vma=False)(layer_params, xs)
 
     return run
 
 
-def pipeline_backbone(mesh: Mesh, model_axis: str = "model"):
+def pipeline_backbone(mesh: Mesh, model_axis: str = "model", micro_batches: int = 1):
     """Adapter for ``seq2seq.forward_no_input_feeding(backbone=...)``: runs
-    the stacked-LSTM encoder/decoder through the wavefront pipeline."""
+    the stacked-LSTM encoder/decoder through the wavefront pipeline (with
+    ``micro_batches`` slices interleaved through one fill/drain)."""
 
     def run(layer_params, xs, rng):  # rng unused: no dropout inside the pipeline
         del rng
         stacked, in_max = stack_pipeline_params(layer_params, dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis])
-        return pipeline_lstm(mesh, stacked, xs, in_dim=xs.shape[-1], model_axis=model_axis)
+        return pipeline_lstm(mesh, stacked, xs, in_dim=xs.shape[-1], model_axis=model_axis, micro_batches=micro_batches)
 
     return run

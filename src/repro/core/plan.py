@@ -1,0 +1,233 @@
+"""ExecutionPlan: one object that owns *how* a training step executes.
+
+Before this module the execution decisions were smeared across three layers:
+``core/strategy.py`` resolved shardings, ``core/pipeline.py`` hard-coded the
+wavefront schedule, and ``train/trainer.py`` re-derived batch splitting and
+the accumulation loop from loose kwargs (strat, mesh, micro_batches,
+use_pipeline).  An :class:`ExecutionPlan` binds all of it once —
+
+    (strategy, mesh, pipeline stages, microbatch count, overlap flags)
+
+— and owns batch splitting, sharding specs, and the step schedule.  The
+trainer, the launchers (``launch/train.py`` / ``launch/dryrun.py``), and the
+benchmarks all consume the plan instead of re-deriving pieces of it.
+
+Microbatch placement (DESIGN.md §1):
+
+* **Pipelined backbone** (``use_pipeline`` and a MODEL/HYBRID mesh): the k
+  microbatches are *interleaved inside one wavefront* — consecutive
+  microbatches enter the pipeline back-to-back, so the (NS-1)-tick
+  fill/drain bubble is paid once per step instead of once per microbatch
+  (GPipe's schedule applied to the paper's layer-per-device LSTM pipeline).
+  One forward/backward covers the whole batch; the trainer does NOT also
+  scan (``accum_steps == 1``).
+* **Non-pipelined**: ``micro_batches`` becomes the classic gradient
+  accumulation scan (the activation-memory lever), and ``overlap`` delays
+  the hybrid head's grad all-reduce by one microbatch so it executes under
+  the next microbatch's backbone compute (trainer's delayed-psum loop).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import strategy as stg
+
+
+@dataclass(frozen=True)
+class WavefrontSchedule:
+    """Clock-tick accounting of the microbatched wavefront.
+
+    With NS stages and k microbatches of sequence length S, microbatch m's
+    timestep t occupies global token-step ``u = m*S + t``; stage s computes
+    u at tick ``tau = s + u``.  Total ticks ``k*S + NS - 1`` — one fill and
+    one drain for the whole step, vs ``k*(S + NS - 1)`` when each microbatch
+    pays its own bubble (the naive accumulation-over-pipeline schedule).
+    """
+
+    seq_len: int
+    num_stages: int
+    micro_batches: int = 1
+
+    def __post_init__(self):
+        if self.seq_len < 1 or self.num_stages < 1 or self.micro_batches < 1:
+            raise ValueError(f"degenerate schedule {self}")
+
+    @property
+    def ticks(self) -> int:
+        return self.micro_batches * self.seq_len + self.num_stages - 1
+
+    @property
+    def naive_ticks(self) -> int:
+        """Ticks if every microbatch ran its own fill/drain."""
+        return self.micro_batches * (self.seq_len + self.num_stages - 1)
+
+    @property
+    def fill_drain_ticks(self) -> int:
+        return self.num_stages - 1
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Fraction of ticks any stage spends idle (fill + drain)."""
+        return self.fill_drain_ticks / self.ticks
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    strategy: stg.Strategy
+    mesh: Optional[Mesh] = None
+    micro_batches: int = 1
+    overlap: bool = False
+    use_pipeline: bool = False
+    model_axis: str = "model"
+
+    def __post_init__(self):
+        object.__setattr__(self, "strategy", stg.Strategy(self.strategy))
+        if self.micro_batches < 1:
+            raise ValueError(f"micro_batches must be >= 1, got {self.micro_batches}")
+        if self.overlap and self.pipelined:
+            # the pipelined schedule runs ONE fwd/bwd (head grads sync once),
+            # so there is no per-microbatch sync to delay — reject rather
+            # than silently compile a program where the flag did nothing
+            raise ValueError(
+                "overlap applies to the accumulation schedule; a pipelined plan "
+                "interleaves its microbatches inside one wavefront fwd/bwd"
+            )
+
+    # -- derived structure --------------------------------------------------
+
+    @property
+    def pipelined(self) -> bool:
+        """Whether the wavefront pipeline backbone is active."""
+        return (
+            self.use_pipeline
+            and self.mesh is not None
+            and self.strategy in (stg.Strategy.MODEL, stg.Strategy.HYBRID)
+        )
+
+    @property
+    def num_stages(self) -> int:
+        if not self.pipelined:
+            return 1
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[self.model_axis]
+
+    @property
+    def accum_steps(self) -> int:
+        """Microbatches handled by the trainer's accumulation scan.  When the
+        backbone is pipelined the microbatches interleave inside the
+        wavefront instead (one fwd/bwd; bubble amortized) so the trainer
+        must not also scan."""
+        return 1 if self.pipelined else self.micro_batches
+
+    def wavefront(self, seq_len: int) -> WavefrontSchedule:
+        return WavefrontSchedule(
+            seq_len=seq_len,
+            num_stages=self.num_stages,
+            micro_batches=self.micro_batches if self.pipelined else 1,
+        )
+
+    # -- sharding specs (delegated to core.strategy, bound to this plan) ----
+
+    def batch_spec(self) -> P:
+        return stg.batch_spec(self.strategy, self.mesh)
+
+    def batch_shard_size(self) -> int:
+        """Product of mesh axis sizes the batch dim is sharded over."""
+        if self.mesh is None:
+            return 1
+        bs = self.batch_spec()
+        if not bs:
+            return 1
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        axes = bs[0] if isinstance(bs[0], tuple) else (bs[0],)
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        return n
+
+    def validate_batch(self, global_batch: int) -> None:
+        if global_batch % self.micro_batches:
+            raise ValueError(
+                f"global batch {global_batch} not divisible by micro_batches={self.micro_batches}"
+            )
+        dsz = self.batch_shard_size()
+        # when the batch cannot shard evenly at all, input_specs falls back
+        # to replicated inputs and GSPMD handles it — only reject the case
+        # where sharding works but the micro slices would break it
+        if global_batch % dsz == 0 and global_batch % (dsz * self.micro_batches):
+            raise ValueError(
+                f"global batch {global_batch} not divisible by batch shards x "
+                f"micro_batches = {dsz} x {self.micro_batches}"
+            )
+
+    def phase_boundary(self) -> Callable:
+        return stg.phase_boundary_fn(self.strategy, self.mesh)
+
+    def param_shardings(self, specs: Any, shapes: Any) -> Any:
+        return stg.param_shardings(specs, shapes, self.mesh, self.strategy)
+
+    def batch_shardings(self, batch: dict) -> Optional[dict]:
+        if self.mesh is None:
+            return None
+        bs = self.batch_spec()
+        return {
+            k: NamedSharding(self.mesh, P(*bs, *([None] * (v.ndim - 1))))
+            for k, v in batch.items()
+        }
+
+    # -- batch splitting ----------------------------------------------------
+
+    def split_micro(self, batch: Any) -> Any:
+        """[B, ...] -> [accum_steps, B/accum, ...] for the accumulation scan.
+        The reshape keeps the per-micro batch dim on the batch sharding and
+        leaves the scan axis unsharded (index-slicing the sharded dim makes
+        GSPMD gather + replicate the compute — verified, 8x flops)."""
+        k = self.accum_steps
+        bspec = self.batch_spec()
+
+        def resh(x):
+            y = x.reshape(k, x.shape[0] // k, *x.shape[1:])
+            if self.mesh is not None:
+                spec = P(None, *bspec, *([None] * (x.ndim - 1)))
+                y = jax.lax.with_sharding_constraint(y, NamedSharding(self.mesh, spec))
+            return y
+
+        return jax.tree.map(resh, batch)
+
+    # -- backbone selection -------------------------------------------------
+
+    def backbone(self, cfg, *, batch_backbone: bool = False) -> Optional[Callable]:
+        """The stacked-LSTM executor this plan prescribes for the seq2seq
+        backbone (None = the plain scan inside the jit)."""
+        from repro.core import pipeline as pl  # local: avoid import cycle
+
+        if self.pipelined:
+            return pl.pipeline_backbone(
+                self.mesh, model_axis=self.model_axis, micro_batches=self.micro_batches
+            )
+        if batch_backbone and self.mesh is not None:
+            # batch over ALL axes: the paper's hand-off already spreads the
+            # hidden states over every device for the head phase, so the
+            # backbone uses the same full-batch sharding (no redundant
+            # compute on model ranks, no forward collectives at all).
+            return pl.batch_shard_backbone(self.mesh, stg.all_axes(self.mesh), dropout=cfg.dropout)
+        return None
+
+    # -- head/backbone split (overlapped grad sync) -------------------------
+
+    @staticmethod
+    def split_head(tree: dict) -> tuple[dict, dict]:
+        """Partition a top-level param/grad dict into (head, backbone) per
+        ``strategy.HEAD_KEYS`` — the paper's data-parallel attention-softmax
+        part vs the model-parallel backbone."""
+        head = {k: v for k, v in tree.items() if k in stg.HEAD_KEYS}
+        body = {k: v for k, v in tree.items() if k not in stg.HEAD_KEYS}
+        return head, body
+
+    @staticmethod
+    def merge_head(head: dict, body: dict) -> dict:
+        return {**head, **body}

@@ -22,6 +22,7 @@ import traceback
 import jax
 
 from repro.configs import ARCH_IDS, get_config, get_shape, supported_shapes
+from repro.core import compat
 from repro.core.strategy import Strategy
 from repro.launch import hlo_analysis
 from repro.launch.inputs import build_lowerable
@@ -106,7 +107,7 @@ def apply_variant(cfg, variant: str | None, strategy: str | None = None):
     return cfg, dict(v.get("build", {}))
 
 
-def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: str | None, *, micro: int | None = None, tag: str = "", variant: str | None = None, save_hlo: bool = True):
+def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: str | None, *, micro: int | None = None, overlap: bool = False, tag: str = "", variant: str | None = None, save_hlo: bool = True):
     cfg, build_kw = apply_variant(get_config(arch), variant, strategy)
     shape = get_shape(shape_name)
     multi = mesh_kind == "multipod"
@@ -116,14 +117,16 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: 
     if micro is None:
         micro = default_micro(arch, shape_name, mesh_kind)
     t0 = time.perf_counter()
-    fn, args = build_lowerable(cfg, shape, mesh, strat, micro_batches=micro, **build_kw)
-    with jax.set_mesh(mesh):
+    fn, args = build_lowerable(cfg, shape, mesh, strat, micro_batches=micro, overlap=overlap, **build_kw)
+    with compat.set_mesh(mesh):
         lowered = fn.lower(*args)
         t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
         t_compile = time.perf_counter() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [per-program dict]
+        cost = cost[0] if cost else {}
     text = compiled.as_text()
     if out_dir and save_hlo:
         import gzip
@@ -151,6 +154,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: 
         "mesh": mesh_kind,
         "strategy": strategy,
         "micro_batches": micro,
+        "overlap": overlap,
         "chips": chips,
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),
@@ -222,6 +226,7 @@ def main():
     ap.add_argument("--strategy", default="hybrid_opt", choices=[s.value for s in Strategy])
     ap.add_argument("--all", action="store_true", help="run every supported (arch x shape)")
     ap.add_argument("--micro", type=int, default=None)
+    ap.add_argument("--overlap", action="store_true", help="overlap the hybrid head grad sync across microbatches")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--tag", default="")
     ap.add_argument("--variant", default=None, choices=sorted(VARIANTS))
@@ -248,7 +253,7 @@ def main():
                 print(f"[dryrun] skip existing {fname}", flush=True)
                 continue
             try:
-                run_one(arch, shape, mesh_kind, args.strategy, args.out, micro=args.micro, tag=args.tag, variant=args.variant)
+                run_one(arch, shape, mesh_kind, args.strategy, args.out, micro=args.micro, overlap=args.overlap, tag=args.tag, variant=args.variant)
             except Exception as e:  # noqa: BLE001 — report and continue the sweep
                 failures.append((arch, shape, mesh_kind, repr(e)))
                 print(f"[dryrun] FAIL {arch} x {shape} x {mesh_kind}: {e}", flush=True)

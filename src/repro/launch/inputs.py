@@ -22,6 +22,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import strategy as stg
+from repro.core.plan import ExecutionPlan
 from repro.models import transformer as tfm
 from repro.optim import adam
 from repro.serve import engine as serve_engine
@@ -123,28 +124,33 @@ def build_lowerable(
     micro_batches: int = 1,
     remat: bool = True,
     use_pipeline: bool = False,
+    overlap: bool = False,
     pin_residual: bool = False,
     batch_backbone: bool = False,
     q_chunk: int = 128,
 ) -> Tuple[Any, tuple]:
     """Returns (jitted_fn, args) such that jitted_fn.lower(*args) is the
-    production step for this (arch x shape x mesh x strategy)."""
+    production step for this (arch x shape x mesh x strategy).  Train steps
+    go through an :class:`ExecutionPlan` binding (strategy, mesh,
+    micro_batches, overlap, pipeline)."""
     init_fn = (lambda k, c: __import__("repro.models.seq2seq", fromlist=["x"]).init_seq2seq(k, c)) if cfg.family == "seq2seq" else (lambda k, c: tfm.init_lm(k, c))
     shapes, specs = abstract_init(cfg, init_fn)
     data = input_specs(cfg, shape, mesh, strat)
 
     if shape.kind == "train":
         optimizer = adam()
+        plan = ExecutionPlan(
+            strategy=strat, mesh=mesh, micro_batches=micro_batches,
+            overlap=overlap, use_pipeline=use_pipeline,
+        )
+        plan.validate_batch(shape.global_batch)
         step_fn, sshard, _ = trainer_mod.make_train_step(
             cfg,
             optimizer,
-            strat=strat,
-            mesh=mesh,
+            plan=plan,
             specs=specs,
             params_shapes=shapes,
             remat=remat,
-            micro_batches=micro_batches,
-            use_pipeline=use_pipeline,
             pin_residual=pin_residual,
             batch_backbone=batch_backbone,
             jit=False,

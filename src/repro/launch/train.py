@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_IDS, get_config
+from repro.core.plan import ExecutionPlan
 from repro.core.strategy import Strategy
 from repro.data import LMBatchIterator, MTBatchIterator, SyntheticLMTask, SyntheticMTTask
 from repro.models import seq2seq as s2s
@@ -38,7 +39,9 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--optimizer", choices=("adam", "sgd"), default="adam")
     ap.add_argument("--input-feeding", action="store_true", help="seq2seq baseline variant")
-    ap.add_argument("--pipeline", action="store_true", help="wavefront pipeline backbone (needs mesh)")
+    ap.add_argument("--pipeline", action="store_true", help="wavefront pipeline backbone")
+    ap.add_argument("--micro-batches", type=int, default=1, help="microbatches per step (interleaved through the wavefront when --pipeline, grad accumulation otherwise)")
+    ap.add_argument("--overlap", action="store_true", help="overlap the hybrid head grad sync with the next microbatch's backbone")
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -58,6 +61,18 @@ def main():
 
         mesh = make_test_mesh()
     strat = Strategy(args.strategy)
+    if args.pipeline and mesh is None:
+        # a trivial (1, 1) mesh so --pipeline --smoke exercises the real
+        # wavefront code path (one stage) on a single-device host
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plan = ExecutionPlan(
+        strategy=strat, mesh=mesh, micro_batches=args.micro_batches,
+        overlap=args.overlap, use_pipeline=args.pipeline,
+    )
+    plan.validate_batch(args.batch)
+    if args.pipeline and not plan.pipelined:
+        print(f"warning: --pipeline has no effect for strategy={strat.value} "
+              f"(wavefront needs model/hybrid); microbatches run as grad accumulation")
 
     key = jax.random.key(args.seed)
     if cfg.family == "seq2seq":
@@ -72,11 +87,14 @@ def main():
         dev_it = lambda: LMBatchIterator(task, batch_size=args.batch, seq_len=args.seq, seed=999)
 
     opt = adam(lr=args.lr) if args.optimizer == "adam" else sgd(lr=args.lr)
-    trainer = Trainer(cfg, opt, it, strat=strat, mesh=mesh, specs=specs, params=params, use_pipeline=args.pipeline, seed=args.seed)
+    trainer = Trainer(cfg, opt, it, plan=plan, specs=specs, params=params, seed=args.seed)
 
     sched = PlateauDecay()
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"arch={cfg.name} params={n_params/1e6:.1f}M strategy={strat.value} mesh={args.mesh}")
+    print(
+        f"arch={cfg.name} params={n_params/1e6:.1f}M strategy={strat.value} mesh={args.mesh} "
+        f"micro_batches={args.micro_batches} pipeline={plan.pipelined} overlap={args.overlap}"
+    )
     chunk = max(args.eval_every, args.steps if not args.eval_every else args.eval_every)
     done = 0
     while done < args.steps:

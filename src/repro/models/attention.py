@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import compat
 from repro.models import common
 from repro.models.common import Initializer
 
@@ -270,7 +271,7 @@ def attend_shard_map(
     # leave it unused and every model-rank computes its (replicated) batch
     # shard — the same fallback GSPMD would pick, minus the guesswork.
     fn = partial(chunked_attention, causal=causal, window=window, q_chunk=q_chunk, kv_chunk=kv_chunk)
-    return jax.shard_map(fn, mesh=mesh, in_specs=(qspec, kvspec, kvspec), out_specs=qspec, check_vma=False)(q, k, v)
+    return compat.shard_map(fn, mesh=mesh, in_specs=(qspec, kvspec, kvspec), out_specs=qspec, check_vma=False)(q, k, v)
 
 
 # ---------------------------------------------------------------------------

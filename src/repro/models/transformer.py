@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import compat
 from repro.models import attention as attn
 from repro.models import common, mlp, moe, ssm, xlstm
 from repro.models.common import Initializer
@@ -211,7 +212,7 @@ def _ffn(p_block, cfg: ModelConfig, x, ctx: RunCtx):
             return fn(pl, xl)
 
         pm = p_block["moe"]
-        y2, aux = jax.shard_map(
+        y2, aux = compat.shard_map(
             shard_fn,
             mesh=ctx.mesh,
             in_specs=(P(tok_axes, None), P(None, None), P(ctx.ep_axis), P(ctx.ep_axis), P(ctx.ep_axis)),

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import compat
 from repro.models.common import Initializer
 from repro.models.scan_utils import chunked_scan
 
@@ -230,7 +231,7 @@ def apply_slstm_shard_map(mesh, p, cfg: ModelConfig, x: jax.Array, batch_axes: t
         y, _ = apply_slstm(pl, cfg, xl, None)
         return y
 
-    y = jax.shard_map(body, mesh=mesh, in_specs=(pspec, xspec), out_specs=xspec, check_vma=False)(p, x)
+    y = compat.shard_map(body, mesh=mesh, in_specs=(pspec, xspec), out_specs=xspec, check_vma=False)(p, x)
     return y, None
 
 

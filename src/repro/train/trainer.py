@@ -1,11 +1,13 @@
-"""Strategy-aware training step factory + a small host-side Trainer loop.
+"""ExecutionPlan-driven training step factory + a small host-side Trainer.
 
-``make_train_step`` builds the jit'd step for any (architecture, strategy,
-mesh).  All sharding decisions come from ``repro.core.strategy``; the
-optimizer state inherits the parameter shardings leaf-for-leaf, and the
-batch is sharded per the strategy's batch spec.  The paper's hybrid phase
-switch enters through ``phase_boundary_fn`` (and for the seq2seq MODEL /
-HYBRID strategies, optionally the wavefront pipeline backbone).
+``make_train_step`` builds the jit'd step for any (architecture, plan).
+The :class:`repro.core.plan.ExecutionPlan` owns every execution decision —
+sharding specs, batch splitting, the microbatch schedule, and the overlap
+flags; legacy keyword arguments (strat / mesh / micro_batches /
+use_pipeline) are still accepted and folded into a plan for older call
+sites.  The paper's hybrid phase switch enters through the plan's
+``phase_boundary`` (and for the seq2seq MODEL / HYBRID strategies,
+optionally the microbatch-interleaved wavefront pipeline backbone).
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import strategy as stg
-from repro.core.pipeline import pipeline_backbone
+from repro.core.plan import ExecutionPlan
 from repro.models import seq2seq as s2s
 from repro.models import transformer as tfm
 from repro.optim.optimizers import OptState, apply_updates, clip_by_global_norm
@@ -50,19 +52,11 @@ def _sgd_v_fix(shardings, opt_state):
     return shardings._replace(opt_state=shardings.opt_state._replace(v=shardings.opt_state.step))
 
 
-def make_loss_fn(cfg: ModelConfig, strat: stg.Strategy, mesh: Optional[Mesh], *, use_pipeline: bool = False, remat: bool = True, pin_residual: bool = False, batch_backbone: bool = False):
-    pb = stg.phase_boundary_fn(strat, mesh)
+def make_loss_fn(cfg: ModelConfig, plan: ExecutionPlan, *, remat: bool = True, pin_residual: bool = False, batch_backbone: bool = False):
+    strat, mesh = plan.strategy, plan.mesh
+    pb = plan.phase_boundary()
     if cfg.family == "seq2seq":
-        backbone = None
-        if use_pipeline and mesh is not None and strat in (stg.Strategy.MODEL, stg.Strategy.HYBRID):
-            backbone = pipeline_backbone(mesh)
-        elif batch_backbone and mesh is not None:
-            from repro.core.pipeline import batch_shard_backbone
-            # batch over ALL axes: the paper's hand-off already spreads the
-            # hidden states over every device for the head phase, so the
-            # backbone uses the same full-batch sharding (no redundant
-            # compute on model ranks, no forward collectives at all).
-            backbone = batch_shard_backbone(mesh, stg.all_axes(mesh), dropout=cfg.dropout)
+        backbone = plan.backbone(cfg, batch_backbone=batch_backbone)
 
         def loss_fn(params, batch, rng):
             b = s2s.Seq2SeqBatch(
@@ -109,10 +103,73 @@ def make_loss_fn(cfg: ModelConfig, strat: stg.Strategy, mesh: Optional[Mesh], *,
     return loss_fn
 
 
+def make_grad_fn(cfg: ModelConfig, plan: ExecutionPlan, *, remat: bool = True, pin_residual: bool = False, batch_backbone: bool = False):
+    """(params, batch, rng) -> (loss, extras, grads) under the plan's
+    microbatch schedule.
+
+    * ``plan.accum_steps == 1`` (single batch, or a pipelined plan whose
+      microbatches interleave inside ONE wavefront): one fwd/bwd.
+    * otherwise: the global batch reshapes to [micro, B/micro, ...] and a
+      ``lax.scan`` accumulates grads (one micro slice of activations live
+      at a time).  Index-slicing the sharded batch dim instead makes GSPMD
+      gather + replicate the compute — verified, 8x flops.
+    * ``plan.overlap``: the hybrid head's grads are folded into the
+      accumulator one microbatch LATE — the all-reduce that materializes
+      microbatch i's (replicated) head grads is not needed until iteration
+      i+1 consumes them, so it executes under i+1's backbone compute (the
+      delayed psum at the paper's phase boundary).  The final sum is
+      identical; only the reduction order moves.
+    """
+    loss_fn = make_loss_fn(cfg, plan, remat=remat, pin_residual=pin_residual, batch_backbone=batch_backbone)
+    accum = plan.accum_steps
+
+    def grads_of(params, batch, rng):
+        if accum == 1:
+            (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch, rng)
+            return loss, extras, grads
+
+        xs = plan.split_micro(batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        if not plan.overlap:
+            def body(carry, mb):
+                acc, loss_acc, denom_acc, i = carry
+                (loss, extras), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb, jax.random.fold_in(rng, i))
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + loss, denom_acc + extras["denom"], i + 1), None
+
+            (gsum, loss_sum, denom, _), _ = jax.lax.scan(body, (zeros, 0.0, 0.0, 0), xs)
+            grads = jax.tree.map(lambda g: (g / accum).astype(jnp.float32), gsum)
+            return loss_sum / accum, {"denom": denom}, grads
+
+        head0, body0 = ExecutionPlan.split_head(zeros)
+
+        def body(carry, mb):
+            acc_head, acc_body, pending, loss_acc, denom_acc, i = carry
+            (loss, extras), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb, jax.random.fold_in(rng, i))
+            g_head, g_body = ExecutionPlan.split_head(g)
+            acc_body = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc_body, g_body)
+            # fold in microbatch i-1's head grads: their all-reduce ran
+            # under THIS microbatch's backbone compute
+            acc_head = jax.tree.map(lambda a, b: a + b, acc_head, pending)
+            pending = jax.tree.map(lambda x: x.astype(jnp.float32), g_head)
+            return (acc_head, acc_body, pending, loss_acc + loss, denom_acc + extras["denom"], i + 1), None
+
+        carry0 = (head0, body0, head0, 0.0, 0.0, 0)
+        (acc_head, acc_body, pending, loss_sum, denom, _), _ = jax.lax.scan(body, carry0, xs)
+        acc_head = jax.tree.map(lambda a, b: a + b, acc_head, pending)  # last microbatch's sync is exposed
+        gsum = ExecutionPlan.merge_head(acc_head, acc_body)
+        grads = jax.tree.map(lambda g: (g / accum).astype(jnp.float32), gsum)
+        return loss_sum / accum, {"denom": denom}, grads
+
+    return grads_of
+
+
 def make_train_step(
     cfg: ModelConfig,
     optimizer,
     *,
+    plan: Optional[ExecutionPlan] = None,
     strat: stg.Strategy = stg.Strategy.SINGLE,
     mesh: Optional[Mesh] = None,
     specs=None,
@@ -121,49 +178,24 @@ def make_train_step(
     use_pipeline: bool = False,
     remat: bool = True,
     micro_batches: int = 1,
+    overlap: bool = False,
     pin_residual: bool = False,
     batch_backbone: bool = False,
     jit: bool = True,
 ):
     """Returns (train_step, state_shardings, batch_sharding_fn).
 
-    ``micro_batches`` > 1 enables gradient accumulation: the global batch is
-    split along dim 0 into micro slices processed by a ``lax.scan`` (one
-    layer-sweep of activations live at a time) and grads are averaged before
-    the single optimizer update — the standard activation-memory lever for
-    the biggest assigned architectures (see EXPERIMENTS.md §Perf)."""
-    loss_fn = make_loss_fn(cfg, strat, mesh, use_pipeline=use_pipeline, remat=remat, pin_residual=pin_residual, batch_backbone=batch_backbone)
-
-    def grads_of(params, batch, rng):
-        if micro_batches == 1:
-            (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch, rng)
-            return loss, extras, grads
-
-        # Reshape [B, ...] -> [micro, B/micro, ...] and let scan consume the
-        # (unsharded) leading axis; the per-micro batch dim keeps the batch
-        # sharding.  (Index-slicing the sharded batch dim instead makes
-        # GSPMD gather + replicate the compute — verified, 8x flops.)
-        bspec = stg.batch_spec(strat, mesh)
-
-        def resh(x):
-            y = x.reshape(micro_batches, x.shape[0] // micro_batches, *x.shape[1:])
-            if mesh is not None:
-                spec = P(None, *bspec, *([None] * (x.ndim - 1)))
-                y = jax.lax.with_sharding_constraint(y, NamedSharding(mesh, spec))
-            return y
-
-        xs = jax.tree.map(resh, batch)
-
-        def body(carry, mb):
-            acc, loss_acc, denom_acc, i = carry
-            (loss, extras), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb, jax.random.fold_in(rng, i))
-            acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
-            return (acc, loss_acc + loss, denom_acc + extras["denom"], i + 1), None
-
-        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        (gsum, loss_sum, denom, _), _ = jax.lax.scan(body, (zeros, 0.0, 0.0, 0), xs)
-        grads = jax.tree.map(lambda g: (g / micro_batches).astype(jnp.float32), gsum)
-        return loss_sum / micro_batches, {"denom": denom}, grads
+    ``plan`` carries every execution decision; when omitted, one is built
+    from the legacy (strat, mesh, micro_batches, overlap, use_pipeline)
+    kwargs.  See :func:`make_grad_fn` for how the plan's microbatch
+    schedule is realized."""
+    if plan is None:
+        plan = ExecutionPlan(
+            strategy=strat, mesh=mesh, micro_batches=micro_batches,
+            overlap=overlap, use_pipeline=use_pipeline,
+        )
+    strat, mesh = plan.strategy, plan.mesh
+    grads_of = make_grad_fn(cfg, plan, remat=remat, pin_residual=pin_residual, batch_backbone=batch_backbone)
 
     def train_step(state: TrainState, batch, lr_scale, rng):
         loss, extras, grads = grads_of(state.params, batch, rng)
@@ -180,12 +212,7 @@ def make_train_step(
         sshard = state_shardings(specs, params_shapes, mesh, strat)
 
     def batch_shardings(batch: dict):
-        if mesh is None:
-            return None
-        bs = stg.batch_spec(strat, mesh)
-        return {
-            k: NamedSharding(mesh, P(*bs, *([None] * (v.ndim - 1)))) for k, v in batch.items()
-        }
+        return plan.batch_shardings(batch)
 
     if jit:
         kw = {}
@@ -198,10 +225,10 @@ def make_train_step(
 class Trainer:
     """Minimal host loop: steps, periodic eval, plateau LR decay (paper)."""
 
-    def __init__(self, cfg, optimizer, train_iter, *, strat=stg.Strategy.SINGLE, mesh=None, specs=None, params=None, clip_norm=5.0, use_pipeline=False, seed=0):
+    def __init__(self, cfg, optimizer, train_iter, *, plan=None, strat=stg.Strategy.SINGLE, mesh=None, specs=None, params=None, clip_norm=5.0, use_pipeline=False, seed=0):
         shapes = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
         self.step_fn, self.sshard, self.batch_sh = make_train_step(
-            cfg, optimizer, strat=strat, mesh=mesh, specs=specs, params_shapes=shapes, clip_norm=clip_norm, use_pipeline=use_pipeline
+            cfg, optimizer, plan=plan, strat=strat, mesh=mesh, specs=specs, params_shapes=shapes, clip_norm=clip_norm, use_pipeline=use_pipeline
         )
         self.state = init_train_state(params, optimizer)
         if self.sshard is not None:

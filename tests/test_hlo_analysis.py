@@ -80,7 +80,9 @@ def test_collectives_bucketed_by_type():
     def f(a):
         return jax.lax.psum(a, "x")
 
-    fn = jax.shard_map(f, mesh=mesh, in_specs=jax.sharding.PartitionSpec("x"), out_specs=jax.sharding.PartitionSpec())
+    from repro.core import compat
+
+    fn = compat.shard_map(f, mesh=mesh, in_specs=jax.sharding.PartitionSpec("x"), out_specs=jax.sharding.PartitionSpec(), check_vma=False)
     t = jax.jit(fn).lower(SDS((16, 16), jnp.float32)).compile().as_text()
     s = analyze_hlo(t)
     # single-device psum may compile away; the parser must at least not crash

@@ -1,6 +1,7 @@
 """Multi-device tests: run in a subprocess with a forced 8-device host so
 the main pytest process keeps its single-device view (per the brief)."""
 import json
+import math
 import os
 import subprocess
 import sys
@@ -28,6 +29,7 @@ PREAMBLE = textwrap.dedent(
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs import get_config
     from repro.core import strategy as st
+    from repro.core import compat
     """
 )
 
@@ -73,7 +75,7 @@ def test_pipeline_equals_sequential_and_grad():
         params, _ = lstm.init_stacked_lstm(ini, "enc", L, e, h)
         x = jax.random.normal(jax.random.key(1), (B, S, e), jnp.float32)
         ref = np.array(lstm.run_stacked_lstm(params, x)[0])
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             stacked, _ = pl.stack_pipeline_params(params, 4)  # 2 layers / stage
             out = np.array(jax.jit(lambda st_, xx: pl.pipeline_lstm(mesh, st_, xx, in_dim=e))(stacked, x))
             g = jax.jit(jax.grad(lambda st_: pl.pipeline_lstm(mesh, st_, x, in_dim=e).sum()))(stacked)
@@ -84,6 +86,104 @@ def test_pipeline_equals_sequential_and_grad():
     res = _run(code)
     assert res["err"] < 1e-5
     assert res["gsum"] > 0
+
+
+def test_pipeline_microbatched_wavefront_matches_sequential():
+    """micro_batches=k interleaves k slices through ONE wavefront on a real
+    4-stage pipeline: outputs/grads match the sequential reference and the
+    traced scan runs exactly k*S + NS - 1 ticks (bubble paid once per step,
+    not once per microbatch)."""
+    code = PREAMBLE + textwrap.dedent(
+        """
+        from repro.models import lstm
+        from repro.models.common import Initializer
+        from repro.core import pipeline as pl
+        from repro.core.plan import WavefrontSchedule
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        ini = Initializer(jax.random.key(0))
+        L, e, h, B, S = 8, 24, 32, 8, 13
+        params, _ = lstm.init_stacked_lstm(ini, "enc", L, e, h)
+        x = jax.random.normal(jax.random.key(1), (B, S, e), jnp.float32)
+        ref = np.array(lstm.run_stacked_lstm(params, x)[0])
+
+        def scan_lengths(obj, out):
+            jaxpr = getattr(obj, "jaxpr", obj)
+            for eqn in jaxpr.eqns:
+                if eqn.primitive.name == "scan":
+                    out.append(eqn.params["length"])
+                for v in eqn.params.values():
+                    vs = v if isinstance(v, (tuple, list)) else (v,)
+                    for u in vs:
+                        if hasattr(u, "eqns") or hasattr(u, "jaxpr"):
+                            scan_lengths(u, out)
+            return out
+
+        res = {}
+        with compat.set_mesh(mesh):
+            stacked, _ = pl.stack_pipeline_params(params, 4)  # 2 layers / stage
+            for k in (2, 4):
+                fn = lambda st_, xx: pl.pipeline_lstm(mesh, st_, xx, in_dim=e, micro_batches=k)
+                out = np.array(jax.jit(fn)(stacked, x))
+                g = jax.jit(jax.grad(lambda st_: fn(st_, x).sum()))(stacked)
+                lengths = scan_lengths(jax.make_jaxpr(fn)(stacked, x), [])
+                sched = WavefrontSchedule(seq_len=S, num_stages=4, micro_batches=k)
+                res[k] = {
+                    "err": float(np.abs(out - ref).max()),
+                    "gsum": float(jnp.abs(g["wx"]).sum()),
+                    "ticks_ok": int(lengths.count(sched.ticks) == 1),
+                    "naive_absent": int(sched.naive_ticks not in lengths),
+                }
+        print(json.dumps(res))
+        """
+    )
+    res = _run(code)
+    for k, r in res.items():
+        assert r["err"] < 1e-5, (k, r)
+        assert r["gsum"] > 0, (k, r)
+        assert r["ticks_ok"] == 1, (k, r)  # ONE wavefront of k*S + NS - 1 ticks
+        assert r["naive_absent"] == 1, (k, r)
+
+
+def test_train_step_plan_microbatched_pipeline_runs_sharded():
+    """End-to-end: a jit'd hybrid train step under ExecutionPlan(pipeline,
+    micro_batches=2, overlap) on the (2, 4) mesh — losses finite and equal
+    to the plain single-batch hybrid step."""
+    code = PREAMBLE + textwrap.dedent(
+        """
+        import dataclasses
+        from repro.core.plan import ExecutionPlan
+        from repro.models import seq2seq as S
+        from repro.optim import adam
+        from repro.train.trainer import init_train_state, make_train_step
+        # model axis of 2: the smoke config's 2 LSTM layers -> 1 layer/stage;
+        # fp32 so differently-lowered schedules agree to 1e-3 (bf16 ulp ~0.03)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        cfg = dataclasses.replace(get_config("seq2seq-rnn", smoke=True), dropout=0.0, dtype="float32")
+        params, specs = S.init_seq2seq(jax.random.key(0), cfg)
+        B, M, N = 16, 12, 10
+        batch = {
+            "src": jax.random.randint(jax.random.key(1), (B, M), 3, cfg.vocab_size),
+            "tgt_in": jax.random.randint(jax.random.key(2), (B, N), 3, cfg.vocab_size),
+            "tgt_out": jax.random.randint(jax.random.key(3), (B, N), 3, cfg.vocab_size),
+            "src_mask": jnp.ones((B, M), bool), "tgt_mask": jnp.ones((B, N), bool)}
+        losses = {}
+        with compat.set_mesh(mesh):
+            for name, plan in [
+                ("ref", ExecutionPlan(strategy=st.Strategy.HYBRID, mesh=mesh)),
+                ("pipe_k2", ExecutionPlan(strategy=st.Strategy.HYBRID, mesh=mesh, micro_batches=2, use_pipeline=True)),
+                ("accum_k2_ov", ExecutionPlan(strategy=st.Strategy.HYBRID, mesh=mesh, micro_batches=2, overlap=True)),
+            ]:
+                step, _, _ = make_train_step(cfg, adam(), plan=plan)
+                stt = init_train_state(params, adam())
+                stt, m = step(stt, batch, 1.0, jax.random.key(0))
+                losses[name] = float(m["loss"])
+        print(json.dumps(losses))
+        """
+    )
+    losses = _run(code)
+    vals = list(losses.values())
+    assert all(math.isfinite(v) for v in vals), losses
+    assert max(vals) - min(vals) < 1e-3, losses
 
 
 def test_hybrid_full_forward_backward_transformer():
@@ -142,7 +242,7 @@ def test_moe_ep_equals_global_when_capacity_ample():
             pl = {"router": router, "w1": w1, "wg": wg, "w2": w2}
             return moe.apply_moe_ep(pl, xl, m, "silu", axis="model",
                                     stat_axes=("data", "model"))
-        y_ep, aux_ep = jax.jit(jax.shard_map(
+        y_ep, aux_ep = jax.jit(compat.shard_map(
             shard_fn, mesh=mesh,
             in_specs=(P(("data", "model"), None), P(None, None), P("model"), P("model"), P("model")),
             out_specs=(P(("data", "model"), None), P())))(x, p["router"], p["w1"], p["wg"], p["w2"])
@@ -166,7 +266,7 @@ def test_pinned_prefill_matches_unpinned():
         cfg = get_config("glm4-9b", smoke=True)
         params, _ = T.init_lm(jax.random.key(0), cfg)
         toks = jax.random.randint(jax.random.key(1), (4, 256), 0, cfg.vocab_size)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             base = prefill_fn(cfg, strat=st.Strategy.HYBRID, mesh=mesh)(params, toks)[0]
             pinned = prefill_fn(cfg, strat=st.Strategy.HYBRID, mesh=mesh,
                                 pin_residual=True, q_chunk=64)(params, toks)[0]
@@ -200,7 +300,7 @@ def test_slstm_shard_map_matches_plain_with_grads():
             return xlstm.apply_slstm(pp, cfg, x)[0].sum()
         def loss_sm(pp):
             return xlstm.apply_slstm_shard_map(mesh, pp, cfg, x, ("data", "model"))[0].sum()
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             l1, g1 = jax.jit(jax.value_and_grad(loss_plain))(p)
             l2, g2 = jax.jit(jax.value_and_grad(loss_sm))(p)
         gerr = max(float(jnp.abs(a - b).max()) for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
@@ -231,7 +331,7 @@ def test_batch_shard_backbone_matches_plain_loss_and_grads():
             tgt_out=jax.random.randint(jax.random.key(3), (B, N), 0, cfg.vocab_size),
             src_mask=jnp.ones((B, M), bool), tgt_mask=jnp.ones((B, N), bool))
         bb = batch_shard_backbone(mesh, ("data", "model"))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             l1, g1 = jax.jit(jax.value_and_grad(lambda p: S.forward(p, cfg, batch)[0]))(params)
             l2, g2 = jax.jit(jax.value_and_grad(lambda p: S.forward(p, cfg, batch, backbone=bb)[0]))(params)
         gerr = max(float(jnp.abs(a - b).max()) for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
@@ -274,14 +374,14 @@ def test_attend_shard_map_flat_layout_falls_back_batch_only():
         k = jax.random.normal(jax.random.key(1), (B, S, KV, D), jnp.float32)
         v = jax.random.normal(jax.random.key(2), (B, S, KV, D), jnp.float32)
         ref = A.chunked_attention(q, k, v, causal=True, q_chunk=32, kv_chunk=32)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             got = jax.jit(lambda q, k, v: A.attend_shard_map(
                 mesh, q, k, v, causal=True, q_chunk=32, kv_chunk=32))(q, k, v)
         err = float(jnp.abs(got - ref).max())
         # grouped layout for comparison: KV=4 divides nothing, G=2... use H=8 grouped
         q2 = q.reshape(B, S, KV, H // KV, D)
         ref2 = A.chunked_attention(q2, k, v, causal=True, q_chunk=32, kv_chunk=32)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             got2 = jax.jit(lambda q, k, v: A.attend_shard_map(
                 mesh, q, k, v, causal=True, q_chunk=32, kv_chunk=32))(q2, k, v)
         err2 = float(jnp.abs(got2 - ref2).max())

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as hst
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
 
 from repro.models import common, moe
 from repro.optim.optimizers import Adam, SGD, apply_updates, clip_by_global_norm
