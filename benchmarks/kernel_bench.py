@@ -1,9 +1,13 @@
-"""Kernel micro-bench: interpret-mode allclose + host timing of the jnp
-oracle at paper-relevant shapes (the Pallas kernels themselves target TPU;
-on this CPU container the oracle timing is the meaningful number and the
-kernel is validated for correctness at reduced shapes).
+"""Per-kernel fused-vs-ref sweep: for each kernel and shape, time the
+fused Pallas entry point next to the jnp oracle and report parity error.
 
-CSV: name,us_per_call,derived (derived = max |err| vs oracle).
+On this CPU container the fused path runs through the Pallas interpreter
+(python-evaluated kernel body — its wall clock measures the interpreter,
+not the TPU kernel), so fused timings use reduced shapes and the oracle is
+timed at paper-relevant shapes; on a TPU host the same sweep times the
+real compiled kernels.  Rows share the shape of the other benchmark
+modules (``name,us_per_call,derived,notes`` with derived = max |err| vs
+oracle) so ``benchmarks/run.py`` aggregates them unchanged.
 """
 from __future__ import annotations
 
@@ -17,7 +21,8 @@ RNG = np.random.default_rng(0)
 
 
 def _time(fn, *args, iters=3):
-    fn(*args)  # compile
+    out = fn(*args)  # compile / warm the interpreter
+    jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -25,67 +30,106 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _err(a, b):
+    return float(jnp.abs(jnp.asarray(a, jnp.float32) - jnp.asarray(b, jnp.float32)).max())
+
+
+def _f32(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, jnp.float32)
+
+
+def _sweep(name, shapes, make_args, fused, ref, rows):
+    """One row per (path, shape): oracle timed at every shape, the fused
+    interpret path timed at the reduced ones (big shapes would measure
+    minutes of python interpreter, not kernel)."""
+    for tag, shape_kw, time_fused in shapes:
+        args, fused_kw = make_args(**shape_kw)
+        us_ref = _time(jax.jit(ref), *args)
+        o_ref = ref(*args)
+        o_fused = fused(*args, **fused_kw)
+        err = max(_err(a, b) for a, b in zip(jax.tree.leaves(o_fused), jax.tree.leaves(o_ref)))
+        rows.append((f"kernel_{name}_ref_{tag}", round(us_ref, 1), err, "jnp oracle"))
+        if time_fused:
+            us_fused = _time(lambda *a: fused(*a, **fused_kw), *args)
+            rows.append((f"kernel_{name}_fused_{tag}", round(us_fused, 1), err, "pallas interpret (CPU) / compiled (TPU)"))
+
+
 def run():
     rows = []
-    # LSTM cell: paper dims (batch 224/4 stages, hidden 1024) oracle timing
+
     from repro.kernels.lstm_cell.ops import lstm_cell_fused
     from repro.kernels.lstm_cell.ref import lstm_cell_ref
 
-    B, In, H = 56, 1024, 1024
-    args = (
-        jnp.asarray(RNG.normal(size=(B, In)), jnp.float32),
-        jnp.asarray(RNG.normal(size=(B, H)), jnp.float32),
-        jnp.asarray(RNG.normal(size=(B, H)), jnp.float32),
-        jnp.asarray(RNG.normal(size=(In, 4, H)) * 0.05, jnp.float32),
-        jnp.asarray(RNG.normal(size=(H, 4, H)) * 0.05, jnp.float32),
-        jnp.asarray(RNG.normal(size=(4, H)) * 0.05, jnp.float32),
-    )
-    us = _time(jax.jit(lstm_cell_ref), *args)
-    x, h0, c0, wx, wh, b = args
-    small = (x[:8, :128], h0[:8, :128], c0[:8, :128], wx[:128, :, :128], wh[:128, :, :128], b[:, :128])
-    h1, c1 = lstm_cell_fused(*small, block_b=8, block_h=128)
-    h2, c2 = lstm_cell_ref(*small)
-    err = float(jnp.abs(h1 - h2).max())
-    rows.append(("kernel_lstm_cell", round(us, 1), err, f"oracle @B{B} H{H}; kernel validated interpret"))
+    def lstm_args(B, In, H, bb, bh):
+        return (
+            _f32((B, In)), _f32((B, H)), _f32((B, H)),
+            _f32((In, 4, H), 0.05), _f32((H, 4, H), 0.05), _f32((4, H), 0.05),
+        ), dict(block_b=bb, block_h=bh)
 
-    # Luong attention head at paper dims
+    _sweep(
+        "lstm_cell",
+        [
+            ("B8_H128", dict(B=8, In=128, H=128, bb=8, bh=128), True),
+            ("B56_H1024", dict(B=56, In=1024, H=1024, bb=56, bh=256), False),  # paper dims: B/stages=56
+        ],
+        lstm_args, lstm_cell_fused, lstm_cell_ref, rows,
+    )
+
     from repro.kernels.luong_attn.ops import luong_attention_fused
     from repro.kernels.luong_attn.ref import luong_attention_ref
 
-    Bh, N, M, h = 16, 25, 25, 1024
-    Hm = jnp.asarray(RNG.normal(size=(Bh, N, h)), jnp.float32)
-    Sm = jnp.asarray(RNG.normal(size=(Bh, M, h)), jnp.float32)
-    mask = jnp.ones((Bh, M), bool)
-    wa = jnp.asarray(RNG.normal(size=(h, h)) * 0.03, jnp.float32)
-    wc = jnp.asarray(RNG.normal(size=(2 * h, h)) * 0.03, jnp.float32)
-    us = _time(jax.jit(lambda *a: luong_attention_ref(*a)), Hm, Sm, mask, wa, wc[:h], wc[h:])
-    o1 = luong_attention_fused(Hm[:2, :8], Sm[:2], mask[:2], wa, wc, block_n=8)
-    o2 = luong_attention_ref(Hm[:2, :8], Sm[:2], mask[:2], wa, wc[:h], wc[h:])
-    rows.append(("kernel_luong_attn", round(us, 1), float(jnp.abs(o1 - o2).max()), f"oracle @B{Bh} N{N} M{M} h{h}"))
+    def luong_args(B, N, M, h, bn):
+        wc = _f32((2 * h, h), 0.03)
+        a = (_f32((B, N, h)), _f32((B, M, h)), jnp.ones((B, M), bool), _f32((h, h), 0.03), wc)
+        return a, dict(block_n=bn)
 
-    # Flash attention
+    def luong_ref(H, S, mask, wa, wc):
+        h = H.shape[-1]
+        return luong_attention_ref(H, S, mask, wa, wc[:h], wc[h:])
+
+    _sweep(
+        "luong_attn",
+        [
+            ("B2_N8_h128", dict(B=2, N=8, M=12, h=128, bn=8), True),
+            ("B16_N25_h1024", dict(B=16, N=25, M=25, h=1024, bn=128), False),  # paper head dims
+        ],
+        luong_args, luong_attention_fused, luong_ref, rows,
+    )
+
     from repro.kernels.flash_attn.ops import flash_attention
     from repro.models.attention import chunked_attention
 
-    q = jnp.asarray(RNG.normal(size=(1, 1024, 2, 2, 64)), jnp.bfloat16)
-    k = jnp.asarray(RNG.normal(size=(1, 1024, 2, 64)), jnp.bfloat16)
-    v = jnp.asarray(RNG.normal(size=(1, 1024, 2, 64)), jnp.bfloat16)
-    us = _time(jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True, q_chunk=256, kv_chunk=256)), q, k, v)
-    o1 = flash_attention(q[:, :128], k[:, :128], v[:, :128], causal=True, block_q=64, block_kv=64)
-    o2 = chunked_attention(q[:, :128], k[:, :128], v[:, :128], causal=True, q_chunk=64, kv_chunk=64)
-    rows.append(("kernel_flash_attn", round(us, 1), float(jnp.abs(o1.astype(jnp.float32) - o2.astype(jnp.float32)).max()), "oracle @S1024"))
+    def flash_args(B, S, KV, G, D, bq, bkv):
+        return (
+            _f32((B, S, KV, G, D)), _f32((B, S, KV, D)), _f32((B, S, KV, D)),
+        ), dict(causal=True, block_q=bq, block_kv=bkv)
 
-    # MoE grouped GEMM
+    def flash_ref(q, k, v):
+        return chunked_attention(q, k, v, causal=True, q_chunk=256, kv_chunk=256)
+
+    _sweep(
+        "flash_attn",
+        [
+            ("S128_D32", dict(B=1, S=128, KV=2, G=1, D=32, bq=64, bkv=64), True),
+            ("S1024_D64", dict(B=1, S=1024, KV=2, G=2, D=64, bq=512, bkv=512), False),
+        ],
+        flash_args, flash_attention, flash_ref, rows,
+    )
+
     from repro.kernels.moe_gemm.ops import moe_gemm_fused
     from repro.kernels.moe_gemm.ref import moe_gemm_ref
 
-    E, C, d, F = 8, 256, 512, 768
-    x = jnp.asarray(RNG.normal(size=(E, C, d)), jnp.bfloat16)
-    w1 = jnp.asarray(RNG.normal(size=(E, d, F)) * 0.05, jnp.bfloat16)
-    wg = jnp.asarray(RNG.normal(size=(E, d, F)) * 0.05, jnp.bfloat16)
-    w2 = jnp.asarray(RNG.normal(size=(E, F, d)) * 0.05, jnp.bfloat16)
-    us = _time(jax.jit(moe_gemm_ref), x, w1, wg, w2)
-    o1 = moe_gemm_fused(x[:2, :16], w1[:2], wg[:2], w2[:2], block_c=16, block_f=256)
-    o2 = moe_gemm_ref(x[:2, :16], w1[:2], wg[:2], w2[:2])
-    rows.append(("kernel_moe_gemm", round(us, 1), float(jnp.abs(o1.astype(jnp.float32) - o2.astype(jnp.float32)).max()), f"oracle @E{E} C{C}"))
+    def moe_args(E, C, d, F, bc, bf):
+        return (
+            _f32((E, C, d)), _f32((E, d, F), 0.05), _f32((E, d, F), 0.05), _f32((E, F, d), 0.05),
+        ), dict(block_c=bc, block_f=bf)
+
+    _sweep(
+        "moe_gemm",
+        [
+            ("E2_C16", dict(E=2, C=16, d=64, F=96, bc=16, bf=48), True),
+            ("E8_C256", dict(E=8, C=256, d=512, F=768, bc=256, bf=256), False),
+        ],
+        moe_args, moe_gemm_fused, moe_gemm_ref, rows,
+    )
     return rows

@@ -5,10 +5,19 @@ The codebase targets the modern spellings (``jax.shard_map``,
 ``jax.experimental.shard_map`` / the ``Mesh`` context manager / nowhere
 (``check_rep=False`` replaces varying-marking).  Everything that touches a
 mesh goes through this module so the rest of the code reads as one idiom.
+
+The same goes for Pallas: ``kernels/*`` build every ``pallas_call`` /
+``BlockSpec`` / ref load through the ``pallas_*`` shims below instead of
+touching ``jax.experimental.pallas`` directly, so kernel code stays pinned
+to one spelling while the shims absorb the API drift between jax 0.4.x
+and current jax (BlockSpec argument order, ``interpret=`` plumbing, and
+the 0.4.x interpret-mode crash on python-int ref indices).
 """
 from __future__ import annotations
 
 import contextlib
+import functools
+import inspect
 
 import jax
 
@@ -33,6 +42,135 @@ def set_mesh(mesh):
     if hasattr(jax, "set_mesh"):
         return jax.set_mesh(mesh)
     return mesh if mesh is not None else contextlib.nullcontext()
+
+
+# --------------------------------------------------------------------------
+# Pallas: kernels/* route pallas_call / BlockSpec / ref loads through these
+# shims (mirroring how the mesh code above routes shard_map/set_mesh).
+# --------------------------------------------------------------------------
+
+
+@functools.cache
+def _pl():
+    from jax.experimental import pallas as pl
+
+    return pl
+
+
+@functools.cache
+def _blockspec_new_order() -> bool:
+    """jax >= 0.4.31 spells ``BlockSpec(block_shape, index_map)``; earlier
+    0.4.x had the arguments swapped (``BlockSpec(index_map, block_shape)``)."""
+    params = list(inspect.signature(_pl().BlockSpec.__init__).parameters)
+    return params[1] == "block_shape"
+
+
+def pallas_block_spec(block_shape, index_map=None):
+    """``pl.BlockSpec`` with the argument order this jax expects."""
+    pl = _pl()
+    if _blockspec_new_order():
+        return pl.BlockSpec(block_shape, index_map)
+    return pl.BlockSpec(index_map, block_shape)
+
+
+@functools.cache
+def _pallas_call_kwargs() -> frozenset:
+    return frozenset(inspect.signature(_pl().pallas_call).parameters)
+
+
+def pallas_call(kernel, *, grid, in_specs, out_specs, out_shape, interpret=False, **kwargs):
+    """``pl.pallas_call`` with grid/spec construction normalized.
+
+    ``in_specs``/``out_specs`` entries may be ``(block_shape, index_map)``
+    tuples (built into BlockSpecs here, with version-correct argument
+    order) or ready-made BlockSpecs.  ``interpret`` is dropped if this jax
+    no longer accepts it (newer jax interprets via pl.force_* contexts)."""
+    pl = _pl()
+
+    def is_pair(s):  # (block_shape, index_map) shorthand for one BlockSpec
+        return isinstance(s, tuple) and len(s) == 2 and isinstance(s[0], tuple) and (s[1] is None or callable(s[1]))
+
+    def spec(s):
+        return pallas_block_spec(*s) if is_pair(s) else s
+
+    in_specs = [spec(s) for s in in_specs]
+    out_specs = spec(out_specs) if is_pair(out_specs) else (
+        [spec(s) for s in out_specs] if isinstance(out_specs, (list, tuple)) else spec(out_specs)
+    )
+    if "interpret" in _pallas_call_kwargs():
+        kwargs["interpret"] = interpret
+        return pl.pallas_call(
+            kernel, grid=grid, in_specs=in_specs, out_specs=out_specs, out_shape=out_shape, **kwargs
+        )
+    call = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs, out_shape=out_shape, **kwargs
+    )
+    if not interpret:
+        return call
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        force = pltpu.force_tpu_interpret_mode
+    except (ImportError, AttributeError) as e:
+        raise NotImplementedError(
+            "this jax accepts neither pallas_call(interpret=...) nor provides "
+            "pltpu.force_tpu_interpret_mode — extend compat.pallas_call"
+        ) from e
+
+    def interpreted(*args, **kw):
+        with force():
+            return call(*args, **kw)
+
+    return interpreted
+
+
+def pallas_dslice(start, size):
+    return _pl().dslice(start, size)
+
+
+def pallas_load(ref, idx):
+    """``pl.load`` tolerating python-int indices.
+
+    jax 0.4.x interpret mode crashes discharging a load whose NDIndexer
+    carries a raw int (``'int' object has no attribute 'shape'`` — hit
+    whenever a kernel loads inside a ``fori_loop`` body); normalize ints
+    to 1-sized slices and squeeze those axes back out."""
+    pl = _pl()
+    norm, squeeze = [], []
+    for axis, s in enumerate(idx):
+        if isinstance(s, int):
+            norm.append(pl.dslice(s, 1))
+            squeeze.append(axis)
+        else:
+            norm.append(s)
+    out = pl.load(ref, tuple(norm))
+    return out.squeeze(tuple(squeeze)) if squeeze else out
+
+
+def pallas_store(ref, idx, val):
+    """``pl.store`` counterpart of :func:`pallas_load` (int indices become
+    1-sized slices; ``val`` gains the matching singleton axes)."""
+    pl = _pl()
+    norm, expand = [], []
+    for axis, s in enumerate(idx):
+        if isinstance(s, int):
+            norm.append(pl.dslice(s, 1))
+            expand.append(axis)
+        else:
+            norm.append(s)
+    if expand:
+        import jax.numpy as jnp
+
+        val = jnp.expand_dims(val, tuple(expand))
+    pl.store(ref, tuple(norm), val)
+
+
+def pallas_program_id(axis: int):
+    return _pl().program_id(axis)
+
+
+def pallas_when(condition):
+    return _pl().when(condition)
 
 
 def pcast_varying(x, axis_names):

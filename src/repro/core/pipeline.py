@@ -69,14 +69,27 @@ def pipeline_lstm(
     in_dim: int,
     model_axis: str = "model",
     micro_batches: int = 1,
+    stage_kernel: str = "jnp",
 ):
     """Run a stacked LSTM over ``x`` [B, S, in_dim] in wavefront order.
 
     ``stacked``: output of :func:`stack_pipeline_params` (leading [NS, Lp]).
     ``micro_batches=k`` splits the batch into k slices interleaved through
     ONE wavefront (k*S + NS - 1 ticks — fill/drain paid once per step).
+    ``stage_kernel`` selects what computes each stage's cells per tick:
+    ``"jnp"`` (plain einsum math), ``"pallas"`` (the fused
+    ``kernels/lstm_cell`` Pallas kernel — gate GEMMs + state update in one
+    VMEM-resident kernel), or ``"pallas_interpret"`` (the same kernel
+    program interpreted, CPU-runnable; parity vs "jnp" is pinned by
+    tests/test_plan.py).  The kernel consumes the stacked params directly:
+    ``stack_pipeline_params`` preserves the [in, 4, H] gate layout, so the
+    i/f/g/o split stays a static index inside the kernel.
     Returns hidden states of the top layer, [B, S, H].
     """
+    from repro.core.plan import STAGE_KERNELS
+
+    if stage_kernel not in STAGE_KERNELS:
+        raise ValueError(f"stage_kernel must be one of {STAGE_KERNELS}, got {stage_kernel!r}")
     from repro.core.plan import WavefrontSchedule
 
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -111,6 +124,18 @@ def pipeline_lstm(
             # x_in [B, K] where K = in_max (l==0) or hidden; pad to in_max
             if x_in.shape[-1] < in_max:
                 x_in = jnp.pad(x_in, ((0, 0), (0, in_max - x_in.shape[-1])))
+            if stage_kernel != "jnp":
+                # fused Pallas cell: gate GEMMs + state update in one kernel,
+                # fed the stacked [in_max, 4, H] weights as-is (static gate
+                # split).  h/c carries are fp32, so the kernel's outputs are
+                # fp32 too; the analytic custom-vjp backward keeps the
+                # pipelined train step differentiable.
+                from repro.kernels.lstm_cell.ops import lstm_cell_fused
+
+                return lstm_cell_fused(
+                    x_in, h_prev, c_prev, wx[l], wh[l], b[l],
+                    interpret=stage_kernel == "pallas_interpret",
+                )
             gates = (
                 jnp.einsum("bi,igh->bgh", x_in, wx[l].astype(dt))
                 + jnp.einsum("bj,jgh->bgh", h_prev.astype(dt), wh[l].astype(dt))
@@ -212,14 +237,18 @@ def batch_shard_backbone(mesh: Mesh, batch_axes: tuple, dropout: float = 0.0):
     return run
 
 
-def pipeline_backbone(mesh: Mesh, model_axis: str = "model", micro_batches: int = 1):
+def pipeline_backbone(mesh: Mesh, model_axis: str = "model", micro_batches: int = 1, stage_kernel: str = "jnp"):
     """Adapter for ``seq2seq.forward_no_input_feeding(backbone=...)``: runs
     the stacked-LSTM encoder/decoder through the wavefront pipeline (with
-    ``micro_batches`` slices interleaved through one fill/drain)."""
+    ``micro_batches`` slices interleaved through one fill/drain and
+    ``stage_kernel`` selecting the per-tick cell compute)."""
 
     def run(layer_params, xs, rng):  # rng unused: no dropout inside the pipeline
         del rng
         stacked, in_max = stack_pipeline_params(layer_params, dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis])
-        return pipeline_lstm(mesh, stacked, xs, in_dim=xs.shape[-1], model_axis=model_axis, micro_batches=micro_batches)
+        return pipeline_lstm(
+            mesh, stacked, xs, in_dim=xs.shape[-1], model_axis=model_axis,
+            micro_batches=micro_batches, stage_kernel=stage_kernel,
+        )
 
     return run

@@ -76,6 +76,9 @@ class WavefrontSchedule:
         return self.fill_drain_ticks / self.ticks
 
 
+STAGE_KERNELS = ("jnp", "pallas", "pallas_interpret")
+
+
 @dataclass(frozen=True)
 class ExecutionPlan:
     strategy: stg.Strategy
@@ -84,11 +87,17 @@ class ExecutionPlan:
     overlap: bool = False
     use_pipeline: bool = False
     model_axis: str = "model"
+    # what computes a wavefront stage's LSTM cells: the plain jnp einsum
+    # math, the fused Pallas cell kernel (TPU), or the same kernel in
+    # interpret mode (CPU-runnable; bitwise the same kernel program)
+    stage_kernel: str = "jnp"
 
     def __post_init__(self):
         object.__setattr__(self, "strategy", stg.Strategy(self.strategy))
         if self.micro_batches < 1:
             raise ValueError(f"micro_batches must be >= 1, got {self.micro_batches}")
+        if self.stage_kernel not in STAGE_KERNELS:
+            raise ValueError(f"stage_kernel must be one of {STAGE_KERNELS}, got {self.stage_kernel!r}")
         if self.overlap and self.pipelined:
             # the pipelined schedule runs ONE fwd/bwd (head grads sync once),
             # so there is no per-microbatch sync to delay — reject rather
@@ -207,7 +216,10 @@ class ExecutionPlan:
 
         if self.pipelined:
             return pl.pipeline_backbone(
-                self.mesh, model_axis=self.model_axis, micro_batches=self.micro_batches
+                self.mesh,
+                model_axis=self.model_axis,
+                micro_batches=self.micro_batches,
+                stage_kernel=self.stage_kernel,
             )
         if batch_backbone and self.mesh is not None:
             # batch over ALL axes: the paper's hand-off already spreads the

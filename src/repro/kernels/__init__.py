@@ -12,3 +12,16 @@ VMEM (~16 MB/core) and MXU tile alignment (multiples of 128).
 import os
 
 INTERPRET = os.environ.get("REPRO_PALLAS_FORCE_TPU", "") != "1"  # CPU container default
+
+
+def fit_block(n: int, want: int) -> int:
+    """Largest divisor of ``n`` that is <= ``want`` (at least 1).
+
+    The kernels demand exact tiling (array dims divisible by block dims);
+    the ops wrappers clamp requested block sizes through this so any
+    requested block works on any shape — a non-dividing request degrades
+    to a smaller exact tile instead of raising."""
+    want = max(1, min(want, n))
+    while n % want:
+        want -= 1
+    return want

@@ -22,13 +22,14 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.core import compat
 
 NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_kv: int, causal: bool, window, scale: float):
-    qi = pl.program_id(1)
+    qi = compat.pallas_program_id(1)
     q = q_ref[0].astype(jnp.float32) * scale  # [Bq, D]
     Bq, D = q.shape
     T = k_ref.shape[1]
@@ -45,8 +46,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_kv: int, causal: bool, wi
 
     def body(j, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(j * block_kv, block_kv), slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(j * block_kv, block_kv), slice(None))).astype(jnp.float32)
+        kv_rows = compat.pallas_dslice(j * block_kv, block_kv)
+        k = compat.pallas_load(k_ref, (0, kv_rows, slice(None))).astype(jnp.float32)
+        v = compat.pallas_load(v_ref, (0, kv_rows, slice(None))).astype(jnp.float32)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [Bq, Bkv]
         qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (Bq, block_kv), 0)
         kpos = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, (Bq, block_kv), 1)
@@ -93,15 +95,15 @@ def flash_attention_pallas(
         raise ValueError(f"S={S}/T={T} must divide blocks ({bq},{bkv})")
     scale = D**-0.5
     kernel = functools.partial(_flash_kernel, block_kv=bkv, causal=causal, window=window, scale=scale)
-    return pl.pallas_call(
+    return compat.pallas_call(
         kernel,
         grid=(BH, S // bq),
         in_specs=[
-            pl.BlockSpec((1, bq, D), lambda bh, i: (bh, i, 0)),
-            pl.BlockSpec((1, T, D), lambda bh, i: (bh // group, 0, 0)),
-            pl.BlockSpec((1, T, D), lambda bh, i: (bh // group, 0, 0)),
+            ((1, bq, D), lambda bh, i: (bh, i, 0)),
+            ((1, T, D), lambda bh, i: (bh // group, 0, 0)),
+            ((1, T, D), lambda bh, i: (bh // group, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, D), lambda bh, i: (bh, i, 0)),
+        out_specs=((1, bq, D), lambda bh, i: (bh, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
         interpret=interpret,
     )(q, k, v)

@@ -14,6 +14,8 @@ def flash_attention(q, k, v, *, causal=True, window=None, block_q=512, block_kv=
         interpret = kernels.INTERPRET
     B, S, KV, G, D = q.shape
     T = k.shape[1]
+    block_q = kernels.fit_block(S, block_q)
+    block_kv = kernels.fit_block(T, block_kv)
     qf = q.transpose(0, 2, 3, 1, 4).reshape(B * KV * G, S, D)
     kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
     vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, D)

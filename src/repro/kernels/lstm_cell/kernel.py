@@ -20,7 +20,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.core import compat
 
 
 def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out_ref, c_out_ref):
@@ -66,20 +67,20 @@ def lstm_cell_pallas(
         jax.ShapeDtypeStruct((B, H), h.dtype),
         jax.ShapeDtypeStruct((B, H), c.dtype),
     )
-    h_new, c_new = pl.pallas_call(
+    h_new, c_new = compat.pallas_call(
         _lstm_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bb, In), lambda i, j: (i, 0)),  # x: full input row block
-            pl.BlockSpec((bb, H), lambda i, j: (i, 0)),  # h: full hidden row block
-            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),  # c tile
-            pl.BlockSpec((In, 4, bh), lambda i, j: (0, 0, j)),  # wx column tile
-            pl.BlockSpec((H, 4, bh), lambda i, j: (0, 0, j)),  # wh column tile
-            pl.BlockSpec((4, bh), lambda i, j: (0, j)),  # bias tile
+            ((bb, In), lambda i, j: (i, 0)),  # x: full input row block
+            ((bb, H), lambda i, j: (i, 0)),  # h: full hidden row block
+            ((bb, bh), lambda i, j: (i, j)),  # c tile
+            ((In, 4, bh), lambda i, j: (0, 0, j)),  # wx column tile
+            ((H, 4, bh), lambda i, j: (0, 0, j)),  # wh column tile
+            ((4, bh), lambda i, j: (0, j)),  # bias tile
         ],
         out_specs=[
-            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
-            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
+            ((bb, bh), lambda i, j: (i, j)),
+            ((bb, bh), lambda i, j: (i, j)),
         ],
         out_shape=out_shape,
         interpret=interpret,

@@ -1,18 +1,88 @@
-"""Public wrapper for the fused LSTM cell."""
+"""Public wrapper for the fused LSTM cell.
+
+``lstm_cell_fused`` is differentiable: the forward runs the Pallas kernel
+(compiled on TPU, interpret mode on CPU) and a ``jax.custom_vjp`` supplies
+the analytic LSTM-cell backward in fp32 jnp — jax 0.4.x cannot linearize
+through ``pallas_call`` (even interpreted), and the flash-style recompute
+backward (gates rebuilt from the saved inputs, no activation stash) is the
+schedule a fused backward kernel would implement anyway.  The backward's
+parity against ``jax.grad`` of ``lstm_cell_ref`` is pinned by
+``tests/test_kernels.py``.
+"""
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 
 from repro import kernels
 from repro.kernels.lstm_cell.kernel import lstm_cell_pallas
+
+
+def _gates(x, h, wx, wh, b):
+    """Pre-activation gates [B, 4, H] in fp32 (same math as kernel/ref)."""
+    return (
+        jnp.einsum("bi,igh->bgh", x.astype(jnp.float32), wx.astype(jnp.float32))
+        + jnp.einsum("bj,jgh->bgh", h.astype(jnp.float32), wh.astype(jnp.float32))
+        + b.astype(jnp.float32)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _make_fused_cell(block_b: int, block_h: int, interpret: bool):
+    @jax.custom_vjp
+    def cell(x, h, c, wx, wh, b):
+        return lstm_cell_pallas(x, h, c, wx, wh, b, block_b=block_b, block_h=block_h, interpret=interpret)
+
+    def fwd(x, h, c, wx, wh, b):
+        return cell(x, h, c, wx, wh, b), (x, h, c, wx, wh, b)
+
+    def bwd(res, cts):
+        x, h, c, wx, wh, b = res
+        dh_new, dc_new = (ct.astype(jnp.float32) for ct in cts)
+        gates = _gates(x, h, wx, wh, b)
+        i_s = jax.nn.sigmoid(gates[:, 0])
+        f_s = jax.nn.sigmoid(gates[:, 1])
+        g_t = jnp.tanh(gates[:, 2])
+        o_s = jax.nn.sigmoid(gates[:, 3])
+        cf = c.astype(jnp.float32)
+        c_new = f_s * cf + i_s * g_t
+        tc = jnp.tanh(c_new)
+        # dL/dc' accumulates the direct cotangent and h' = o*tanh(c') path
+        dc_tot = dc_new + dh_new * o_s * (1.0 - tc * tc)
+        d_pre = jnp.stack(
+            [
+                dc_tot * g_t * i_s * (1.0 - i_s),          # i gate
+                dc_tot * cf * f_s * (1.0 - f_s),           # f gate
+                dc_tot * i_s * (1.0 - g_t * g_t),          # g gate
+                dh_new * tc * o_s * (1.0 - o_s),           # o gate
+            ],
+            axis=1,
+        )  # [B, 4, H]
+        wxf, whf = wx.astype(jnp.float32), wh.astype(jnp.float32)
+        dx = jnp.einsum("bgh,igh->bi", d_pre, wxf)
+        dh = jnp.einsum("bgh,jgh->bj", d_pre, whf)
+        dc = dc_tot * f_s
+        dwx = jnp.einsum("bi,bgh->igh", x.astype(jnp.float32), d_pre)
+        dwh = jnp.einsum("bj,bgh->jgh", h.astype(jnp.float32), d_pre)
+        db = d_pre.sum(axis=0)
+        leaves = (dx, dh, dc, dwx, dwh, db)
+        return tuple(g.astype(a.dtype) for g, a in zip(leaves, res))
+
+    cell.defvjp(fwd, bwd)
+    return cell
 
 
 def lstm_cell_fused(x, h, c, wx, wh, b, *, block_b: int = 256, block_h: int = 256, interpret: bool | None = None):
     """Drop-in replacement for the models/lstm.py cell math.
 
     x [B, In], h/c [B, H], wx [In, 4, H], wh [H, 4, H], b [4, H] ->
-    (h', c').  Blocks clamp to the array sizes; B and H must divide them.
+    (h', c').  Requested blocks are clamped to the largest exact tile;
+    differentiable via the analytic custom-vjp backward.
     """
     if interpret is None:
         interpret = kernels.INTERPRET
-    return lstm_cell_pallas(x, h, c, wx, wh, b, block_b=block_b, block_h=block_h, interpret=interpret)
+    bb = kernels.fit_block(x.shape[0], block_b)
+    bh = kernels.fit_block(h.shape[1], block_h)
+    return _make_fused_cell(bb, bh, bool(interpret))(x, h, c, wx, wh, b)

@@ -21,7 +21,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.core import compat
 
 NEG_INF = -1e30
 
@@ -62,18 +63,18 @@ def luong_attention_pallas(
     if N % bn:
         raise ValueError(f"N={N} must divide block_n={bn}")
     grid = (B, N // bn)
-    out = pl.pallas_call(
+    out = compat.pallas_call(
         _luong_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bn, h), lambda b, n: (b, n, 0)),
-            pl.BlockSpec((1, M, h), lambda b, n: (b, 0, 0)),
-            pl.BlockSpec((1, M), lambda b, n: (b, 0)),
-            pl.BlockSpec((h, h), lambda b, n: (0, 0)),
-            pl.BlockSpec((h, h), lambda b, n: (0, 0)),
-            pl.BlockSpec((h, h), lambda b, n: (0, 0)),
+            ((1, bn, h), lambda b, n: (b, n, 0)),
+            ((1, M, h), lambda b, n: (b, 0, 0)),
+            ((1, M), lambda b, n: (b, 0)),
+            ((h, h), lambda b, n: (0, 0)),
+            ((h, h), lambda b, n: (0, 0)),
+            ((h, h), lambda b, n: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bn, h), lambda b, n: (b, n, 0)),
+        out_specs=((1, bn, h), lambda b, n: (b, n, 0)),
         out_shape=jax.ShapeDtypeStruct((B, N, h), H.dtype),
         interpret=interpret,
     )(H, S, src_mask.astype(jnp.int32), w_alpha, w_ch, w_cc)

@@ -14,4 +14,5 @@ def luong_attention_fused(H, S, src_mask, w_alpha, w_c, *, block_n: int = 128, i
         interpret = kernels.INTERPRET
     h = H.shape[-1]
     w_ch, w_cc = w_c[:h], w_c[h:]
-    return luong_attention_pallas(H, S, src_mask, w_alpha, w_ch, w_cc, block_n=block_n, interpret=interpret)
+    bn = kernels.fit_block(H.shape[1], block_n)
+    return luong_attention_pallas(H, S, src_mask, w_alpha, w_ch, w_cc, block_n=bn, interpret=interpret)

@@ -16,11 +16,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.core import compat
 
 
 def _moe_kernel(x_ref, w1_ref, wg_ref, w2_ref, o_ref):
-    fi = pl.program_id(2)
+    fi = compat.pallas_program_id(2)
     x = x_ref[0].astype(jnp.float32)  # [Cb, d]
     w1 = w1_ref[0].astype(jnp.float32)  # [d, Fb]
     wg = wg_ref[0].astype(jnp.float32)
@@ -29,11 +30,11 @@ def _moe_kernel(x_ref, w1_ref, wg_ref, w2_ref, o_ref):
     h = h * jnp.dot(x, wg, preferred_element_type=jnp.float32)
     part = jnp.dot(h, w2, preferred_element_type=jnp.float32)
 
-    @pl.when(fi == 0)
+    @compat.pallas_when(fi == 0)
     def _init():
         o_ref[0] = part.astype(o_ref.dtype)
 
-    @pl.when(fi != 0)
+    @compat.pallas_when(fi != 0)
     def _acc():
         o_ref[0] = (o_ref[0].astype(jnp.float32) + part).astype(o_ref.dtype)
 
@@ -54,16 +55,16 @@ def moe_gemm_pallas(
     bc, bf = min(block_c, C), min(block_f, F)
     if C % bc or F % bf:
         raise ValueError(f"C={C}, F={F} must divide blocks ({bc},{bf})")
-    return pl.pallas_call(
+    return compat.pallas_call(
         _moe_kernel,
         grid=(E, C // bc, F // bf),
         in_specs=[
-            pl.BlockSpec((1, bc, d), lambda e, c, f: (e, c, 0)),
-            pl.BlockSpec((1, d, bf), lambda e, c, f: (e, 0, f)),
-            pl.BlockSpec((1, d, bf), lambda e, c, f: (e, 0, f)),
-            pl.BlockSpec((1, bf, d), lambda e, c, f: (e, f, 0)),
+            ((1, bc, d), lambda e, c, f: (e, c, 0)),
+            ((1, d, bf), lambda e, c, f: (e, 0, f)),
+            ((1, d, bf), lambda e, c, f: (e, 0, f)),
+            ((1, bf, d), lambda e, c, f: (e, f, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bc, d), lambda e, c, f: (e, c, 0)),
+        out_specs=((1, bc, d), lambda e, c, f: (e, c, 0)),
         out_shape=jax.ShapeDtypeStruct((E, C, d), x.dtype),
         interpret=interpret,
     )(x, w1, wg, w2)

@@ -9,4 +9,6 @@ def moe_gemm_fused(x, w1, wg, w2, *, block_c: int = 512, block_f: int = 512, int
     """x [E,C,d] dispatch buffer -> [E,C,d] through each expert's gated FFN."""
     if interpret is None:
         interpret = kernels.INTERPRET
-    return moe_gemm_pallas(x, w1, wg, w2, block_c=block_c, block_f=block_f, interpret=interpret)
+    bc = kernels.fit_block(x.shape[1], block_c)
+    bf = kernels.fit_block(w1.shape[2], block_f)
+    return moe_gemm_pallas(x, w1, wg, w2, block_c=bc, block_f=bf, interpret=interpret)

@@ -40,8 +40,10 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "coll
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^=]*?\))|(?:\w+\[[^\]]*\]\S*))\s+([\w\-]+)\(")
 _PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^()]*\))|(?:\w+\[[^\]]*\]))")
-_WHILE_RE = re.compile(r"while\(([^)]*)\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
-_CALL_RE = re.compile(r"(?:call|conditional)\([^)]*\).*?to_apply=%?([\w\.\-]+)")
+# jax 0.4.x prints typed operands (`while((s32[], f32[...]) %tuple), ...`),
+# so the operand list nests parens — anchor on the attributes instead
+_WHILE_RE = re.compile(r"\bwhile\(.*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:call|conditional)\(.*?to_apply=%?([\w\.\-]+)")
 _CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
 _LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _FUSION_KIND_RE = re.compile(r"kind=(k\w+)")
@@ -49,7 +51,6 @@ _CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
 _TRIP_RE = re.compile(r'known_trip_count.*?"?n"?\s*[:=]\s*"?(\d+)')
 _REDUCING_OPS_RE = re.compile(r"=\s*\S+\s+(reduce|reduce-window|scatter|sort)\(")
 _LHS_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
-_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
 
 _SKIP_BYTES_OPS = {
     "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
@@ -57,7 +58,64 @@ _SKIP_BYTES_OPS = {
     # while-carried buffer copies are elided by buffer aliasing on TPU;
     # the host backend materializes them in text — don't count.
     "copy",
+    # control flow: the called computations are traversed (with trip
+    # multipliers) and counted there; the wrapper op moves no bytes itself
+    "call", "conditional", "while",
 }
+
+
+def _extract_call(line: str, op: str):
+    """The operand string inside ``op( ... )`` with balanced parens (typed
+    tuple operands nest parens, so a [^)]* scan truncates)."""
+    i = line.find(op + "(")
+    if i < 0:
+        return None
+    start = i + len(op) + 1
+    depth = 1
+    for j in range(start, len(line)):
+        ch = line[j]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start:j]
+    return None
+
+
+def _operands(opstr: str):
+    """Split an operand list at top-level commas -> [(name, inline_shape)].
+
+    Tolerates both spellings XLA has used: bare ``%name`` and the typed
+    ``f32[8,16]{1,0} %name`` of jax 0.4.x (where the inline shape makes the
+    local-shapes lookup unnecessary — it is returned alongside the name)."""
+    parts, depth, cur = [], 0, []
+    for ch in opstr:
+        if ch in "([{":
+            depth += 1
+            cur.append(ch)
+        elif ch in ")]}":
+            depth -= 1
+            cur.append(ch)
+        elif ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    out = []
+    for p in parts:
+        p = p.strip()
+        if not p:
+            continue
+        nm = re.search(r"%([\w\.\-]+)$", p)
+        if nm:
+            shape = p[: nm.start()].strip()
+            out.append((nm.group(1), shape or None))
+        else:
+            out.append((p.lstrip("%"), None))
+    return out
 
 
 def _dims(shape_str: str):
@@ -134,14 +192,12 @@ def _local_shapes(comp: dict) -> Dict[str, str]:
 
 def _dot_flops(line: str, shapes: Dict[str, str], out_shape: str) -> float:
     _, out_dims = _dims(out_shape)
-    ops = _OPERANDS_RE.search(line[line.index("dot(") :] if "dot(" in line else line)
-    if not ops:
-        return 0.0
-    operands = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+    opstr = _extract_call(line, "dot")
+    operands = _operands(opstr) if opstr else []
     if not operands:
         return 0.0
-    lhs = operands[0]
-    lhs_shape = shapes.get(lhs)
+    lhs, lhs_inline = operands[0]
+    lhs_shape = lhs_inline or shapes.get(lhs)
     if lhs_shape is None:
         return 0.0
     _, lhs_dims = _dims(lhs_shape)
@@ -197,7 +253,7 @@ def analyze_hlo(text: str, fallback_trip: int = 1, detail: bool = False) -> HloS
         for line in comp["lines"]:
             wm = _WHILE_RE.search(line)
             if wm:
-                cond, body = wm.group(2), wm.group(3)
+                cond, body = wm.group(1), wm.group(2)
                 tm = _TRIP_RE.search(line)  # XLA annotates known trip counts
                 if tm:
                     trips = int(tm.group(1))
@@ -219,12 +275,12 @@ def analyze_hlo(text: str, fallback_trip: int = 1, detail: bool = False) -> HloS
             if op not in _SKIP_BYTES_OPS and op not in COLLECTIVES:
                 out_b = _shape_bytes(out_shape)
                 operand_b = []
-                ops_m = _OPERANDS_RE.search(line[line.index(op + "(") :]) if (op + "(") in line else None
-                if ops_m:
-                    for o in ops_m.group(1).split(","):
-                        o = o.strip().lstrip("%")
-                        if o in shapes:
-                            operand_b.append(_shape_bytes(shapes[o]))
+                opstr = _extract_call(line, op)
+                if opstr:
+                    for oname, inline in _operands(opstr):
+                        sh = inline or shapes.get(oname)
+                        if sh:
+                            operand_b.append(_shape_bytes(sh))
                 if op == "dynamic-slice":
                     b = out_b  # reads only the sliced region
                 elif op == "dynamic-update-slice":

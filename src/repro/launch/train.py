@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_IDS, get_config
-from repro.core.plan import ExecutionPlan
+from repro.core.plan import ExecutionPlan, STAGE_KERNELS
 from repro.core.strategy import Strategy
 from repro.data import LMBatchIterator, MTBatchIterator, SyntheticLMTask, SyntheticMTTask
 from repro.models import seq2seq as s2s
@@ -42,6 +42,11 @@ def main():
     ap.add_argument("--pipeline", action="store_true", help="wavefront pipeline backbone")
     ap.add_argument("--micro-batches", type=int, default=1, help="microbatches per step (interleaved through the wavefront when --pipeline, grad accumulation otherwise)")
     ap.add_argument("--overlap", action="store_true", help="overlap the hybrid head grad sync with the next microbatch's backbone")
+    ap.add_argument(
+        "--stage-kernel", choices=STAGE_KERNELS, default="jnp",
+        help="wavefront stage cell compute: plain jnp math, the fused Pallas "
+        "LSTM cell kernel (TPU), or the same kernel interpreted (CPU)",
+    )
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -68,11 +73,15 @@ def main():
     plan = ExecutionPlan(
         strategy=strat, mesh=mesh, micro_batches=args.micro_batches,
         overlap=args.overlap, use_pipeline=args.pipeline,
+        stage_kernel=args.stage_kernel,
     )
     plan.validate_batch(args.batch)
     if args.pipeline and not plan.pipelined:
         print(f"warning: --pipeline has no effect for strategy={strat.value} "
               f"(wavefront needs model/hybrid); microbatches run as grad accumulation")
+    if args.stage_kernel != "jnp" and not plan.pipelined:
+        print(f"warning: --stage-kernel={args.stage_kernel} has no effect without "
+              f"the wavefront pipeline (needs --pipeline and model/hybrid)")
 
     key = jax.random.key(args.seed)
     if cfg.family == "seq2seq":
@@ -93,7 +102,8 @@ def main():
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(
         f"arch={cfg.name} params={n_params/1e6:.1f}M strategy={strat.value} mesh={args.mesh} "
-        f"micro_batches={args.micro_batches} pipeline={plan.pipelined} overlap={args.overlap}"
+        f"micro_batches={args.micro_batches} pipeline={plan.pipelined} overlap={args.overlap} "
+        f"stage_kernel={plan.stage_kernel}"
     )
     chunk = max(args.eval_every, args.steps if not args.eval_every else args.eval_every)
     done = 0

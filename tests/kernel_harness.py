@@ -1,0 +1,204 @@
+"""Shared Pallas kernel parity harness.
+
+Every kernel under ``src/repro/kernels`` registers a :class:`KernelCase`
+here: how to build inputs for a shape dict, the fused entry point, the
+pure-jnp oracle, the standard + ragged/edge shape sweeps, and per-dtype
+tolerances.  All parity testing funnels through :func:`assert_parity` so
+the contract is uniform — forward allclose vs the oracle, both dtypes,
+interpret mode on CPU — and a new kernel gets the full battery by adding
+one registration block.
+
+``tests/test_kernels.py`` drives the registry exhaustively;
+``tests/test_property.py`` reuses :func:`assert_parity` under hypothesis
+with randomized shapes and non-dividing block sizes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+# observed fp32 deltas are reassociation noise (different GEMM splits);
+# softmax/tanh chains (attention heads) accumulate a little more of it
+TOL_TIGHT = {"float32": dict(atol=1e-5, rtol=1e-5), "bfloat16": dict(atol=5e-2, rtol=5e-2)}
+TOL_ATTN = {"float32": dict(atol=1e-4, rtol=1e-4), "bfloat16": dict(atol=5e-2, rtol=5e-2)}
+
+
+@dataclass
+class KernelCase:
+    name: str
+    # (rng, shape_dict, dtype) -> (fused_out_tuple, ref_out_tuple); runs both
+    # paths so each case owns its layout/blocking adaptation
+    run: Callable
+    shapes: List[dict]           # standard sweep (divisible blocks)
+    ragged_shapes: List[dict]    # ragged/edge shapes + non-dividing blocks
+    tol: Dict[str, dict] = field(default_factory=lambda: TOL_TIGHT)
+
+
+REGISTRY: Dict[str, KernelCase] = {}
+
+
+def register(case: KernelCase) -> KernelCase:
+    assert case.name not in REGISTRY, f"duplicate kernel case {case.name}"
+    REGISTRY[case.name] = case
+    return case
+
+
+def all_params():
+    """(case_name, shape_dict, dtype_name) triples for pytest parametrize."""
+    out = []
+    for case in REGISTRY.values():
+        for shape in case.shapes + case.ragged_shapes:
+            for dt in ("float32", "bfloat16"):
+                out.append((case.name, shape, dt))
+    return out
+
+
+def param_id(p) -> str:
+    name, shape, dt = p
+    return f"{name}-{'-'.join(f'{k}{v}' for k, v in shape.items())}-{dt}"
+
+
+def assert_parity(name: str, shape: dict, dtype_name: str, seed: int = 0) -> None:
+    """Run fused vs oracle for one (kernel, shape, dtype) and allclose."""
+    case = REGISTRY[name]
+    rng = np.random.default_rng(seed)
+    dt = jnp.dtype(dtype_name)
+    fused, ref = case.run(rng, shape, dt)
+    tol = case.tol[dtype_name]
+    for f, r in zip(fused, ref, strict=True):
+        np.testing.assert_allclose(
+            np.asarray(f, np.float32), np.asarray(r, np.float32), **tol,
+            err_msg=f"{name} fused-vs-ref mismatch at {shape} {dtype_name}",
+        )
+
+
+def _arr(rng, shape, dt, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dt)
+
+
+# ---------------------------------------------------------------------------
+# case registrations — one block per kernel package
+# ---------------------------------------------------------------------------
+
+
+def _run_lstm_cell(rng, s, dt):
+    from repro.kernels.lstm_cell.ops import lstm_cell_fused
+    from repro.kernels.lstm_cell.ref import lstm_cell_ref
+
+    B, In, H = s["B"], s["In"], s["H"]
+    x, h, c = _arr(rng, (B, In), dt), _arr(rng, (B, H), dt), _arr(rng, (B, H), dt)
+    wx, wh, b = _arr(rng, (In, 4, H), dt, 0.1), _arr(rng, (H, 4, H), dt, 0.1), _arr(rng, (4, H), dt, 0.1)
+    fused = lstm_cell_fused(x, h, c, wx, wh, b, block_b=s["bb"], block_h=s["bh"])
+    return fused, lstm_cell_ref(x, h, c, wx, wh, b)
+
+
+register(
+    KernelCase(
+        name="lstm_cell",
+        run=_run_lstm_cell,
+        shapes=[
+            dict(B=8, In=16, H=32, bb=4, bh=32),
+            dict(B=4, In=64, H=64, bb=4, bh=16),
+            dict(B=16, In=24, H=128, bb=8, bh=64),
+        ],
+        ragged_shapes=[
+            dict(B=1, In=8, H=16, bb=256, bh=256),     # single row, clamped blocks
+            dict(B=6, In=24, H=40, bb=4, bh=16),       # blocks don't divide B/H
+            dict(B=7, In=13, H=24, bb=3, bh=9),        # everything odd
+        ],
+    )
+)
+
+
+def _run_luong(rng, s, dt):
+    from repro.kernels.luong_attn.ops import luong_attention_fused
+    from repro.kernels.luong_attn.ref import luong_attention_ref
+
+    B, N, M, h = s["B"], s["N"], s["M"], s["h"]
+    H = _arr(rng, (B, N, h), dt)
+    S = _arr(rng, (B, M, h), dt)
+    mask = jnp.asarray(rng.random((B, M)) > 0.2).at[:, 0].set(True)
+    wa, wc = _arr(rng, (h, h), dt, 0.1), _arr(rng, (2 * h, h), dt, 0.1)
+    fused = luong_attention_fused(H, S, mask, wa, wc, block_n=s["bn"])
+    return (fused,), (luong_attention_ref(H, S, mask, wa, wc[:h], wc[h:]),)
+
+
+register(
+    KernelCase(
+        name="luong_attn",
+        run=_run_luong,
+        shapes=[
+            dict(B=2, N=16, M=12, h=64, bn=8),
+            dict(B=4, N=32, M=8, h=32, bn=8),
+        ],
+        ragged_shapes=[
+            dict(B=1, N=64, M=33, h=128, bn=8),    # ragged source length
+            dict(B=3, N=10, M=7, h=48, bn=4),      # bn does not divide N
+            dict(B=2, N=1, M=1, h=16, bn=128),     # degenerate single position
+        ],
+        tol=TOL_ATTN,
+    )
+)
+
+
+def _run_flash(rng, s, dt):
+    from repro.kernels.flash_attn.ops import flash_attention
+    from repro.models.attention import dense_attention
+
+    B, S, KV, G, D = s["B"], s["S"], s["KV"], s["G"], s["D"]
+    causal, window = s["causal"], s.get("window")
+    q = _arr(rng, (B, S, KV, G, D), dt)
+    k = _arr(rng, (B, S, KV, D), dt)
+    v = _arr(rng, (B, S, KV, D), dt)
+    fused = flash_attention(q, k, v, causal=causal, window=window, block_q=s["bq"], block_kv=s["bkv"])
+    return (fused,), (dense_attention(q, k, v, causal=causal, window=window),)
+
+
+register(
+    KernelCase(
+        name="flash_attn",
+        run=_run_flash,
+        shapes=[
+            dict(B=2, S=128, KV=2, G=2, D=32, causal=True, bq=32, bkv=32),
+            dict(B=1, S=256, KV=1, G=4, D=64, causal=True, window=64, bq=32, bkv=32),
+            dict(B=2, S=64, KV=4, G=1, D=16, causal=False, bq=32, bkv=32),
+            dict(B=1, S=128, KV=2, G=1, D=128, causal=True, window=32, bq=32, bkv=32),
+        ],
+        ragged_shapes=[
+            dict(B=1, S=96, KV=1, G=2, D=32, causal=True, bq=64, bkv=64),   # blocks clamp to divisors of 96
+            dict(B=1, S=32, KV=1, G=1, D=8, causal=True, window=1, bq=32, bkv=32),  # window smaller than a block
+        ],
+        tol=TOL_ATTN,
+    )
+)
+
+
+def _run_moe(rng, s, dt):
+    from repro.kernels.moe_gemm.ops import moe_gemm_fused
+    from repro.kernels.moe_gemm.ref import moe_gemm_ref
+
+    E, C, d, F = s["E"], s["C"], s["d"], s["F"]
+    x = _arr(rng, (E, C, d), dt)
+    w1, wg, w2 = _arr(rng, (E, d, F), dt, 0.1), _arr(rng, (E, d, F), dt, 0.1), _arr(rng, (E, F, d), dt, 0.1)
+    fused = moe_gemm_fused(x, w1, wg, w2, block_c=s["bc"], block_f=s["bf"])
+    return (fused,), (moe_gemm_ref(x, w1, wg, w2),)
+
+
+register(
+    KernelCase(
+        name="moe_gemm",
+        run=_run_moe,
+        shapes=[
+            dict(E=4, C=16, d=32, F=64, bc=8, bf=32),
+            dict(E=2, C=8, d=64, F=96, bc=8, bf=48),
+            dict(E=8, C=32, d=16, F=16, bc=16, bf=16),
+        ],
+        ragged_shapes=[
+            dict(E=1, C=1, d=16, F=16, bc=16, bf=16),   # single expert, single slot
+            dict(E=3, C=10, d=24, F=36, bc=4, bf=16),   # bc/bf don't divide C/F
+        ],
+    )
+)

@@ -6,6 +6,8 @@ clipping, kInput full-operand accounting, scan-buffer alias handling, and
 collective bucketing.  Small real modules are lowered through jax.jit so
 the tests track XLA's actual HLO text format.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -72,6 +74,42 @@ def test_gather_clipped_to_output():
     s = analyze_hlo(t)
     # 8 rows out, not the 12.8 MB table
     assert s.bytes < 50000 * 64 * 4 / 10
+
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+def _fixture(name: str) -> str:
+    with open(os.path.join(FIXTURES, name)) as f:
+        return f.read()
+
+
+def test_fixture_dot_flops_pinned():
+    """Captured jax-0.4.37 HLO (typed operand lists: ``dot(f32[64,128]{1,0}
+    %Arg_0.1, ...)``) parses without recompiling anything: the fixture pins
+    the text format the parser must keep handling."""
+    s = analyze_hlo(_fixture("hlo_dot_jax0437.txt"))
+    assert s.flops == 2 * 64 * 128 * 32  # exact: one dot, shapes from the fixture
+    # out 8 KiB + lhs 32 KiB + rhs 16 KiB
+    assert s.bytes == (64 * 32 + 64 * 128 + 128 * 32) * 4
+
+
+def test_fixture_scan_trip_count_pinned():
+    """The while loop in the captured scan module carries its trip count in
+    ``backend_config={"known_trip_count":{"n":"37"}}`` and a typed tuple
+    operand (nested parens) — both must survive parsing: the body's bytes
+    are multiplied by 37."""
+    s = analyze_hlo(_fixture("hlo_scan_jax0437.txt"))
+    per_step = 128 * 128 * 4
+    assert 37 * 2 * per_step * 0.9 <= s.bytes <= 37 * 2 * per_step * 1.2
+
+
+def test_fixture_gather_clipped_pinned():
+    """Embedding-style gather reads out-many elements, not the table; the
+    entry's ``call`` wrapper contributes no bytes of its own."""
+    s = analyze_hlo(_fixture("hlo_gather_jax0437.txt"))
+    # kLoop fusion clip: out 2 KiB + table clipped to 2 KiB + 32 B indices
+    assert s.bytes == 2 * (8 * 64 * 4) + 8 * 4
 
 
 def test_collectives_bucketed_by_type():

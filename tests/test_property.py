@@ -115,6 +115,44 @@ def test_chunked_ce_equals_flat(S, seed):
     assert float(d1) == float(d2)
 
 
+# ---------------------------------------------------------------------------
+# Pallas kernel parity properties (through tests/kernel_harness.py): any
+# B/In/H, any block sizes — including ones that don't divide the arrays —
+# and both dtypes must agree with the jnp oracle.
+# ---------------------------------------------------------------------------
+
+KSET = settings(max_examples=10, deadline=None)
+dtypes = hst.sampled_from(["float32", "bfloat16"])
+
+
+@pytest.mark.pallas
+@KSET
+@given(
+    hst.integers(1, 12), hst.integers(1, 48), hst.integers(1, 64),
+    hst.integers(1, 300), hst.integers(1, 300), dtypes, hst.integers(0, 2**31 - 1),
+)
+def test_lstm_cell_kernel_parity_property(b, i, h, bb, bh, dt, seed):
+    """Fused LSTM cell == oracle for random shapes and arbitrary requested
+    blocks (the ops wrapper clamps non-dividing blocks to exact tiles)."""
+    import kernel_harness as KH
+
+    KH.assert_parity("lstm_cell", dict(B=b, In=i, H=h, bb=bb, bh=bh), dt, seed=seed)
+
+
+@pytest.mark.pallas
+@KSET
+@given(
+    hst.integers(1, 6), hst.integers(1, 40), hst.integers(1, 40), hst.integers(1, 96),
+    hst.integers(1, 64), dtypes, hst.integers(0, 2**31 - 1),
+)
+def test_luong_attn_kernel_parity_property(b, n, m, h, bn, dt, seed):
+    """Fused Luong attention head == oracle for random B/N/M/h (ragged
+    source lengths included) and arbitrary block_n requests."""
+    import kernel_harness as KH
+
+    KH.assert_parity("luong_attn", dict(B=b, N=n, M=m, h=h, bn=bn), dt, seed=seed)
+
+
 @SET
 @given(hst.integers(0, 2**31 - 1), hst.integers(1, 4))
 def test_hlo_shape_bytes_parser(seed, n):
