@@ -17,6 +17,7 @@ MODULES = {
     "table4": "benchmarks.table4_accuracy",  # Table 4/5: accuracy with vs without input-feeding
     "fig4": "benchmarks.fig4_convergence",  # Figure 4: convergence vs wall-clock
     "kernels": "benchmarks.kernel_bench",  # Pallas kernels vs jnp oracle (interpret timing + allclose)
+    "serve": "benchmarks.serve_bench",  # continuous vs static batching tok/s at varied length skew
     "roofline": "benchmarks.roofline_table",  # §Roofline: terms from the dry-run artifacts
 }
 

@@ -1,10 +1,12 @@
 """Batched serving example: prefill + decode with a KV cache, including a
-sliding-window variant and temperature sampling.
+sliding-window variant, temperature sampling, and the plan-driven
+continuous-batching engine (``--continuous``: ragged prompts, chunked
+prefill, admit-on-EOS slot recycling).
 
     PYTHONPATH=src python examples/serve_lm.py --arch jamba-v0.1-52b
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-1.7b --continuous
 """
 import argparse
-import functools
 import time
 
 import jax
@@ -12,9 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core.plan import ServePlan
 from repro.models import transformer as tfm
-from repro.serve import ServeEngine
-from repro.serve.sampling import temperature_sample
+from repro.serve import ContinuousEngine, ServeEngine, make_sampler
 
 
 def main():
@@ -25,11 +27,35 @@ def main():
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--window", type=int, default=None, help="sliding-window KV buffer size")
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--continuous", action="store_true", help="serve ragged prompts through the ServePlan engine")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     params, _ = tfm.init_lm(jax.random.key(0), cfg)
     rng = np.random.default_rng(0)
+    sampler = make_sampler(args.temperature)
+    sample_rng = jax.random.key(1) if args.temperature > 0 else None
+
+    if args.continuous and cfg.frontend:
+        print("--continuous has no frontend-embedding queue; serving the static batched loop instead")
+    if args.continuous and not cfg.frontend:
+        cap = max(64, args.prompt_len + args.steps)
+        overrides = dict(max_slots=max(2, args.batch // 2), max_len=cap, prefill_chunk=8)
+        if args.window:
+            overrides.update(cache_policy="window", window=args.window)
+        plan = ServePlan.for_config(cfg, **overrides)  # fits the chunk to cap
+        engine = ContinuousEngine(cfg, params, plan)
+        lens = rng.integers(max(2, args.prompt_len // 3), args.prompt_len + 1, size=args.batch)
+        prompts = [rng.integers(3, cfg.vocab_size, size=int(L)).astype(np.int32) for L in lens]
+        t0 = time.perf_counter()
+        outs = engine.run(prompts, args.steps, sampler=sampler, rng=sample_rng)
+        dt = time.perf_counter() - t0
+        tok = sum(len(o) for o in outs)
+        print(f"[{cfg.name} | {plan.cache_policy}] {len(outs)} ragged requests, {tok} tokens "
+              f"in {dt:.2f}s ({tok/dt:.1f} tok/s incl. compile)")
+        print(outs[0].tolist())
+        return
+
     prompts = jnp.asarray(rng.integers(3, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)
     frontend = None
     if cfg.frontend:
@@ -37,9 +63,8 @@ def main():
         print(f"{cfg.frontend} frontend stub: {frontend.shape}")
 
     engine = ServeEngine(cfg, params, window=args.window, max_len=args.prompt_len + args.steps)
-    sampler = functools.partial(temperature_sample, temperature=args.temperature)
     t0 = time.perf_counter()
-    out = engine.generate(prompts, args.steps, frontend=frontend, sampler=sampler, rng=jax.random.key(1))
+    out = engine.generate(prompts, args.steps, frontend=frontend, sampler=sampler, rng=sample_rng)
     dt = time.perf_counter() - t0
     print(f"[{cfg.name}] generated {out.shape} in {dt:.2f}s  ({args.batch*args.steps/dt:.1f} tok/s incl. compile)")
     print(np.asarray(out)[:2])

@@ -1,18 +1,23 @@
 """Seq2Seq MT inference example: greedy translation with the paper's model
-(encoder -> all hidden states -> per-step Luong attention decode).
+served through the plan-driven engine (encoder states cached as the
+``encdec_memory``, per-token Luong attention-softmax decode).
+
+Thin wrapper: everything below is ServePlan + ContinuousEngine; the same
+path `python -m repro.launch.serve --arch seq2seq-rnn --smoke` exercises.
 
     PYTHONPATH=src python examples/translate.py
 """
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.plan import ServePlan
 from repro.data import MTBatchIterator, SyntheticMTTask
 from repro.models import seq2seq as s2s
 from repro.optim import adam
+from repro.serve import ContinuousEngine
 from repro.train import Trainer
 
 
@@ -25,13 +30,14 @@ def main():
     tr.run(100, log_every=50)
 
     b = next(MTBatchIterator(task, 4, seed=7, buckets=(9,)))
-    hyp = s2s.greedy_decode(
-        tr.state.params, cfg, jnp.asarray(b["src"]), jnp.asarray(b["src_mask"]),
-        max_len=b["tgt_out"].shape[1], bos=1, eos=2)
+    plan = ServePlan.for_config(cfg, max_slots=4, max_len=16, prefill_chunk=4)
+    engine = ContinuousEngine(cfg, tr.state.params, plan, bos=1, eos=2)
+    sources = [np.asarray(s)[np.asarray(m, bool)] for s, m in zip(b["src"], b["src_mask"])]
+    hyps = engine.run(sources, max_new=b["tgt_out"].shape[1])
     for i in range(4):
         print(f"src: {b['src'][i]}")
         print(f"ref: {b['tgt_out'][i]}")
-        print(f"hyp: {np.asarray(hyp)[i]}")
+        print(f"hyp: {hyps[i]}")
         print()
 
 

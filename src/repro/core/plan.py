@@ -32,7 +32,6 @@ from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import strategy as stg
@@ -243,3 +242,167 @@ class ExecutionPlan:
     @staticmethod
     def merge_head(head: dict, body: dict) -> dict:
         return {**head, **body}
+
+
+# ---------------------------------------------------------------------------
+# ServePlan: the same execution vocabulary, bound to inference
+# ---------------------------------------------------------------------------
+
+CACHE_POLICIES = ("full_kv", "window", "recurrent", "encdec_memory")
+ADMISSIONS = ("static", "continuous")
+
+
+@dataclass(frozen=True)
+class ServePlan:
+    """One object that owns *how* a serving workload executes.
+
+    Mirrors :class:`ExecutionPlan` for the decode side: ``serve/engine.py``
+    consumes a plan instead of scattered per-call arguments.
+
+    * ``cache_policy`` — what a slot's per-request state is:
+        - ``full_kv``        append-only KV cache (attention archs)
+        - ``window``         rolling KV buffer of ``window`` slots
+        - ``recurrent``      O(1) recurrent state only (pure ssm/xLSTM archs)
+        - ``encdec_memory``  the paper's seq2seq: encoder states S are the
+          cached "memory"; per-token decode is one decoder-LSTM step plus
+          the Luong attention-softmax head.
+    * ``max_slots`` — slot-table size; the decode tick always runs all
+      slots (static shapes), inactive slots are masked.
+    * ``prefill_chunk`` — prompts enter ``prefill_chunk`` tokens per step,
+      interleaved with decode ticks (chunked prefill); the ragged tail of a
+      prompt reuses the decode-shaped single-token step.
+    * ``admission`` — ``static`` admits one batch up front (classic batched
+      serving: no recycling, the batch must fit the slot table);
+      ``continuous`` admits from the queue whenever EOS frees a slot.
+    * ``stage_kernel`` — same vocabulary as the training plan: what computes
+      the Luong attention head (``jnp`` math or the fused Pallas kernel).
+    """
+
+    strategy: stg.Strategy = stg.Strategy.SINGLE
+    mesh: Optional[Mesh] = None
+    cache_policy: str = "full_kv"
+    max_slots: int = 8
+    max_len: int = 512  # per-slot cache capacity (source capacity for encdec)
+    prefill_chunk: int = 32
+    admission: str = "continuous"
+    window: Optional[int] = None  # rolling buffer size (cache_policy="window")
+    stage_kernel: str = "jnp"
+
+    def __post_init__(self):
+        object.__setattr__(self, "strategy", stg.Strategy(self.strategy))
+        if self.cache_policy not in CACHE_POLICIES:
+            raise ValueError(f"cache_policy must be one of {CACHE_POLICIES}, got {self.cache_policy!r}")
+        if self.admission not in ADMISSIONS:
+            raise ValueError(f"admission must be one of {ADMISSIONS}, got {self.admission!r}")
+        if self.stage_kernel not in STAGE_KERNELS:
+            raise ValueError(f"stage_kernel must be one of {STAGE_KERNELS}, got {self.stage_kernel!r}")
+        if self.max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {self.max_slots}")
+        if self.max_len < 1 or self.prefill_chunk < 1:
+            raise ValueError(f"max_len/prefill_chunk must be >= 1, got {self.max_len}/{self.prefill_chunk}")
+        if self.max_len % self.prefill_chunk:
+            raise ValueError(
+                f"prefill_chunk={self.prefill_chunk} must divide max_len={self.max_len} "
+                "(chunked prefill tiles the cache capacity exactly)"
+            )
+        if self.cache_policy == "window":
+            if self.window is None or self.window < 1:
+                raise ValueError("cache_policy='window' requires a positive window")
+            if self.prefill_chunk > self.window:
+                raise ValueError(
+                    f"prefill_chunk={self.prefill_chunk} cannot exceed window={self.window} "
+                    "(a chunk must not wrap the rolling buffer onto itself)"
+                )
+        elif self.window is not None:
+            raise ValueError(f"window is only meaningful for cache_policy='window', got {self.cache_policy!r}")
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def for_config(cls, cfg, **overrides) -> "ServePlan":
+        """Default plan for an architecture: the family picks the policy
+        (seq2seq -> encdec_memory, attention-free -> recurrent, sliding
+        window -> window, else full_kv).  Unlike the strict constructor,
+        a requested ``prefill_chunk`` is FITTED — clamped to the largest
+        exact divisor of the cache capacity (launchers pass user flags
+        here; direct construction keeps the hard divisibility error)."""
+        if "cache_policy" not in overrides:
+            if cfg.family == "seq2seq":
+                overrides["cache_policy"] = "encdec_memory"
+            elif not cls._has_attention(cfg):
+                overrides["cache_policy"] = "recurrent"
+            elif cfg.sliding_window:
+                overrides["cache_policy"] = "window"
+                overrides.setdefault("window", cfg.sliding_window)
+        from repro.kernels import fit_block
+
+        want = overrides.get("prefill_chunk", cls.prefill_chunk)
+        if overrides.get("cache_policy") == "window" and overrides.get("window"):
+            want = min(want, overrides["window"])  # a chunk must not wrap the buffer
+        overrides["prefill_chunk"] = fit_block(overrides.get("max_len", cls.max_len), want)
+        plan = cls(**overrides)
+        plan.validate_for(cfg)
+        return plan
+
+    @staticmethod
+    def _has_attention(cfg) -> bool:
+        if cfg.family == "seq2seq":
+            return False
+        from repro.models import transformer as tfm  # local: avoid cycle
+
+        return "attn" in tfm.block_pattern(cfg)
+
+    # -- validation ---------------------------------------------------------
+
+    def validate_for(self, cfg) -> None:
+        """Reject plan/architecture combinations that cannot mean anything:
+        the policy names the per-slot state, so it must match what the
+        family actually carries."""
+        is_s2s = cfg.family == "seq2seq"
+        if self.cache_policy == "encdec_memory" and not is_s2s:
+            raise ValueError(f"encdec_memory serves the seq2seq family, not {cfg.family!r}")
+        if is_s2s and self.cache_policy != "encdec_memory":
+            raise ValueError(f"the seq2seq family requires cache_policy='encdec_memory', got {self.cache_policy!r}")
+        has_attn = self._has_attention(cfg)
+        if self.cache_policy == "recurrent" and has_attn:
+            raise ValueError(f"{cfg.name} has attention layers; their KV is not O(1) — use full_kv/window")
+        if self.cache_policy in ("full_kv", "window") and not has_attn and not is_s2s:
+            raise ValueError(
+                f"cache_policy={self.cache_policy!r} on the recurrent family {cfg.name}: "
+                "there is no KV cache to manage — use cache_policy='recurrent'"
+            )
+
+    def validate_batch(self, num_requests: int) -> None:
+        """Static admission runs one batch start-to-finish: it must fit the
+        slot table.  Continuous admission queues any overflow."""
+        if self.admission == "static" and num_requests > self.max_slots:
+            raise ValueError(
+                f"static admission: {num_requests} requests exceed max_slots={self.max_slots} "
+                "(use admission='continuous' to queue)"
+            )
+
+    # -- derived ------------------------------------------------------------
+
+    @property
+    def cache_capacity(self) -> int:
+        """Per-slot attention-cache capacity in tokens (the rolling buffer
+        size under the window policy)."""
+        return self.window if self.cache_policy == "window" else self.max_len
+
+    def phase_boundary(self) -> Callable:
+        return stg.phase_boundary_fn(self.strategy, self.mesh)
+
+    def engine_kwargs(self) -> dict:
+        """The plan as engine keyword arguments.  Round-trips:
+        ``ServePlan(**plan.engine_kwargs()) == plan``."""
+        return dict(
+            strategy=self.strategy,
+            mesh=self.mesh,
+            cache_policy=self.cache_policy,
+            max_slots=self.max_slots,
+            max_len=self.max_len,
+            prefill_chunk=self.prefill_chunk,
+            admission=self.admission,
+            window=self.window,
+            stage_kernel=self.stage_kernel,
+        )

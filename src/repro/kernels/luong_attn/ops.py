@@ -1,18 +1,56 @@
-"""Public wrapper for the fused Luong attention head."""
+"""Public wrapper for the fused Luong attention head.
+
+``luong_attention_fused`` is differentiable: the forward runs the Pallas
+kernel (compiled on TPU, interpret mode on CPU) and a ``jax.custom_vjp``
+recomputes the head with the jnp oracle under ``jax.vjp`` for the backward
+— jax 0.4.x cannot linearize through ``pallas_call`` (even interpreted),
+and the flash-style recompute (scores/alpha rebuilt from saved inputs, no
+activation stash) is the schedule a fused backward kernel would implement.
+This is what lets ``seq2seq.attention_softmax_head`` dispatch here inside
+a training step (``ExecutionPlan.stage_kernel``), not just at decode time.
+"""
 from __future__ import annotations
 
-import jax.numpy as jnp
+import functools
+
+import jax
+import numpy as np
 
 from repro import kernels
 from repro.kernels.luong_attn.kernel import luong_attention_pallas
+from repro.kernels.luong_attn.ref import luong_attention_ref
+
+
+@functools.lru_cache(maxsize=None)
+def _make_fused_head(block_n: int, interpret: bool):
+    @jax.custom_vjp
+    def head(H, S, src_mask, w_alpha, w_ch, w_cc):
+        return luong_attention_pallas(H, S, src_mask, w_alpha, w_ch, w_cc, block_n=block_n, interpret=interpret)
+
+    def fwd(H, S, src_mask, w_alpha, w_ch, w_cc):
+        return head(H, S, src_mask, w_alpha, w_ch, w_cc), (H, S, src_mask, w_alpha, w_ch, w_cc)
+
+    def bwd(res, ct):
+        H, S, src_mask, w_alpha, w_ch, w_cc = res
+        _, vjp = jax.vjp(
+            lambda h_, s_, wa_, wch_, wcc_: luong_attention_ref(h_, s_, src_mask, wa_, wch_, wcc_),
+            H, S, w_alpha, w_ch, w_cc,
+        )
+        dH, dS, dwa, dwch, dwcc = vjp(ct)
+        dmask = np.zeros(src_mask.shape, jax.dtypes.float0)  # bool primal: zero-sized tangent
+        return dH, dS, dmask, dwa, dwch, dwcc
+
+    head.defvjp(fwd, bwd)
+    return head
 
 
 def luong_attention_fused(H, S, src_mask, w_alpha, w_c, *, block_n: int = 128, interpret: bool | None = None):
     """H [B,N,h], S [B,M,h], src_mask [B,M], w_alpha [h,h], w_c [2h,h]
-    (the paper's layout: tanh(W_c [H; C])) -> Hc [B,N,h]."""
+    (the paper's layout: tanh(W_c [H; C])) -> Hc [B,N,h].  Differentiable
+    via the recompute custom-vjp backward."""
     if interpret is None:
         interpret = kernels.INTERPRET
     h = H.shape[-1]
     w_ch, w_cc = w_c[:h], w_c[h:]
     bn = kernels.fit_block(H.shape[1], block_n)
-    return luong_attention_pallas(H, S, src_mask, w_alpha, w_ch, w_cc, block_n=bn, interpret=interpret)
+    return _make_fused_head(bn, bool(interpret))(H, S, src_mask, w_alpha, w_ch, w_cc)

@@ -1,7 +1,15 @@
-"""Serving launcher: batched generation with a KV cache / recurrent state.
+"""Serving launcher: plan-driven continuous batching for every family,
+including the paper's own seq2seq arch (encdec_memory cache policy).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --batch 4 --prompt-len 32 --steps 16
+    PYTHONPATH=src python -m repro.launch.serve --arch seq2seq-rnn --smoke
+
+A :class:`repro.core.plan.ServePlan` carries every serving decision
+(cache policy, slot table, prefill chunk, admission); the engine consumes
+the plan instead of per-call arguments.  ``--engine static`` keeps the
+legacy padded-batch ``ServeEngine`` loop (frontend archs fall back to it:
+the continuous engine has no frontend-embedding queue).
 """
 from __future__ import annotations
 
@@ -13,45 +21,84 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core.strategy import Strategy
+from repro.core.plan import ADMISSIONS, CACHE_POLICIES, ServePlan
+from repro.models import seq2seq as s2s
 from repro.models import transformer as tfm
-from repro.serve import ServeEngine
+from repro.serve import ContinuousEngine, ServeEngine, make_sampler
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4, help="number of requests")
+    ap.add_argument("--prompt-len", type=int, default=32, help="mean prompt length (requests vary around it)")
+    ap.add_argument("--steps", type=int, default=16, help="max new tokens per request")
     ap.add_argument("--window", type=int, default=None)
+    ap.add_argument("--cache-policy", choices=(*CACHE_POLICIES, "auto"), default="auto")
+    ap.add_argument("--admission", choices=ADMISSIONS, default="continuous")
+    ap.add_argument("--max-slots", type=int, default=None, help="slot table size (default: --batch)")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=None, help="per-slot cache capacity")
+    ap.add_argument("--engine", choices=("continuous", "static"), default="continuous")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    if cfg.family == "seq2seq":
-        raise SystemExit("use examples/translate.py for the seq2seq arch")
-    params, _ = tfm.init_lm(jax.random.key(args.seed), cfg)
     rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)
-    frontend = None
-    if cfg.frontend:
-        frontend = jnp.asarray(rng.normal(size=(args.batch, cfg.frontend_len, cfg.d_model)), jnp.float32)
+    sampler = make_sampler(args.temperature)
+    sample_rng = jax.random.key(args.seed) if args.temperature > 0 else None
 
-    engine = ServeEngine(cfg, params, window=args.window, max_len=args.prompt_len + args.steps)
-    t0 = time.perf_counter()
-    if args.temperature > 0:
-        from repro.serve.sampling import temperature_sample
-        import functools
+    max_len = args.max_len or max(64, args.prompt_len + args.steps)
+    overrides = dict(
+        max_slots=args.max_slots or args.batch,
+        max_len=max_len,
+        prefill_chunk=args.prefill_chunk,  # for_config fits it to the capacity
+        admission=args.admission,
+    )
+    if args.cache_policy != "auto":
+        overrides["cache_policy"] = args.cache_policy
+    if args.window is not None:
+        if args.cache_policy not in ("auto", "window"):
+            raise SystemExit(f"--window conflicts with --cache-policy {args.cache_policy}")
+        overrides.update(cache_policy="window", window=args.window)
 
-        sampler = functools.partial(temperature_sample, temperature=args.temperature)
-        out = engine.generate(prompts, args.steps, frontend=frontend, sampler=sampler, rng=jax.random.key(args.seed))
+    if cfg.family == "seq2seq":
+        params, _ = s2s.init_seq2seq(jax.random.key(args.seed), cfg)
     else:
-        out = engine.generate(prompts, args.steps, frontend=frontend)
+        params, _ = tfm.init_lm(jax.random.key(args.seed), cfg)
+
+    if args.engine == "static" or cfg.frontend:
+        # legacy padded-batch loop (and the frontend-stub archs, whose
+        # precomputed embeddings the continuous queue does not carry)
+        if cfg.family == "seq2seq":
+            raise SystemExit("the seq2seq arch serves through the continuous engine (--engine continuous)")
+        plan = ServePlan.for_config(cfg, **overrides)
+        prompts = jnp.asarray(rng.integers(3, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)
+        frontend = None
+        if cfg.frontend:
+            frontend = jnp.asarray(rng.normal(size=(args.batch, cfg.frontend_len, cfg.d_model)), jnp.float32)
+        engine = ServeEngine(cfg, params, plan=plan)
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, args.steps, frontend=frontend, sampler=sampler, rng=sample_rng)
+        dt = time.perf_counter() - t0
+        print(f"[static] generated {out.shape} in {dt:.2f}s ({args.batch * args.steps / dt:.1f} tok/s)")
+        print(np.asarray(out)[:2])
+        return
+
+    plan = ServePlan.for_config(cfg, **overrides)
+    engine = ContinuousEngine(cfg, params, plan, bos=1, eos=2)
+    lens = rng.integers(max(1, args.prompt_len // 2), args.prompt_len + 1, size=args.batch)
+    prompts = [rng.integers(3, cfg.vocab_size, size=int(L)).astype(np.int32) for L in lens]
+    t0 = time.perf_counter()
+    outs = engine.run(prompts, args.steps, sampler=sampler, rng=sample_rng)
     dt = time.perf_counter() - t0
-    print(f"generated {out.shape} in {dt:.2f}s ({args.batch * args.steps / dt:.1f} tok/s)")
-    print(np.asarray(out)[:2])
+    tok = sum(len(o) for o in outs)
+    print(f"[{cfg.name} | {plan.cache_policy} | {plan.admission}] {len(outs)} requests, "
+          f"{tok} tokens in {dt:.2f}s ({tok / dt:.1f} tok/s)")
+    for o in outs[:2]:
+        print(o.tolist())
 
 
 if __name__ == "__main__":

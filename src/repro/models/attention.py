@@ -326,27 +326,70 @@ def decode_attention(
     *,
     rolling: bool = False,
 ) -> jax.Array:
-    """One-token attention against the cache.
+    """Attention for S new tokens against a cache they were just written to.
 
-    q: grouped [B, 1, KV, G, D]; cache_k/v: [B, C, KV, D]; length: absolute
-    position of the new token (tokens 0..length valid, incl. just-written).
+    q: grouped [B, S, KV, G, D] at absolute positions length..length+S-1;
+    cache_k/v: [B, C, KV, D] already holding the new tokens.  S == 1 is the
+    classic decode step; S > 1 is the chunked-prefill extend.  For rolling
+    caches only S == 1 is exact here (an S-chunk write evicts positions
+    earlier queries in the chunk still attend — use
+    :func:`decode_attention_concat` for that case).
     """
     cache_k, cache_v = _match_kv(q, cache_k, cache_v)
-    B, _, KV, G, D = q.shape
+    B, S, KV, G, D = q.shape
     C = cache_k.shape[1]
     qg = q.astype(jnp.float32) * (1.0 / math.sqrt(D))
     s = jnp.einsum("bskgd,btkd->bkgst", qg, cache_k.astype(jnp.float32))
     slot = jnp.arange(C)
+    qpos = length + jnp.arange(S)
     if rolling:
-        # slot t holds absolute position p = length - ((length - t) mod C);
-        # valid iff p >= 0 and p <= length (always true once wrapped).
-        pos = length - jnp.mod(length - slot, C)
-        valid = pos >= 0
+        # slot t holds the newest absolute position p = t (mod C) with
+        # p <= newest-written; valid for query i iff p >= 0 and p <= qpos_i
+        # (masks the chunk's own still-future tokens).
+        newest = length + S - 1
+        pos = newest - jnp.mod(newest - slot[None, :], C)
+        valid = (pos >= 0) & (pos <= qpos[:, None])
     else:
-        valid = slot <= length
-    s = jnp.where(valid[None, None, None, None], s, NEG_INF)
+        valid = slot[None, :] <= qpos[:, None]
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgst,btkd->bskgd", p, cache_v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_concat(
+    q: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    length: jax.Array,
+) -> jax.Array:
+    """Chunked-prefill attention for a *rolling* cache: attend against the
+    pre-write buffer ++ the fresh chunk, so every query in the chunk sees
+    its full window even where the chunk's write will evict old slots.
+
+    q/k_new/v_new carry S tokens at positions length..length+S-1;
+    cache_k/v [B, W, KV, D] is the rolling buffer BEFORE the chunk's write.
+    """
+    cache_k, cache_v = _match_kv(q, cache_k, cache_v)
+    k_new, v_new = _match_kv(q, k_new, v_new)
+    B, S, KV, G, D = q.shape
+    W = cache_k.shape[1]
+    qpos = length + jnp.arange(S)
+    slot = jnp.arange(W)
+    # buffer slot t holds position p = t (mod W), newest written = length-1
+    pos_old = (length - 1) - jnp.mod((length - 1) - slot[None, :], W)
+    valid_old = (pos_old >= 0) & (pos_old > qpos[:, None] - W)
+    valid_new = qpos[None, :] <= qpos[:, None]  # window bound is free: S <= W
+    kk = jnp.concatenate([cache_k, k_new.astype(cache_k.dtype)], axis=1)
+    vv = jnp.concatenate([cache_v, v_new.astype(cache_v.dtype)], axis=1)
+    valid = jnp.concatenate([valid_old, valid_new], axis=1)  # [S, W+S]
+    qg = q.astype(jnp.float32) * (1.0 / math.sqrt(D))
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, kk.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, vv.astype(jnp.float32))
     return o.astype(q.dtype)
 
 

@@ -71,15 +71,27 @@ def init_seq2seq(key: jax.Array, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 
-def attention_softmax_head(head, S: jax.Array, H: jax.Array, src_mask: jax.Array):
+def attention_softmax_head(head, S: jax.Array, H: jax.Array, src_mask: jax.Array, *, stage_kernel: str = "jnp"):
     """S [B,M,h] encoder states, H [B,N,h] decoder states ->
-    (Hc [B,N,h], logits [B,N,V])."""
+    (Hc [B,N,h], logits [B,N,V]).
+
+    ``stage_kernel`` uses the training plan's vocabulary: ``jnp`` runs the
+    einsum math below; ``pallas``/``pallas_interpret`` dispatch eq. 1-4 to
+    the fused ``kernels/luong_attn`` head (eq. 5 stays a plain fp32 GEMM)."""
     dt = H.dtype
-    scores = jnp.einsum("bnh,hk,bmk->bnm", H, head["w_alpha"].astype(dt), S)
-    scores = jnp.where(src_mask[:, None, :], scores.astype(jnp.float32), -1e30)
-    alpha = jax.nn.softmax(scores, axis=-1).astype(dt)  # eq. 1-2
-    C = jnp.einsum("bnm,bmh->bnh", alpha, S)  # eq. 3
-    Hc = jnp.tanh(jnp.einsum("bnh,hk->bnk", jnp.concatenate([H, C], -1), head["w_c"].astype(dt)))  # eq. 4
+    if stage_kernel != "jnp":
+        from repro.kernels.luong_attn.ops import luong_attention_fused  # local: keep import light
+
+        Hc = luong_attention_fused(
+            H, S, src_mask, head["w_alpha"].astype(dt), head["w_c"].astype(dt),
+            interpret=stage_kernel == "pallas_interpret",
+        )
+    else:
+        scores = jnp.einsum("bnh,hk,bmk->bnm", H, head["w_alpha"].astype(dt), S)
+        scores = jnp.where(src_mask[:, None, :], scores.astype(jnp.float32), -1e30)
+        alpha = jax.nn.softmax(scores, axis=-1).astype(dt)  # eq. 1-2
+        C = jnp.einsum("bnm,bmh->bnh", alpha, S)  # eq. 3
+        Hc = jnp.tanh(jnp.einsum("bnh,hk->bnk", jnp.concatenate([H, C], -1), head["w_c"].astype(dt)))  # eq. 4
     logits = jnp.einsum("bnh,hv->bnv", Hc.astype(jnp.float32), head["f_c"].astype(jnp.float32))  # eq. 5
     return Hc, logits
 
@@ -97,10 +109,13 @@ def forward_no_input_feeding(
     dropout_rng: Optional[jax.Array] = None,
     phase_boundary: Callable = Identity,
     backbone: Callable | None = None,
+    stage_kernel: str = "jnp",
 ):
     """HybridNMT forward.  ``backbone`` optionally overrides how the stacked
     LSTMs are executed (the wavefront pipeline substitutes here); it must map
     (lstm_params, embedded [B,S,e]) -> hidden states [B,S,h].
+    ``stage_kernel`` selects the attention-softmax head compute (jnp math or
+    the fused Pallas Luong kernel).
     """
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     run = backbone or (lambda ps, xs, rng: lstm.run_stacked_lstm(ps, xs, dropout_rng=rng, dropout=cfg.dropout)[0])
@@ -115,7 +130,7 @@ def forward_no_input_feeding(
     # ---- reshard boundary (the paper's hybrid hand-off) ----------------
     S, H = phase_boundary(S), phase_boundary(H)
     # ---- phase 2: data-parallel attention-softmax ----------------------
-    _, logits = attention_softmax_head(params["head"], S, H, batch.src_mask)
+    _, logits = attention_softmax_head(params["head"], S, H, batch.src_mask, stage_kernel=stage_kernel)
     loss, denom = softmax_cross_entropy(logits, batch.tgt_out, batch.tgt_mask)
     return loss, {"logits": logits, "denom": denom}
 
@@ -127,6 +142,7 @@ def forward_input_feeding(
     *,
     dropout_rng: Optional[jax.Array] = None,
     phase_boundary: Callable = Identity,
+    stage_kernel: str = "jnp",
 ):
     """Baseline / HybridNMTIF forward: Hc_{t-1} concatenated to the first
     decoder LSTM input (Fig. 1) — the decoder is a single serial scan."""
@@ -149,13 +165,13 @@ def forward_input_feeding(
         for p, st in zip(dec, states):
             st2, hcur = lstm.lstm_cell(p, hcur, st)
             new_states.append(st2)
-        Hc, _ = attention_softmax_head(head, S, hcur[:, None, :], batch.src_mask)
+        Hc, _ = attention_softmax_head(head, S, hcur[:, None, :], batch.src_mask, stage_kernel=stage_kernel)
         hc = Hc[:, 0]
         return (new_states, hc), hcur
 
     (states, _), Hs = jax.lax.scan(step, (states0, jnp.zeros((B, h), dt)), tgt_e.swapaxes(0, 1))
     H = Hs.swapaxes(0, 1)  # [B, N, h]
-    _, logits = attention_softmax_head(head, S, H, batch.src_mask)
+    _, logits = attention_softmax_head(head, S, H, batch.src_mask, stage_kernel=stage_kernel)
     loss, denom = softmax_cross_entropy(logits, batch.tgt_out, batch.tgt_mask)
     return loss, {"logits": logits, "denom": denom}
 
@@ -168,36 +184,94 @@ def forward(params, cfg: ModelConfig, batch: Seq2SeqBatch, **kw):
 
 
 # ---------------------------------------------------------------------------
-# greedy decode (serving / BLEU-proxy eval)
+# serving path: encdec_memory cache (encoder states S are the cached memory,
+# the Luong attention-softmax head is the per-token decode step)
 # ---------------------------------------------------------------------------
 
 
-def greedy_decode(params, cfg: ModelConfig, src: jax.Array, src_mask: jax.Array, max_len: int, bos: int, eos: int):
-    """Greedy search; returns [B, max_len] tokens.  Works for both variants
-    (at inference, input feeding feeds Hc back explicitly)."""
+class Seq2SeqCache(NamedTuple):
+    """Per-request serving state for the ``encdec_memory`` cache policy.
+
+    The encoder states S — the paper's phase-1 output — are the cached
+    "memory" a request carries; the decoder side is O(1): the stacked-LSTM
+    cell states plus the input-feeding carry Hc."""
+
+    memory: jax.Array  # [B, M_cap, h] encoder states written so far
+    src_mask: jax.Array  # [B, M_cap] bool: which memory slots are real
+    enc_states: tuple  # per-layer LSTMCellState — carried across encode chunks
+    dec_states: tuple  # per-layer LSTMCellState
+    hc: jax.Array  # [B, h] input-feeding carry (zeros when unused)
+    length: jax.Array  # [] int32: source positions encoded so far
+
+
+def init_seq2seq_cache(cfg: ModelConfig, batch: int, capacity: int) -> Seq2SeqCache:
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-    B = src.shape[0]
     h = cfg.d_model
-    src_e = params["src_emb"]["table"].astype(dt)[src]
-    S = lstm.run_stacked_lstm(params["encoder"], src_e)[0]
-    dec = params["decoder"]
+    states = tuple(lstm.init_lstm_state(batch, h) for _ in range(cfg.num_layers))
+    return Seq2SeqCache(
+        memory=jnp.zeros((batch, capacity, h), dt),
+        src_mask=jnp.zeros((batch, capacity), bool),
+        enc_states=states,
+        dec_states=states,
+        hc=jnp.zeros((batch, h), dt),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def encode_extend(params, cfg: ModelConfig, src_chunk: jax.Array, cache: Seq2SeqCache, chunk_mask=None):
+    """Chunked prefill for the encdec policy: run the encoder over
+    ``src_chunk`` [B, s] continuing from the carried LSTM states, write the
+    resulting states into the memory at ``cache.length``.  ``chunk_mask``
+    [B, s] marks real tokens (default all-real); padded positions still run
+    through the LSTM (same semantics as the batched training forward) but
+    are masked out of the attention memory."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    B, s = src_chunk.shape
+    src_e = params["src_emb"]["table"].astype(dt)[src_chunk]
+    h, enc_states = lstm.run_stacked_lstm(params["encoder"], src_e, states=list(cache.enc_states))
+    if chunk_mask is None:
+        chunk_mask = jnp.ones((B, s), bool)
+    memory = jax.lax.dynamic_update_slice(cache.memory, h.astype(cache.memory.dtype), (0, cache.length, 0))
+    src_mask = jax.lax.dynamic_update_slice(cache.src_mask, chunk_mask, (0, cache.length))
+    return cache._replace(
+        memory=memory, src_mask=src_mask, enc_states=tuple(enc_states), length=cache.length + s
+    )
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Seq2SeqCache, *, stage_kernel: str = "jnp"):
+    """One serving decode step: embed ``token`` [B], advance the decoder
+    LSTM cells, run the attention-softmax head against the cached memory.
+    Returns (logits [B, V], new cache)."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    emb = params["tgt_emb"]["table"].astype(dt)[token]
+    x = jnp.concatenate([emb, cache.hc.astype(dt)], -1) if cfg.input_feeding else emb
+    new_states = []
+    hcur = x
+    for p, st in zip(params["decoder"], cache.dec_states):
+        st2, hcur = lstm.lstm_cell(p, hcur, st)
+        new_states.append(st2)
+    Hc, logits = attention_softmax_head(
+        params["head"], cache.memory, hcur[:, None, :], cache.src_mask, stage_kernel=stage_kernel
+    )
+    return logits[:, 0], cache._replace(dec_states=tuple(new_states), hc=Hc[:, 0])
+
+
+def greedy_decode(params, cfg: ModelConfig, src: jax.Array, src_mask: jax.Array, max_len: int, bos: int, eos: int):
+    """Greedy search; returns [B, max_len] tokens.  Thin wrapper over the
+    serving path (encode_extend + decode_step) — the same computation the
+    continuous-batching engine runs per slot."""
+    B, M = src.shape
+    cache = init_seq2seq_cache(cfg, B, M)
+    cache = encode_extend(params, cfg, src, cache, chunk_mask=src_mask)
 
     def step(carry, _):
-        tok, states, hc_prev, done = carry
-        emb = params["tgt_emb"]["table"].astype(dt)[tok]
-        x = jnp.concatenate([emb, hc_prev.astype(dt)], -1) if cfg.input_feeding else emb
-        new_states = []
-        hcur = x
-        for p, st in zip(dec, states):
-            st2, hcur = lstm.lstm_cell(p, hcur, st)
-            new_states.append(st2)
-        Hc, logits = attention_softmax_head(params["head"], S, hcur[:, None, :], src_mask)
-        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        tok, cache, done = carry
+        logits, cache = decode_step(params, cfg, tok, cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         nxt = jnp.where(done, eos, nxt)
         done = done | (nxt == eos)
-        return (nxt, new_states, Hc[:, 0], done), nxt
+        return (nxt, cache, done), nxt
 
-    states0 = [lstm.init_lstm_state(B, h) for _ in dec]
-    carry0 = (jnp.full((B,), bos, jnp.int32), states0, jnp.zeros((B, h), dt), jnp.zeros((B,), bool))
+    carry0 = (jnp.full((B,), bos, jnp.int32), cache, jnp.zeros((B,), bool))
     _, toks = jax.lax.scan(step, carry0, None, length=max_len)
     return toks.swapaxes(0, 1)

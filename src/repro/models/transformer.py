@@ -159,8 +159,15 @@ def _self_attention(p, cfg: ModelConfig, x, ctx: RunCtx, cache, positions, lengt
     if ctx.mode == "decode":
         ck, cv = cache
         rolling = ctx.window is not None and ck.shape[1] == ctx.window
-        ck, cv = attn.cache_update(ck, cv, k, v, length, rolling)
-        o = attn.decode_attention(q, ck, cv, length, rolling=rolling)
+        if rolling and x.shape[1] > 1:
+            # chunked extend on a rolling buffer: attend pre-write buffer ++
+            # fresh chunk (the chunk's write evicts slots earlier queries in
+            # the chunk still need), then write.
+            o = attn.decode_attention_concat(q, ck, cv, k, v, length)
+            ck, cv = attn.cache_update(ck, cv, k, v, length, rolling)
+        else:
+            ck, cv = attn.cache_update(ck, cv, k, v, length, rolling)
+            o = attn.decode_attention(q, ck, cv, length, rolling=rolling)
         return attn.output_proj(p, cfg, o), (ck, cv)
     if ctx.attn_mesh is not None and x.shape[1] > ctx.q_chunk:
         o = attn.attend_shard_map(
@@ -479,21 +486,26 @@ def forward_prefill(
 def forward_decode(
     params,
     cfg: ModelConfig,
-    token: jax.Array,  # [B] int32
+    token: jax.Array,  # [B] int32, or [B, s] for a chunked extend
     cache: LMCache,
     *,
     memory: Optional[jax.Array] = None,
     ctx: RunCtx = RunCtx(mode="decode"),
     phase_boundary: Callable = Identity,
 ):
-    """One decode step: returns (logits [B, V], new_cache)."""
+    """Decode step against the cache: one token ([B]) or a chunk ([B, s] —
+    the chunked-prefill extend).  Returns (logits at the last position
+    [B, V], new_cache with length advanced by s)."""
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-    x = params["embed"]["table"].astype(dt)[token][:, None, :]  # [B,1,d]
+    tokens = token if token.ndim == 2 else token[:, None]
+    s = tokens.shape[1]
+    x = params["embed"]["table"].astype(dt)[tokens]  # [B,s,d]
+    offs = cache.length + jnp.arange(s)
     if "pos_emb" in params:
-        x = x + params["pos_emb"]["table"][cache.length][None, None].astype(dt)
-    positions = cache.length[None, None] + jnp.zeros((1, 1), jnp.int32)
+        x = x + params["pos_emb"]["table"][offs][None].astype(dt)
+    positions = offs[None, :]
     x, new_cache, _ = run_trunk(params, cfg, x, ctx, cache, positions, memory)
     x = common.apply_norm(params["final_norm"], x, cfg.norm)
-    x = phase_boundary(x)
+    x = phase_boundary(x[:, -1:])
     logits = common.unembed(lm_head_weight(params, cfg), x)[:, 0]
-    return logits, LMCache(entries=new_cache.entries, length=cache.length + 1)
+    return logits, LMCache(entries=new_cache.entries, length=cache.length + s)

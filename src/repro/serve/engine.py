@@ -1,4 +1,4 @@
-"""Batched serving engine.
+"""Batched serving engines.
 
 ``serve_step_fn`` builds the jit'd one-token decode step used by the
 decode-shape dry-runs (``decode_32k``, ``long_500k``): one new token per
@@ -7,6 +7,17 @@ window buffer (sliding-window variants), or an O(1) recurrent state
 (ssm / hybrid archs).  ``ServeEngine`` wraps prefill + decode for the
 runnable examples (padding the prefill cache up to capacity).
 
+``ContinuousEngine`` is the plan-driven path: a
+:class:`repro.core.plan.ServePlan` names the cache policy (full_kv /
+window / recurrent / encdec_memory), the slot-table size, the prefill
+chunk and the admission discipline, and the engine schedules requests
+through ONE jit'd extend step — a chunked-prefill call is the step at
+``s = prefill_chunk`` on one slot, a decode tick is the step at ``s = 1``
+vmapped over the whole slot table (per-slot lengths live inside each
+slot's cache, so static shapes hold at every tick).  Slots recycle on
+EOS under continuous admission; retired slots are reset (optionally
+poisoned first — the test canary that recycling cannot leak state).
+
 Cache sharding comes from ``core.strategy.cache_entry_spec``: batch over
 the data axes, KV heads over ``model`` when divisible — otherwise the cache
 *sequence* dim is model-sharded and the single-query softmax reduces with
@@ -14,15 +25,18 @@ small stat collectives (sequence-parallel decode; see DESIGN.md §2).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from collections import deque
+from typing import Any, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import strategy as stg
+from repro.core.plan import ServePlan
+from repro.models import seq2seq as s2s
 from repro.models import transformer as tfm
 from repro.serve.sampling import greedy
 
@@ -121,9 +135,17 @@ def pad_cache(cfg: ModelConfig, cache: tfm.LMCache, capacity: int) -> tfm.LMCach
 
 
 class ServeEngine:
-    """Host-side batched generation loop (examples / integration tests)."""
+    """Host-side batched generation loop (examples / integration tests).
 
-    def __init__(self, cfg: ModelConfig, params, *, mesh=None, strat=stg.Strategy.SINGLE, window=None, max_len=512):
+    Accepts an optional :class:`ServePlan` — the plan's window/strategy/mesh
+    replace the loose kwargs (``ContinuousEngine`` is the fully plan-driven
+    scheduler; this engine remains the static-batch prefill+decode loop)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, plan: Optional[ServePlan] = None, mesh=None, strat=stg.Strategy.SINGLE, window=None, max_len=512):
+        if plan is not None:
+            plan.validate_for(cfg)
+            mesh, strat = plan.mesh, plan.strategy
+            window, max_len = plan.window, plan.max_len
         self.cfg, self.params = cfg, params
         self.window = window
         self.max_len = max_len
@@ -149,3 +171,241 @@ class ServeEngine:
             tok = sampler(logits) if sub is None else sampler(logits, sub)
             out.append(tok)
         return jnp.stack(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# cache-policy adapters: what ONE slot's state is and how one step advances it
+# ---------------------------------------------------------------------------
+
+
+class _LMPolicy:
+    """full_kv / window / recurrent: the slot state is the transformer
+    LMCache (KV entries and/or recurrent states) at fixed capacity; prefill
+    and decode are the SAME extend step at different chunk sizes."""
+
+    prompt_primes_logits = True  # prefill's last logits seed the first token
+
+    def __init__(self, cfg: ModelConfig, plan: ServePlan):
+        self.cfg, self.plan = cfg, plan
+        window = plan.window if plan.cache_policy == "window" else None
+        self._ctx = tfm.RunCtx(mode="decode", window=window, remat=False)
+        self._pb = plan.phase_boundary()
+        self._window = window
+
+    def single_cache(self):
+        return tfm.init_cache(self.cfg, 1, self.plan.cache_capacity, self._window)
+
+    def prefill_one(self, params, tokens, cache):
+        logits, cache = tfm.forward_decode(
+            params, self.cfg, tokens, cache, ctx=self._ctx, phase_boundary=self._pb
+        )
+        return logits, cache
+
+    decode_one = prefill_one
+
+    def check_request(self, prompt_len: int, max_new: int):
+        if self.plan.cache_policy == "full_kv" and prompt_len + max_new > self.plan.max_len:
+            raise ValueError(
+                f"request needs {prompt_len + max_new} cache slots, full_kv capacity is {self.plan.max_len}"
+            )
+
+
+class _EncDecPolicy:
+    """encdec_memory: the paper's seq2seq through the same engine — prefill
+    runs the encoder (the states S become the cached memory), decode is one
+    decoder-LSTM step plus the Luong attention-softmax head."""
+
+    prompt_primes_logits = False  # decoding starts from BOS, not the source
+
+    def __init__(self, cfg: ModelConfig, plan: ServePlan):
+        self.cfg, self.plan = cfg, plan
+        self._sk = plan.stage_kernel
+
+    def single_cache(self):
+        return s2s.init_seq2seq_cache(self.cfg, 1, self.plan.max_len)
+
+    def prefill_one(self, params, tokens, cache):
+        return None, s2s.encode_extend(params, self.cfg, tokens, cache)
+
+    def decode_one(self, params, tokens, cache):
+        return s2s.decode_step(params, self.cfg, tokens.reshape(-1), cache, stage_kernel=self._sk)
+
+    def check_request(self, prompt_len: int, max_new: int):
+        if prompt_len > self.plan.max_len:
+            raise ValueError(f"source length {prompt_len} exceeds memory capacity {self.plan.max_len}")
+
+
+def _make_policy(cfg: ModelConfig, plan: ServePlan):
+    if plan.cache_policy == "encdec_memory":
+        return _EncDecPolicy(cfg, plan)
+    return _LMPolicy(cfg, plan)
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching scheduler
+# ---------------------------------------------------------------------------
+
+
+class _Slot:
+    __slots__ = ("req", "pos", "phase", "generated")
+
+    def __init__(self):
+        self.req = -1  # request index, -1 = free
+        self.pos = 0  # prompt tokens consumed
+        self.phase = "free"  # free | prefill | decode
+        self.generated: list = []
+
+
+def _mask_like(mask, leaf):
+    return mask.reshape((mask.shape[0],) + (1,) * (leaf.ndim - 1))
+
+
+class ContinuousEngine:
+    """Slot-table serving under a :class:`ServePlan`.
+
+    * chunked prefill: a prompt enters ``prefill_chunk`` tokens per step
+      (the ragged tail reuses the single-token step), interleaved with
+      decode ticks for the slots already generating;
+    * decode tick: ONE vmapped extend step over the whole slot table —
+      per-slot lengths live inside each slot's cache, inactive lanes are
+      masked back to their prior state, shapes never change;
+    * admit-on-EOS recycling (``admission="continuous"``): a finished
+      slot is reset to the fresh single-slot cache and the next queued
+      request enters; ``poison_on_recycle`` overwrites retired slots with
+      NaN/sentinel values first, so any state the reset misses becomes
+      loudly visible (the harness' poisoned-cache canary).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, plan: Optional[ServePlan] = None, *, bos: int = 1, eos: Optional[int] = None, poison_on_recycle: bool = False):
+        self.plan = plan if plan is not None else ServePlan.for_config(cfg)
+        self.plan.validate_for(cfg)
+        self.cfg, self.params = cfg, params
+        self.bos, self.eos = bos, eos
+        self.poison_on_recycle = poison_on_recycle
+        self.policy = _make_policy(cfg, self.plan)
+        K, C = self.plan.max_slots, self.plan.prefill_chunk
+        self._K, self._C = K, C
+        self._single = self.policy.single_cache()
+
+        def take(caches, slot):
+            return jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(a, slot, 0, keepdims=False), caches)
+
+        def put(caches, one, slot):
+            return jax.tree.map(
+                lambda full, leaf: jax.lax.dynamic_update_index_in_dim(full, leaf.astype(full.dtype), slot, 0),
+                caches, one,
+            )
+
+        def prefill_step(params, caches, slot, tokens):
+            logits, one = self.policy.prefill_one(params, tokens, take(caches, slot))
+            return logits, put(caches, one, slot)
+
+        def decode_tick(params, caches, tokens, active):
+            logits, new = jax.vmap(self.policy.decode_one, in_axes=(None, 0, 0))(params, tokens[:, None], caches)
+            merged = jax.tree.map(
+                lambda old, upd: jnp.where(_mask_like(active, upd), upd.astype(old.dtype), old), caches, new
+            )
+            return logits[:, 0], merged
+
+        def reset(caches, slot):
+            return put(caches, self._single, slot)
+
+        def poison(caches, slot):
+            bad = jax.tree.map(
+                lambda a: jnp.full(
+                    a.shape,
+                    True if a.dtype == jnp.bool_ else (2**30 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.nan),
+                    a.dtype,
+                ),
+                self._single,
+            )
+            return put(caches, bad, slot)
+
+        self._prefill_step = jax.jit(prefill_step)
+        self._decode_tick = jax.jit(decode_tick)
+        self._reset = jax.jit(reset)
+        self._poison = jax.jit(poison)
+
+    def _init_caches(self):
+        return jax.tree.map(lambda a: jnp.repeat(a[None], self._K, axis=0), self._single)
+
+    def run(self, prompts: Sequence, max_new, *, sampler=greedy, rng=None) -> List[np.ndarray]:
+        """Serve ``prompts`` (ragged list of 1-D int32 token arrays — source
+        sentences for encdec, contexts for LMs), generating up to ``max_new``
+        tokens each (int or per-request list); generation stops early at
+        ``eos`` when the engine has one.  Returns the generated tokens per
+        request, in request order."""
+        n = len(prompts)
+        prompts = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
+        max_news = [int(max_new)] * n if np.ndim(max_new) == 0 else [int(m) for m in max_new]
+        self.plan.validate_batch(n)
+        for p, m in zip(prompts, max_news):
+            if len(p) < 1 or m < 1:
+                raise ValueError("each request needs a non-empty prompt and max_new >= 1")
+            self.policy.check_request(len(p), m)
+
+        caches = self._init_caches()
+        slots = [_Slot() for _ in range(self._K)]
+        queue = deque(range(n))
+        outputs: List[Optional[np.ndarray]] = [None] * n
+        cur_tok = np.zeros(self._K, np.int64)
+
+        def retire(s: _Slot, k: int, caches):
+            outputs[s.req] = np.asarray(s.generated, np.int64)
+            s.req, s.phase, s.generated = -1, "free", []
+            if self.poison_on_recycle:
+                caches = self._poison(caches, jnp.int32(k))
+            return caches
+
+        def begin_decode(s: _Slot, k: int, logits, rng, caches):
+            """Prompt fully consumed: seed the decode phase (LM: sample the
+            first token from the prefill logits; encdec: feed BOS)."""
+            if self.policy.prompt_primes_logits:
+                rng, sub = (jax.random.split(rng) if rng is not None else (None, None))
+                tok = int(np.asarray(sampler(logits) if sub is None else sampler(logits, sub))[0])
+                s.generated.append(tok)
+                cur_tok[k] = tok
+                if (self.eos is not None and tok == self.eos) or len(s.generated) >= max_news[s.req]:
+                    return retire(s, k, caches), rng
+            else:
+                cur_tok[k] = self.bos
+            s.phase = "decode"
+            return caches, rng
+
+        while queue or any(s.phase != "free" for s in slots):
+            # ---- admission (continuous: whenever a slot is free) ----------
+            for k, s in enumerate(slots):
+                if s.phase == "free" and queue:
+                    s.req, s.pos, s.phase, s.generated = queue.popleft(), 0, "prefill", []
+                    caches = self._reset(caches, jnp.int32(k))
+            # ---- chunked prefill: one chunk per prefilling slot per tick --
+            for k, s in enumerate(slots):
+                if s.phase != "prefill":
+                    continue
+                prompt = prompts[s.req]
+                step = self._C if len(prompt) - s.pos >= self._C else 1
+                chunk = jnp.asarray(prompt[s.pos : s.pos + step][None])
+                logits, caches = self._prefill_step(self.params, caches, jnp.int32(k), chunk)
+                s.pos += step
+                if s.pos == len(prompt):
+                    caches, rng = begin_decode(s, k, logits, rng, caches)
+            # ---- decode tick: one vmapped step over the whole table -------
+            active = np.array([s.phase == "decode" for s in slots])
+            if active.any():
+                logits, caches = self._decode_tick(
+                    self.params, caches, jnp.asarray(cur_tok, jnp.int32), jnp.asarray(active)
+                )
+                if rng is not None:
+                    rng, sub = jax.random.split(rng)
+                    toks = np.asarray(sampler(logits, sub))
+                else:
+                    toks = np.asarray(sampler(logits))
+                for k, s in enumerate(slots):
+                    if s.phase != "decode":
+                        continue
+                    tok = int(toks[k])
+                    s.generated.append(tok)
+                    cur_tok[k] = tok
+                    if (self.eos is not None and tok == self.eos) or len(s.generated) >= max_news[s.req]:
+                        caches = retire(s, k, caches)
+        return outputs

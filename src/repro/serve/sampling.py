@@ -1,5 +1,14 @@
-"""Token sampling."""
+"""Token sampling.
+
+Samplers share one signature — ``sampler(logits [B, V], rng=None) ->
+tokens [B] int32`` — so the engines can swap them freely.  ``greedy``
+ignores the rng; ``temperature_sample`` requires one.  ``make_sampler``
+resolves a temperature into the right callable (temperature <= 0 means
+greedy, matching the launchers' ``--temperature 0`` convention).
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -11,3 +20,10 @@ def greedy(logits: jax.Array, rng=None) -> jax.Array:
 
 def temperature_sample(logits: jax.Array, rng: jax.Array, temperature: float = 1.0) -> jax.Array:
     return jax.random.categorical(rng, logits / max(temperature, 1e-4), axis=-1).astype(jnp.int32)
+
+
+def make_sampler(temperature: float = 0.0):
+    """temperature <= 0 -> greedy; otherwise seeded temperature sampling."""
+    if temperature <= 0.0:
+        return greedy
+    return functools.partial(temperature_sample, temperature=temperature)

@@ -69,6 +69,10 @@ def make_loss_fn(cfg: ModelConfig, plan: ExecutionPlan, *, remat: bool = True, p
             kw = dict(dropout_rng=rng, phase_boundary=pb)
             if backbone is not None and not cfg.input_feeding:
                 kw["backbone"] = backbone
+            if plan.stage_kernel != "jnp":
+                # the same plan switch that fuses the wavefront's LSTM cells
+                # fuses the head's Luong attention (eq. 1-4)
+                kw["stage_kernel"] = plan.stage_kernel
             loss, extras = s2s.forward(params, cfg, b, **kw)
             return loss, {"denom": extras["denom"]}
 

@@ -144,6 +144,44 @@ register(
 )
 
 
+def _run_luong_head(rng, s, dt):
+    """Model-level dispatch: seq2seq.attention_softmax_head with
+    stage_kernel="pallas_interpret" vs the jnp head math — the full eq. 1-5
+    head (Hc AND logits), through the exact entry point the training plan
+    and the encdec_memory decode step use."""
+    from repro.models.seq2seq import attention_softmax_head
+
+    B, N, M, h, V = s["B"], s["N"], s["M"], s["h"], s["V"]
+    head = {
+        "w_alpha": _arr(rng, (h, h), dt, 0.1),
+        "w_c": _arr(rng, (2 * h, h), dt, 0.1),
+        "f_c": _arr(rng, (h, V), dt, 0.1),
+    }
+    H = _arr(rng, (B, N, h), dt)
+    S = _arr(rng, (B, M, h), dt)
+    mask = jnp.asarray(rng.random((B, M)) > 0.2).at[:, 0].set(True)
+    fused = attention_softmax_head(head, S, H, mask, stage_kernel="pallas_interpret")
+    ref = attention_softmax_head(head, S, H, mask, stage_kernel="jnp")
+    return fused, ref
+
+
+register(
+    KernelCase(
+        name="luong_head",
+        run=_run_luong_head,
+        shapes=[
+            dict(B=2, N=8, M=12, h=32, V=64),
+            dict(B=4, N=16, M=6, h=64, V=32),
+        ],
+        ragged_shapes=[
+            dict(B=1, N=1, M=9, h=48, V=16),  # the decode step's N=1 shape
+            dict(B=3, N=7, M=5, h=24, V=40),  # everything odd
+        ],
+        tol=TOL_ATTN,
+    )
+)
+
+
 def _run_flash(rng, s, dt):
     from repro.kernels.flash_attn.ops import flash_attention
     from repro.models.attention import dense_attention

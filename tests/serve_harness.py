@@ -1,0 +1,255 @@
+"""Shared serving parity harness (mirrors ``tests/kernel_harness.py``).
+
+Every valid (cache_policy x family) combination registers a
+:class:`ServeCase`: which architecture to build, which plan to serve it
+under, and a per-family *full-sequence forward* oracle.  All serving
+correctness funnels through three invariants so the contract is uniform
+and a new policy/family gets the full battery by adding one registration
+block:
+
+* ``assert_decode_parity``    — chunked prefill + step-by-step decode
+  through the engine produces exactly the tokens the full-sequence
+  forward argmax produces (greedy, fp32).
+* ``assert_batch_independence`` — each request's output when served
+  together (shared slot table, interleaved admissions) is identical to
+  serving it alone.
+* ``assert_slot_recycling``   — with more requests than slots and
+  ``poison_on_recycle=True`` (retired slots are overwritten with
+  NaN/sentinel before reuse), recycled slots still reproduce the alone
+  outputs: admission's reset must rebuild EVERY leaf of a slot's state.
+
+``tests/test_serve.py`` drives the registry exhaustively (pytest marker
+``serve``); invalid policy x family pairs are pinned as ValueError in the
+coverage test there.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, field
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.plan import ServePlan
+
+
+@dataclass
+class ServeCase:
+    name: str  # "<family>-<cache_policy>"
+    family: str
+    cache_policy: str
+    arch: str  # config id; built at smoke scale, fp32 (exact argmax parity)
+    plan_kwargs: dict  # policy-specific ServePlan fields (window, ...)
+    prompt_lens: tuple  # ragged request lengths (exercise chunk tails)
+    max_new: int = 4
+    engine_kwargs: dict = field(default_factory=dict)  # bos/eos for encdec
+
+
+REGISTRY: Dict[str, ServeCase] = {}
+
+
+def register(case: ServeCase) -> ServeCase:
+    assert case.name not in REGISTRY, f"duplicate serve case {case.name}"
+    REGISTRY[case.name] = case
+    return case
+
+
+def all_names():
+    return sorted(REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# model construction (cached: params are reused across the three invariants)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def build(arch: str):
+    from repro.models import seq2seq as s2s
+    from repro.models import transformer as tfm
+
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dropout=0.0, dtype="float32")
+    if cfg.family == "seq2seq":
+        params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    else:
+        params, _ = tfm.init_lm(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def make_plan(case: ServeCase, **overrides) -> ServePlan:
+    kw = dict(cache_policy=case.cache_policy, max_slots=2, max_len=32, prefill_chunk=4)
+    kw.update(case.plan_kwargs)
+    kw.update(overrides)
+    cfg, _ = build(case.arch)
+    plan = ServePlan(**kw)
+    plan.validate_for(cfg)
+    return plan
+
+
+def make_engine(case: ServeCase, **overrides):
+    from repro.serve import ContinuousEngine
+
+    cfg, params = build(case.arch)
+    engine_kw = dict(case.engine_kwargs)
+    engine_kw.update(overrides.pop("engine_kwargs", {}))
+    return ContinuousEngine(cfg, params, make_plan(case, **overrides), **engine_kw)
+
+
+def prompts_for(case: ServeCase, seed: int = 0):
+    cfg, _ = build(case.arch)
+    rng = np.random.default_rng(seed)
+    return [rng.integers(3, cfg.vocab_size, size=L).astype(np.int32) for L in case.prompt_lens]
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward oracles (the training-path math, no caches)
+# ---------------------------------------------------------------------------
+
+
+def _lm_next_token(case: ServeCase, prefix: np.ndarray) -> int:
+    """argmax of the full-sequence prefill forward over the whole prefix."""
+    from repro.models import transformer as tfm
+
+    cfg, params = build(case.arch)
+    window = case.plan_kwargs.get("window")
+    ctx = tfm.RunCtx(mode="prefill", remat=False, window=window)
+    logits, _, _ = tfm.forward_prefill(params, cfg, jnp.asarray(prefix[None]), ctx=ctx)
+    return int(jnp.argmax(logits, -1)[0])
+
+
+def _encdec_next_token(case: ServeCase, src: np.ndarray, tgt_prefix: np.ndarray) -> int:
+    """argmax of the teacher-forced training forward at the last position."""
+    from repro.models import seq2seq as s2s
+
+    cfg, params = build(case.arch)
+    batch = s2s.Seq2SeqBatch(
+        src=jnp.asarray(src[None]),
+        tgt_in=jnp.asarray(tgt_prefix[None]),
+        tgt_out=jnp.zeros((1, len(tgt_prefix)), jnp.int32),
+        src_mask=jnp.ones((1, len(src)), bool),
+        tgt_mask=jnp.ones((1, len(tgt_prefix)), bool),
+    )
+    _, extras = s2s.forward(params, cfg, batch)
+    return int(jnp.argmax(extras["logits"][0, -1]))
+
+
+def oracle_generate(case: ServeCase, prompt: np.ndarray, steps: int) -> list:
+    """Greedy continuation of ``prompt`` using only full-sequence forwards."""
+    bos = case.engine_kwargs.get("bos", 1)
+    out = []
+    if case.cache_policy == "encdec_memory":
+        tgt = [bos]
+        for _ in range(steps):
+            out.append(_encdec_next_token(case, prompt, np.asarray(tgt, np.int32)))
+            tgt.append(out[-1])
+    else:
+        cur = list(prompt)
+        for _ in range(steps):
+            out.append(_lm_next_token(case, np.asarray(cur, np.int32)))
+            cur.append(out[-1])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the three invariants
+# ---------------------------------------------------------------------------
+
+
+def assert_decode_parity(name: str) -> None:
+    """Engine (chunked prefill + per-token decode) == full-sequence argmax."""
+    case = REGISTRY[name]
+    eng = make_engine(case)
+    prompts = prompts_for(case)
+    outs = eng.run(prompts, case.max_new)
+    for i, (p, got) in enumerate(zip(prompts, outs)):
+        want = oracle_generate(case, p, case.max_new)
+        assert got.tolist() == want, f"{name} req{i} (len {len(p)}): engine {got.tolist()} != forward {want}"
+
+
+def assert_batch_independence(name: str) -> None:
+    """Serving requests together changes nothing about any one of them."""
+    case = REGISTRY[name]
+    prompts = prompts_for(case, seed=1)
+    together = make_engine(case).run(prompts, case.max_new)
+    for i, p in enumerate(prompts):
+        alone = make_engine(case).run([p], case.max_new)[0]
+        assert together[i].tolist() == alone.tolist(), (
+            f"{name} req{i}: batched {together[i].tolist()} != alone {alone.tolist()}"
+        )
+
+
+def assert_slot_recycling(name: str) -> None:
+    """More requests than slots, retired slots poisoned with NaN/sentinel
+    before reuse: outputs still match serving each request alone."""
+    case = REGISTRY[name]
+    prompts = prompts_for(case, seed=2) * 2  # > max_slots -> forced recycling
+    eng = make_engine(case, admission="continuous", engine_kwargs={"poison_on_recycle": True})
+    outs = eng.run(prompts, case.max_new)
+    for i, p in enumerate(prompts):
+        alone = make_engine(case).run([p], case.max_new)[0]
+        assert outs[i].tolist() == alone.tolist(), (
+            f"{name} req{i}: recycled-slot output {outs[i].tolist()} != alone {alone.tolist()} "
+            "(slot reset leaked state)"
+        )
+        assert np.isfinite(np.asarray(outs[i], np.float64)).all()
+
+
+INVARIANTS = {
+    "decode_parity": assert_decode_parity,
+    "batch_independence": assert_batch_independence,
+    "slot_recycling": assert_slot_recycling,
+}
+
+
+# ---------------------------------------------------------------------------
+# case registrations — every valid cache_policy x family pair
+# ---------------------------------------------------------------------------
+
+register(
+    ServeCase(
+        name="transformer-full_kv",
+        family="transformer",
+        cache_policy="full_kv",
+        arch="qwen3-1.7b",
+        plan_kwargs={},
+        prompt_lens=(6, 11),  # 11 = 2 full chunks + ragged 3-token tail
+    )
+)
+
+register(
+    ServeCase(
+        name="transformer-window",
+        family="transformer",
+        cache_policy="window",
+        arch="qwen3-1.7b",
+        plan_kwargs=dict(window=8),  # prompts longer than the window
+        prompt_lens=(6, 11),
+    )
+)
+
+register(
+    ServeCase(
+        name="ssm-recurrent",
+        family="ssm",
+        cache_policy="recurrent",
+        arch="xlstm-350m",
+        plan_kwargs={},
+        prompt_lens=(5, 9),
+    )
+)
+
+register(
+    ServeCase(
+        name="seq2seq-encdec_memory",
+        family="seq2seq",
+        cache_policy="encdec_memory",
+        arch="seq2seq-rnn",
+        plan_kwargs={},
+        prompt_lens=(5, 9, 3),
+        engine_kwargs=dict(bos=1, eos=None),
+    )
+)

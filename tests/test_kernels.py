@@ -31,14 +31,17 @@ def test_kernel_parity(param):
 
 def test_harness_covers_all_kernel_packages():
     """Every kernel package under src/repro/kernels registers a case —
-    adding a kernel without harness coverage fails here."""
+    adding a kernel without harness coverage fails here.  (The registry may
+    carry EXTRA model-level dispatch cases, e.g. luong_head: the
+    attention_softmax_head stage_kernel entry point.)"""
     import pathlib
 
     import repro.kernels as K
 
     pkg_dir = pathlib.Path(K.__file__).parent
     packages = {p.name for p in pkg_dir.iterdir() if p.is_dir() and (p / "kernel.py").exists()}
-    assert packages == set(KH.REGISTRY), (packages, set(KH.REGISTRY))
+    missing = packages - set(KH.REGISTRY)
+    assert not missing, (missing, set(KH.REGISTRY))
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import strategy as st
 from repro.core.hybrid import scaling_factor_model, strategy_comm_cost
-from repro.core.plan import ExecutionPlan, WavefrontSchedule
+from repro.core.plan import ExecutionPlan, ServePlan, WavefrontSchedule
 from repro.models import seq2seq as s2s
 from repro.train.trainer import make_grad_fn
 
@@ -219,6 +219,110 @@ def test_pipelined_train_step_stage_kernel_parity(strat):
     assert tree_j == tree_p
     for a, b in zip(flat_j, flat_p):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ServePlan: the serving half of the execution vocabulary
+# ---------------------------------------------------------------------------
+
+
+def test_serve_plan_validation_errors():
+    """The closed vocabularies and the structural constraints: bad policy /
+    admission / stage_kernel, non-divisible prefill chunk, windowless (or
+    chunk-wrapping) window policy, static batch overflow (slots < batch)."""
+    with pytest.raises(ValueError):
+        ServePlan(cache_policy="paged")
+    with pytest.raises(ValueError):
+        ServePlan(admission="preemptive")
+    with pytest.raises(ValueError):
+        ServePlan(stage_kernel="cuda")
+    with pytest.raises(ValueError):
+        ServePlan(max_slots=0)
+    with pytest.raises(ValueError):
+        ServePlan(max_len=48, prefill_chunk=32)  # chunk must tile capacity
+    with pytest.raises(ValueError):
+        ServePlan(cache_policy="window")  # window policy needs a window
+    with pytest.raises(ValueError):
+        ServePlan(cache_policy="window", window=8, prefill_chunk=16, max_len=32)  # chunk wraps buffer
+    with pytest.raises(ValueError):
+        ServePlan(cache_policy="full_kv", window=8)  # stray window
+    # slots < batch only matters for static admission (continuous queues)
+    plan = ServePlan(max_slots=2, admission="static")
+    with pytest.raises(ValueError):
+        plan.validate_batch(3)
+    plan.validate_batch(2)
+    ServePlan(max_slots=2, admission="continuous").validate_batch(64)
+
+
+def test_serve_plan_family_policy_matrix():
+    """window/full_kv on the recurrent family, recurrent on an attention
+    family, and seq2seq <-> encdec_memory mismatches are all rejected."""
+    ssm_cfg = get_config("xlstm-350m", smoke=True)
+    tfm_cfg = get_config("qwen3-1.7b", smoke=True)
+    s2s_cfg = get_config("seq2seq-rnn", smoke=True)
+    with pytest.raises(ValueError):
+        ServePlan(cache_policy="window", window=8, prefill_chunk=8).validate_for(ssm_cfg)
+    with pytest.raises(ValueError):
+        ServePlan(cache_policy="full_kv").validate_for(ssm_cfg)
+    with pytest.raises(ValueError):
+        ServePlan(cache_policy="recurrent").validate_for(tfm_cfg)
+    with pytest.raises(ValueError):
+        ServePlan(cache_policy="encdec_memory").validate_for(tfm_cfg)
+    with pytest.raises(ValueError):
+        ServePlan(cache_policy="full_kv").validate_for(s2s_cfg)
+    ServePlan(cache_policy="recurrent").validate_for(ssm_cfg)
+    ServePlan(cache_policy="encdec_memory").validate_for(s2s_cfg)
+
+
+def test_serve_plan_for_config_defaults():
+    """for_config picks the family's natural policy."""
+    assert ServePlan.for_config(get_config("seq2seq-rnn", smoke=True)).cache_policy == "encdec_memory"
+    assert ServePlan.for_config(get_config("xlstm-350m", smoke=True)).cache_policy == "recurrent"
+    # a sliding-window arch defaults to the rolling buffer, window from cfg
+    win = ServePlan.for_config(get_config("qwen3-1.7b", smoke=True), prefill_chunk=16)
+    assert win.cache_policy == "window" and win.window == 64
+    # hybrid (attn + mamba) archs keep KV entries -> full_kv, not recurrent
+    assert ServePlan.for_config(get_config("jamba-v0.1-52b", smoke=True)).cache_policy == "full_kv"
+
+
+def test_serve_plan_kwargs_round_trip():
+    """plan -> engine_kwargs -> plan is the identity (the engine consumes
+    exactly the plan, nothing more)."""
+    plan = ServePlan(
+        cache_policy="window", window=16, max_slots=4, max_len=64,
+        prefill_chunk=8, admission="static", stage_kernel="pallas_interpret",
+    )
+    assert ServePlan(**plan.engine_kwargs()) == plan
+    assert plan.cache_capacity == 16  # window bounds the rolling buffer
+    assert ServePlan(max_len=64).cache_capacity == 64
+
+
+# ---------------------------------------------------------------------------
+# stage_kernel head dispatch: the fused Luong head inside a train step is a
+# pure compute swap — same loss, same grads as the jnp head math
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.pallas
+def test_train_step_fused_head_parity():
+    """make_grad_fn with stage_kernel="pallas_interpret" (fused Luong
+    attention head + fused LSTM cells) matches the jnp path: loss and every
+    grad leaf allclose at fp32 — the head's custom-vjp recompute backward
+    can never silently diverge from the training math."""
+    cfg = dataclasses.replace(get_config("seq2seq-rnn", smoke=True), dropout=0.0, dtype="float32")
+    params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    batch = _fixed_batch(cfg, B=4, M=8, N=6)
+    rng = jax.random.key(5)
+    losses, grads = {}, {}
+    for sk in ("jnp", "pallas_interpret"):
+        plan = ExecutionPlan(strategy=st.Strategy.SINGLE, stage_kernel=sk)
+        losses[sk], _, grads[sk] = jax.jit(make_grad_fn(cfg, plan))(params, batch, rng)
+    assert abs(float(losses["jnp"]) - float(losses["pallas_interpret"])) < 1e-4
+    flat_j, tree_j = jax.tree.flatten(grads["jnp"])
+    flat_p, tree_p = jax.tree.flatten(grads["pallas_interpret"])
+    assert tree_j == tree_p
+    for a, b in zip(flat_j, flat_p):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-3)
 
 
 # ---------------------------------------------------------------------------

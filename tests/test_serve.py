@@ -1,0 +1,151 @@
+"""Plan-driven serving: drives the ``serve_harness`` registry exhaustively
+(decode parity vs the full-sequence forward, batch independence, poisoned
+slot recycling), pins registry completeness over the cache_policy x family
+matrix, static-vs-continuous admission equivalence, the sampling module,
+and the seq2seq serving launcher end to end."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import serve_harness as sh
+from repro.configs import get_config
+from repro.core.plan import CACHE_POLICIES, ServePlan
+
+pytestmark = pytest.mark.serve
+
+
+# ---------------------------------------------------------------------------
+# the harness battery: every registered case x every invariant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("invariant", sorted(sh.INVARIANTS))
+@pytest.mark.parametrize("name", sh.all_names())
+def test_serve_invariant(name, invariant):
+    sh.INVARIANTS[invariant](name)
+
+
+def test_registry_covers_policy_family_matrix():
+    """Every VALID cache_policy x family pair is registered; every invalid
+    pair is a ValueError at plan validation — nothing silently unserved."""
+    covered = {(c.family, c.cache_policy) for c in sh.REGISTRY.values()}
+    archs = {"transformer": "qwen3-1.7b", "ssm": "xlstm-350m", "seq2seq": "seq2seq-rnn"}
+    valid = {
+        ("transformer", "full_kv"),
+        ("transformer", "window"),
+        ("ssm", "recurrent"),
+        ("seq2seq", "encdec_memory"),
+    }
+    assert covered == valid
+    for family, arch in archs.items():
+        cfg = get_config(arch, smoke=True)
+        for policy in CACHE_POLICIES:
+            plan = ServePlan(cache_policy=policy, window=4 if policy == "window" else None, prefill_chunk=4, max_len=32)
+            if (family, policy) in valid:
+                plan.validate_for(cfg)  # must not raise
+            else:
+                with pytest.raises(ValueError):
+                    plan.validate_for(cfg)
+
+
+# ---------------------------------------------------------------------------
+# admission disciplines
+# ---------------------------------------------------------------------------
+
+
+def test_static_admission_matches_continuous():
+    """With everything resident (no recycling needed), the admission
+    discipline cannot change any output."""
+    case = sh.REGISTRY["transformer-full_kv"]
+    prompts = sh.prompts_for(case, seed=3)
+    cont = sh.make_engine(case, admission="continuous").run(prompts, case.max_new)
+    stat = sh.make_engine(case, admission="static").run(prompts, case.max_new)
+    for a, b in zip(cont, stat):
+        assert a.tolist() == b.tolist()
+
+
+def test_static_admission_rejects_overflow():
+    case = sh.REGISTRY["transformer-full_kv"]
+    eng = sh.make_engine(case, admission="static", max_slots=2)
+    prompts = sh.prompts_for(case) * 3
+    with pytest.raises(ValueError):
+        eng.run(prompts, 2)
+
+
+def test_early_eos_recycles_slot():
+    """A request whose budget outlives its EOS retires early and frees the
+    slot; output stops at (and includes) EOS."""
+    case = sh.REGISTRY["seq2seq-encdec_memory"]
+    prompts = sh.prompts_for(case)
+    free = sh.make_engine(case).run(prompts, 8)
+    eos = int(free[0][2])  # force an EOS the model actually emits
+    outs = sh.make_engine(case, engine_kwargs={"eos": eos}).run(prompts, 8)
+    for got, ref in zip(outs, free):
+        ref = ref.tolist()
+        want = ref[: ref.index(eos) + 1] if eos in ref else ref
+        assert got.tolist() == want
+
+
+# ---------------------------------------------------------------------------
+# sampling (serve/sampling.py)
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_equals_zero_temperature():
+    from repro.serve.sampling import greedy, make_sampler, temperature_sample
+
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(8, 64)) * 3.0, jnp.float32)
+    g = greedy(logits)
+    assert make_sampler(0.0) is greedy
+    # temperature -> 0 sharpens categorical onto the argmax
+    t0 = temperature_sample(logits, jax.random.key(0), temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(t0))
+    assert g.dtype == jnp.int32
+
+
+def test_seeded_sampling_is_deterministic():
+    from repro.serve.sampling import make_sampler
+
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    s = make_sampler(0.8)
+    a = s(logits, jax.random.key(7))
+    b = s(logits, jax.random.key(7))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.shape == (4,) and a.dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# launcher: the seq2seq arch serves end to end (the old SystemExit is gone)
+# ---------------------------------------------------------------------------
+
+
+def test_launch_serve_seq2seq_smoke(monkeypatch, capsys):
+    from repro.launch import serve as launch_serve
+
+    monkeypatch.setattr(
+        sys, "argv",
+        ["serve", "--arch", "seq2seq-rnn", "--smoke", "--batch", "2",
+         "--prompt-len", "6", "--steps", "3", "--prefill-chunk", "4"],
+    )
+    launch_serve.main()
+    out = capsys.readouterr().out
+    assert "encdec_memory" in out and "2 requests" in out
+
+
+def test_launch_serve_lm_smoke(monkeypatch, capsys):
+    from repro.launch import serve as launch_serve
+
+    monkeypatch.setattr(
+        sys, "argv",
+        ["serve", "--arch", "qwen3-1.7b", "--smoke", "--batch", "2",
+         "--prompt-len", "6", "--steps", "3", "--prefill-chunk", "4", "--max-len", "16",
+         "--cache-policy", "full_kv"],
+    )
+    launch_serve.main()
+    out = capsys.readouterr().out
+    assert "full_kv" in out and "2 requests" in out
