@@ -14,6 +14,7 @@ import traceback
 MODULES = {
     "table3": "benchmarks.table3_scaling",  # Table 3: training speed / scaling factors
     "micro": "benchmarks.microbatch_sweep",  # microbatch sweep: predicted vs measured per strategy
+    "schedule": "benchmarks.schedule_bench",  # gpipe vs 1f1b: steps/s + peak live-activation bytes
     "table4": "benchmarks.table4_accuracy",  # Table 4/5: accuracy with vs without input-feeding
     "fig4": "benchmarks.fig4_convergence",  # Figure 4: convergence vs wall-clock
     "kernels": "benchmarks.kernel_bench",  # Pallas kernels vs jnp oracle (interpret timing + allclose)

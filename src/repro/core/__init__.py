@@ -1,5 +1,6 @@
 """Core of the reproduction: the paper's hybrid data-model parallelism."""
 from repro.core.plan import ExecutionPlan, WavefrontSchedule  # noqa: F401
+from repro.core.schedule import SCHEDULES, PipelineSchedule  # noqa: F401
 from repro.core.strategy import (  # noqa: F401
     HEAD_KEYS,
     Strategy,

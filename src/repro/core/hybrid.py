@@ -108,6 +108,69 @@ def strategy_comm_cost(
     raise ValueError(strategy)
 
 
+def pipeline_activation_model(
+    cfg: ModelConfig,
+    *,
+    schedule: str,
+    num_stages: int,
+    micro_batches: int,
+    batch: int,
+    src_len: int,
+    tgt_len: int,
+    act_bytes: int = 2,
+    carry_bytes: int = 4,
+) -> dict:
+    """Predicted peak stashed-activation bytes per pipeline stage for the
+    seq2seq backbone's backward, per :class:`PipelineSchedule` kind.
+
+    One (stage, m, t) work unit stashes the per-layer recurrent carries its
+    cells consumed — ``2 * Lp * B_mb * H`` fp32 values (h_in + c_in; the
+    gates are recomputed analytically, never stashed) — so a stage's peak
+    is ``peak_stash_steps * unit_bytes``, a table property:
+
+    * ``gpipe``: ``k*S`` steps live at the fwd/bwd boundary — linear in
+      ``micro_batches``, the memory wall this module's Table-3 throughput
+      terms run into when k is pushed up;
+    * ``1f1b``: ``min(k, NS)*S`` by the table (``S`` in the single-program
+      executor) — bounded by pipeline depth, flat in k.
+
+    The encoder and decoder backwards are separate scheduled executions
+    that never overlap, so the stash peak is the MAX of the two sides; the
+    boundary buffers (one [B, H] hand-off vector per token-step,
+    ``act_bytes`` each — the ~6·Lp× smaller residual the recompute works
+    from) are saved at forward time and live through both backwards, so
+    they SUM.
+
+    ``batch`` is whatever batch the caller accounts for (global, or
+    per-shard for a per-device number).
+    """
+    from repro.core.schedule import PipelineSchedule
+
+    h = cfg.d_model
+    lp = max(cfg.num_layers // num_stages, 1)
+    b_mb = batch / micro_batches
+    unit = 2 * lp * b_mb * h * carry_bytes  # h_in + c_in per layer, fp32
+    out = {"schedule": schedule, "unit_bytes": unit}
+    stash = bubble = live = 0
+    boundary = 0.0
+    for S in (src_len, tgt_len):
+        sched = PipelineSchedule(
+            seq_len=S, num_stages=num_stages, micro_batches=micro_batches, kind=schedule
+        )
+        stash = max(stash, sched.peak_activation_bytes(unit))
+        boundary += micro_batches * S * b_mb * h * act_bytes
+        bubble = max(bubble, sched.bubble_fraction)
+        live = max(live, sched.max_live_microbatches)
+    out.update(
+        peak_stash_bytes=stash,
+        boundary_bytes=boundary,
+        peak_bytes=stash + boundary,
+        bubble_fraction=bubble,
+        peak_live_microbatches=live,
+    )
+    return out
+
+
 def _param_groups(cfg: ModelConfig, input_feeding: bool) -> tuple[float, float, float]:
     """(encoder-side, decoder-side, head) parameter counts.  Embeddings are
     split onto their side; ``input_feeding`` widens the first decoder layer."""

@@ -1,15 +1,16 @@
 """Wavefront (systolic) pipeline parallelism for stacked LSTMs — the
-paper's model parallelism, faithfully.
+paper's model parallelism, faithfully — executed under an explicit
+:class:`repro.core.schedule.PipelineSchedule`.
 
 The paper places each LSTM layer on its own GPU (Fig. 2/3); node (layer l,
 time t) starts as soon as (l-1, t) and (l, t-1) finish, so the stack fills a
 diagonal wavefront.  On TPU we realize the same schedule with ``shard_map``
 over the ``model`` mesh axis: stage s owns layers [s*Lp, (s+1)*Lp); a
-``lax.scan`` over TT = S + NS - 1 clock ticks runs every stage in lockstep,
-and a ``ppermute`` hands the stage-top hidden state to the next stage each
-tick.  At tick τ stage s computes its layers for timestep t = τ - s (idle
-ticks are masked — the pipeline bubble is (NS-1)/TT, which the roofline's
-compute term exposes honestly).
+``lax.scan`` over TT = k*S + NS - 1 clock ticks runs every stage in
+lockstep, and a ``ppermute`` hands the stage-top hidden state to the next
+stage each tick.  At tick τ stage s computes its layers for global
+token-step u = τ - s (idle ticks are masked — the pipeline bubble is
+(NS-1)/TT, which the roofline's compute term exposes honestly).
 
 Removing input-feeding is precisely what makes the *decoder* runnable
 through this pipeline (the paper's §3.2): with input-feeding the first layer
@@ -23,8 +24,32 @@ microbatch m's timestep t occupies global token-step ``u = m*S + t`` and
 stage s computes it at tick ``tau = s + u``.  Recurrent state resets at
 every ``t == 0`` (microbatches are independent batch slices), so the whole
 step runs in ``k*S + NS - 1`` ticks: ONE fill/drain for the step instead of
-the ``k*(S + NS - 1)`` a per-microbatch wavefront would pay.  The schedule
-arithmetic lives in :class:`repro.core.plan.WavefrontSchedule`.
+the ``k*(S + NS - 1)`` a per-microbatch wavefront would pay.
+
+**Schedule-driven backward** (DESIGN.md §4): the backward is no longer
+autodiff's transpose of the forward scan (which stashes every one of the
+``k*S`` token-steps' activations per stage).  ``pipeline_lstm`` carries a
+``jax.custom_vjp`` whose backward executes the schedule's table contract:
+
+* the forward saves only each stage's *boundary inputs* (the ppermuted
+  hand-off sequence — one [B, H] vector per token-step, ~6·Lp× smaller
+  than the per-layer gate/state stash);
+* the backward runs over the schedule's backward groups
+  (:attr:`PipelineSchedule.bwd_group_starts`): per group it recomputes the
+  member microbatches' forward from the saved boundaries — stashing only
+  that group's ``g*S`` token-steps — then runs the mirrored backward
+  wavefront over the group with a per-tick ``ppermute`` carrying the
+  hand-off gradient down the stage chain.
+
+``gpipe`` has one group of all k microbatches: peak stash ``k*S``
+token-steps per stage, exactly the table's (and the old autodiff's)
+liveness.  ``1f1b`` has k groups of one: peak stash ``S`` token-steps —
+within the table's ``min(k, NS)·S`` bound and independent of k, which is
+what lets ``micro_batches`` scale without scaling backward memory.  The
+two orders sum the same gradients (pure reordering; pinned at train-step
+level by tests/test_plan.py) at the cost, for ``1f1b``, of one extra
+fill/drain per group in the backward — the single-program price of the
+memory bound.
 """
 from __future__ import annotations
 
@@ -33,9 +58,11 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import compat
+from repro.core.schedule import SCHEDULES, PipelineSchedule
 
 
 def stack_pipeline_params(layer_params: List[dict], num_stages: int):
@@ -61,6 +88,319 @@ def stack_pipeline_params(layer_params: List[dict], num_stages: int):
     return {"wx": wx, "wh": wh, "b": b}, in_max
 
 
+def _make_cell(wx, wh, b, *, in_max: int, dt, stage_kernel: str):
+    """The per-tick stage cell: (l, x_in, h_prev, c_prev) -> (h, c), either
+    the plain einsum math or the fused Pallas kernel.  Shared by the
+    forward scan and the backward's recompute phase so the stashed carries
+    are bit-identical to the forward's."""
+
+    def cell(l, x_in, h_prev, c_prev):
+        if x_in.shape[-1] < in_max:
+            x_in = jnp.pad(x_in, ((0, 0), (0, in_max - x_in.shape[-1])))
+        if stage_kernel != "jnp":
+            # fused Pallas cell: gate GEMMs + state update in one kernel,
+            # fed the stacked [in_max, 4, H] weights as-is (static gate
+            # split).  h/c carries are fp32, so the kernel's outputs are
+            # fp32 too.
+            from repro.kernels.lstm_cell.ops import lstm_cell_fused
+
+            return lstm_cell_fused(
+                x_in, h_prev, c_prev, wx[l], wh[l], b[l],
+                interpret=stage_kernel == "pallas_interpret",
+            )
+        gates = (
+            jnp.einsum("bi,igh->bgh", x_in, wx[l].astype(dt))
+            + jnp.einsum("bj,jgh->bgh", h_prev.astype(dt), wh[l].astype(dt))
+            + b[l].astype(dt)
+        ).astype(jnp.float32)
+        i, f, g, o = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+        c = jax.nn.sigmoid(f) * c_prev + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return h, c
+
+    return cell
+
+
+def _stage_sweep(cell, Lp, first_in, h_in, c_in, *, dt, in_max):
+    """Run a stage's Lp cells upward from the given carries — THE one copy
+    of the layer sweep (inter-layer dtype cast included).  The forward
+    tick, the backward's group recompute, and the per-tick adjoint all
+    call this, so their linearization points can never drift.  Returns
+    (hs [Lp, B, H], cs [Lp, B, H], xs: per-layer [B, in_max] inputs)."""
+    cur = first_in
+    hs, cs, xs = [], [], []
+    for l in range(Lp):
+        if cur.shape[-1] < in_max:
+            cur = jnp.pad(cur, ((0, 0), (0, in_max - cur.shape[-1])))
+        xs.append(cur)
+        hl, cl = cell(l, cur, h_in[l], c_in[l])
+        hs.append(hl)
+        cs.append(cl)
+        cur = hl.astype(dt)  # the forward's inter-layer cast
+    return jnp.stack(hs), jnp.stack(cs), xs
+
+
+def _cell_fwd_bwd(wx, wh, b, first_in, h_in, c_in, dtop, dh, dc, *, cell, dt):
+    """Analytic backward of one stage-tick (all Lp layers) from the stashed
+    carries.  The per-layer inputs are recomputed through the SAME ``cell``
+    sweep as the forward (dtype casts and kernel path included, so the
+    linearization point matches the executed forward exactly) and
+    differentiated with the kernel package's shared analytic adjoint
+    (``kernels/lstm_cell/ops.py::lstm_cell_adjoint`` — one source of truth
+    for the cell math, fp32 gate recompute as in the fused kernel's vjp;
+    XLA CSEs the repeated gate GEMMs).  Returns
+    (dfirst_in, dh_prev, dc_prev, dwx, dwh, db)."""
+    from repro.kernels.lstm_cell.ops import lstm_cell_adjoint
+
+    Lp, in_max = wx.shape[0], wx.shape[1]
+    hidden = wh.shape[1]
+    _, _, xs = _stage_sweep(cell, Lp, first_in, h_in, c_in, dt=dt, in_max=in_max)
+    # adjoint, top layer down
+    dnext = dtop.astype(jnp.float32)  # grad flowing into layer l's h output
+    dwx_l, dwh_l, db_l, dh_new, dc_new = [], [], [], [], []
+    for l in reversed(range(Lp)):
+        dx_l, dh_l, dc_l, dwx_c, dwh_c, db_c = lstm_cell_adjoint(
+            xs[l], h_in[l], c_in[l], wx[l], wh[l], b[l], dnext + dh[l], dc[l]
+        )
+        dwx_l.append(dwx_c)
+        dwh_l.append(dwh_c)
+        db_l.append(db_c)
+        dh_new.append(dh_l)
+        dc_new.append(dc_l)
+        dnext = dx_l[:, :hidden] if l > 0 else dx_l
+    stack_rev = lambda seq: jnp.stack(seq[::-1])
+    return (
+        dnext,                 # dfirst_in [B, in_max] (layer 0's input grad)
+        stack_rev(dh_new),     # [Lp, B, H]
+        stack_rev(dc_new),
+        stack_rev(dwx_l),      # [Lp, in_max, 4, H]
+        stack_rev(dwh_l),
+        stack_rev(db_l),
+    )
+
+
+@functools.lru_cache(maxsize=32)
+def _scheduled_pipeline(mesh: Mesh, sched: PipelineSchedule, *, model_axis: str,
+                        batch_axes: tuple, in_max: int, hidden: int, stage_kernel: str):
+    """Build the custom-vjp (stacked, x_padded) -> y executor for one
+    (mesh, schedule, shape-statics) binding.  Cached so repeated train
+    steps reuse one function identity (stable jit caching)."""
+    NS, S, k = sched.num_stages, sched.seq_len, sched.micro_batches
+    TT = sched.forward_ticks
+    perm_up = [(i, i + 1) for i in range(NS - 1)]
+    perm_down = [(i + 1, i) for i in range(NS - 1)]
+    vary = lambda a: compat.pcast_varying(a, mesh.axis_names)
+
+    # -- forward: the wavefront scan (one fill/drain per step) --------------
+
+    def _fwd_stage_fn(save_boundaries: bool):
+        def stage_fn(w, xloc):
+            wx, wh, b = w["wx"][0], w["wh"][0], w["b"][0]
+            Lp = wx.shape[0]
+            stage = jax.lax.axis_index(model_axis)
+            B_loc = xloc.shape[0]
+            B_mb = B_loc // k
+            xmb = xloc.reshape(k, B_mb, S, in_max)
+            dt = xloc.dtype
+            cell = _make_cell(wx, wh, b, in_max=in_max, dt=dt, stage_kernel=stage_kernel)
+
+            def tick(carry, tau):
+                h, c, left = carry  # h,c [Lp, B_mb, H] fp32; left [B_mb, H] from prev stage
+                u = tau - stage  # global token-step: microbatch m = u // S, timestep t = u % S
+                valid = (u >= 0) & (u < k * S)
+                uc = jnp.clip(u, 0, k * S - 1)
+                m, t = uc // S, uc % S
+                x_m = jax.lax.dynamic_index_in_dim(xmb, m, axis=0, keepdims=False)
+                x_t = jax.lax.dynamic_index_in_dim(x_m, t, axis=1, keepdims=False)
+                # microbatches are independent slices: recurrent state resets at t == 0
+                h_in = jnp.where(t == 0, jnp.zeros_like(h), h)
+                c_in = jnp.where(t == 0, jnp.zeros_like(c), c)
+                # stage 0 layer 0 input: the embedded token; other stages: handoff
+                first_in = jnp.where(stage == 0, x_t, jnp.pad(left, ((0, 0), (0, in_max - hidden))))
+                hs, cs, _ = _stage_sweep(cell, Lp, first_in, h_in, c_in, dt=dt, in_max=in_max)
+                hs = jnp.where(valid, hs, h)  # idle (fill/drain) ticks keep the carries
+                cs = jnp.where(valid, cs, c)
+                top = hs[-1].astype(dt)  # [B_mb, H] this stage's output at tick tau
+                nxt_left = jax.lax.ppermute(top, model_axis, perm_up)
+                ys = (top, left) if save_boundaries else top
+                return (hs, cs, nxt_left), ys
+
+            h0 = vary(jnp.zeros((Lp, B_mb, hidden), jnp.float32))
+            c0 = vary(jnp.zeros((Lp, B_mb, hidden), jnp.float32))
+            left0 = vary(jnp.zeros((B_mb, hidden), dt))
+            _, ys = jax.lax.scan(tick, (h0, c0, left0), jnp.arange(TT))
+            tops = ys[0] if save_boundaries else ys
+            # stage s's valid outputs occupy ticks [s, s + k*S); un-interleave the
+            # microbatches locally so the batch order matches the input shard's.
+            window = jax.lax.dynamic_slice_in_dim(tops, stage, k * S, axis=0)  # [k*S, B_mb, H]
+            out = window.reshape(k, S, B_mb, hidden).transpose(0, 2, 1, 3).reshape(B_loc, S, hidden)
+            if not save_boundaries:
+                return out[None]
+            # the boundary inputs this stage consumed: left entering tick τ
+            # carries top(s-1) for token-step u = τ - s, so the same window
+            # slice (garbage for stage 0, which reads x instead).
+            lefts = ys[1]
+            lwin = jax.lax.dynamic_slice_in_dim(lefts, stage, k * S, axis=0)
+            return out[None], lwin.reshape(k, S, B_mb, hidden)[None]
+
+        return stage_fn
+
+    pspec = lambda tree: jax.tree.map(lambda _: P(model_axis), tree)
+    bspec = P(batch_axes if batch_axes else None, None, None)
+    param_tpl = {"wx": 0, "wh": 0, "b": 0}
+
+    def _run_fwd(stacked, x, save_boundaries):
+        out_specs = P(model_axis, batch_axes if batch_axes else None, None, None)
+        if save_boundaries:
+            out_specs = (out_specs, P(model_axis, None, None, batch_axes if batch_axes else None, None))
+        return compat.shard_map(
+            _fwd_stage_fn(save_boundaries), mesh=mesh,
+            in_specs=(pspec(param_tpl), bspec), out_specs=out_specs, check_vma=False,
+        )(stacked, x)
+
+    # -- backward: the schedule's recompute groups + mirrored wavefront ----
+
+    g = sched.bwd_group_size
+    # numpy, not jnp: this builder is lru_cached and may first run under an
+    # active trace — a jnp constant would leak that trace into later calls
+    starts = np.asarray(sched.bwd_group_starts, np.int32)
+    G = g * S
+    Tb = G + NS - 1
+
+    def _bwd_stage_fn(w, xloc, leftsloc, dyloc):
+        wx, wh, b = w["wx"][0], w["wh"][0], w["b"][0]
+        Lp = wx.shape[0]
+        stage = jax.lax.axis_index(model_axis)
+        B_loc = xloc.shape[0]
+        B_mb = B_loc // k
+        xmb = xloc.reshape(k, B_mb, S, in_max)
+        dymb = dyloc.astype(jnp.float32).reshape(k, B_mb, S, hidden)
+        lefts = leftsloc[0]  # [k, S, B_mb, H]
+        dt = xloc.dtype
+        cell = _make_cell(wx, wh, b, in_max=in_max, dt=dt, stage_kernel=stage_kernel)
+
+        def stage_input(xg, lg, mi, t):
+            """first_in for local microbatch mi (within the group), step t."""
+            x_m = jax.lax.dynamic_index_in_dim(xg, mi, axis=0, keepdims=False)
+            x_t = jax.lax.dynamic_index_in_dim(x_m, t, axis=1, keepdims=False)
+            l_m = jax.lax.dynamic_index_in_dim(lg, mi, axis=0, keepdims=False)
+            l_t = jax.lax.dynamic_index_in_dim(l_m, t, axis=0, keepdims=False)
+            return jnp.where(stage == 0, x_t, jnp.pad(l_t, ((0, 0), (0, in_max - hidden))))
+
+        def group_body(grad_acc, m0):
+            xg = jax.lax.dynamic_slice_in_dim(xmb, m0, g, axis=0)   # [g, B_mb, S, in_max]
+            lg = jax.lax.dynamic_slice_in_dim(lefts, m0, g, axis=0)  # [g, S, B_mb, H]
+            dyg = jax.lax.dynamic_slice_in_dim(dymb, m0, g, axis=0)  # [g, B_mb, S, H]
+
+            # phase A: recompute this group's forward, stashing ONLY the
+            # per-step recurrent carries — g*S token-steps live per stage,
+            # the schedule's liveness contract.
+            def fstep(carry, j):
+                h, c = carry
+                mi, t = j // S, j % S
+                first_in = stage_input(xg, lg, mi, t)
+                h_in = jnp.where(t == 0, jnp.zeros_like(h), h)
+                c_in = jnp.where(t == 0, jnp.zeros_like(c), c)
+                hs, cs, _ = _stage_sweep(cell, Lp, first_in, h_in, c_in, dt=dt, in_max=in_max)
+                return (hs, cs), (h_in, c_in)
+
+            h0 = vary(jnp.zeros((Lp, B_mb, hidden), jnp.float32))
+            c0 = vary(jnp.zeros((Lp, B_mb, hidden), jnp.float32))
+            _, (h_ins, c_ins) = jax.lax.scan(fstep, (h0, c0), jnp.arange(G))
+
+            # phase B: the mirrored backward wavefront over the group, the
+            # hand-off gradient ppermuted DOWN the stage chain each tick.
+            def bstep(carry, taub):
+                dh, dc, dleft_in, dwx, dwh, db = carry
+                v = taub - (NS - 1 - stage)
+                valid = (v >= 0) & (v < G)
+                vc = jnp.clip(v, 0, G - 1)
+                j = G - 1 - vc
+                mi, t = j // S, j % S
+                h_in = jax.lax.dynamic_index_in_dim(h_ins, j, axis=0, keepdims=False)
+                c_in = jax.lax.dynamic_index_in_dim(c_ins, j, axis=0, keepdims=False)
+                first_in = stage_input(xg, lg, mi, t)
+                dy_m = jax.lax.dynamic_index_in_dim(dyg, mi, axis=0, keepdims=False)
+                dy_t = jax.lax.dynamic_index_in_dim(dy_m, t, axis=1, keepdims=False)
+                # a microbatch's backward starts at its LAST timestep: the
+                # incoming recurrent grads belong to the previous microbatch
+                dh_u = jnp.where(t == S - 1, jnp.zeros_like(dh), dh)
+                dc_u = jnp.where(t == S - 1, jnp.zeros_like(dc), dc)
+                # the stage-top grad: the loss side for the last stage, the
+                # ppermuted hand-off grad from stage s+1 otherwise
+                dtop = jnp.where(stage == NS - 1, dy_t, dleft_in)
+                dfirst, dh_n, dc_n, dwx_c, dwh_c, db_c = _cell_fwd_bwd(
+                    wx, wh, b, first_in, h_in, c_in, dtop, dh_u, dc_u, cell=cell, dt=dt
+                )
+                vm = valid[None, None]
+                dh = jnp.where(vm, dh_n, dh)
+                dc = jnp.where(vm, dc_n, dc)
+                dwx = dwx + jnp.where(valid, 1.0, 0.0) * dwx_c
+                dwh = dwh + jnp.where(valid, 1.0, 0.0) * dwh_c
+                db = db + jnp.where(valid, 1.0, 0.0) * db_c
+                dfirst = jnp.where(valid, dfirst, jnp.zeros_like(dfirst))
+                dleft_out = jax.lax.ppermute(dfirst[:, :hidden], model_axis, perm_down)
+                return (dh, dc, dleft_out, dwx, dwh, db), dfirst
+
+            dh0 = vary(jnp.zeros((Lp, B_mb, hidden), jnp.float32))
+            dc0 = vary(jnp.zeros((Lp, B_mb, hidden), jnp.float32))
+            dl0 = vary(jnp.zeros((B_mb, hidden), jnp.float32))
+            (_, _, _, dwx, dwh, db), dfirsts = jax.lax.scan(
+                bstep, (dh0, dc0, dl0) + grad_acc, jnp.arange(Tb)
+            )
+            # stage 0 processes v = 0..G-1 at ticks [NS-1, NS-1+G) with
+            # j = G-1-v: slice its window, flip to ascending step order.
+            dxg = dfirsts[NS - 1 : NS - 1 + G][::-1]  # [G, B_mb, in_max]
+            return (dwx, dwh, db), dxg.reshape(g, S, B_mb, in_max)
+
+        zeros_like_f32 = lambda a: jnp.zeros(a.shape, jnp.float32)
+        acc0 = (vary(zeros_like_f32(wx)), vary(zeros_like_f32(wh)), vary(zeros_like_f32(b)))
+        (dwx, dwh, db), dxgs = jax.lax.scan(group_body, acc0, starts)
+        if batch_axes:
+            # each batch shard saw B_loc of the batch: the param grads are
+            # partial sums — one boundary psum each (what autodiff's
+            # shard_map transpose used to insert for the replicated params)
+            dwx, dwh, db = (jax.lax.psum(a, batch_axes) for a in (dwx, dwh, db))
+        # rounds ascend through microbatches, so [n_groups, g, ...] -> [k, ...]
+        dx = dxgs.reshape(k, S, B_mb, in_max).transpose(0, 2, 1, 3).reshape(B_loc, S, in_max)
+        grads = {"wx": dwx[None], "wh": dwh[None], "b": db[None]}
+        return grads, dx[None]
+
+    def _run_bwd(stacked, x, lefts, dy):
+        grads, dx_all = compat.shard_map(
+            _bwd_stage_fn, mesh=mesh,
+            in_specs=(
+                pspec(param_tpl),
+                bspec,
+                P(model_axis, None, None, batch_axes if batch_axes else None, None),
+                bspec,
+            ),
+            out_specs=(
+                pspec(param_tpl),
+                P(model_axis, batch_axes if batch_axes else None, None, None),
+            ),
+            check_vma=False,
+        )(stacked, x, lefts, dy)
+        grads = jax.tree.map(lambda gr, p: gr.astype(p.dtype), grads, stacked)
+        return grads, dx_all[0].astype(x.dtype)
+
+    @jax.custom_vjp
+    def run(stacked, x):
+        outs = _run_fwd(stacked, x, save_boundaries=False)
+        return outs[NS - 1]
+
+    def run_fwd(stacked, x):
+        outs, lefts = _run_fwd(stacked, x, save_boundaries=True)
+        return outs[NS - 1], (stacked, x, lefts)
+
+    def run_bwd(res, dy):
+        stacked, x, lefts = res
+        return _run_bwd(stacked, x, lefts, dy)
+
+    run.defvjp(run_fwd, run_bwd)
+    return run
+
+
 def pipeline_lstm(
     mesh: Mesh,
     stacked,
@@ -70,6 +410,7 @@ def pipeline_lstm(
     model_axis: str = "model",
     micro_batches: int = 1,
     stage_kernel: str = "jnp",
+    schedule: str = "gpipe",
 ):
     """Run a stacked LSTM over ``x`` [B, S, in_dim] in wavefront order.
 
@@ -81,16 +422,19 @@ def pipeline_lstm(
     ``kernels/lstm_cell`` Pallas kernel — gate GEMMs + state update in one
     VMEM-resident kernel), or ``"pallas_interpret"`` (the same kernel
     program interpreted, CPU-runnable; parity vs "jnp" is pinned by
-    tests/test_plan.py).  The kernel consumes the stacked params directly:
-    ``stack_pipeline_params`` preserves the [in, 4, H] gate layout, so the
-    i/f/g/o split stays a static index inside the kernel.
+    tests/test_plan.py).  ``schedule`` selects the
+    :class:`~repro.core.schedule.PipelineSchedule` driving the backward's
+    activation liveness: ``"gpipe"`` stashes all k microbatches at the
+    fwd/bwd boundary, ``"1f1b"`` bounds the stash at one microbatch per
+    stage (``min(k, NS)`` by the table) — same gradients, different order.
     Returns hidden states of the top layer, [B, S, H].
     """
     from repro.core.plan import STAGE_KERNELS
 
     if stage_kernel not in STAGE_KERNELS:
         raise ValueError(f"stage_kernel must be one of {STAGE_KERNELS}, got {stage_kernel!r}")
-    from repro.core.plan import WavefrontSchedule
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}, got {schedule!r}")
 
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     num_stages = sizes[model_axis]
@@ -106,82 +450,8 @@ def pipeline_lstm(
     in_max = stacked["wx"].shape[2]
     if in_dim < in_max:  # zero-pad the embedded inputs to the padded wx rows
         x = jnp.pad(x, ((0, 0), (0, 0), (0, in_max - in_dim)))
-    sched = WavefrontSchedule(seq_len=S, num_stages=num_stages, micro_batches=k)
-    TT = sched.ticks
-    assert TT == k * S + num_stages - 1  # one fill/drain per STEP, not per microbatch
-
-    def stage_fn(w, xloc):
-        wx, wh, b = w["wx"][0], w["wh"][0], w["b"][0]  # [Lp, in_max, 4, H], [Lp, H, 4, H], [Lp, 4, H]
-        Lp = wx.shape[0]
-        stage = jax.lax.axis_index(model_axis)
-        B_loc = xloc.shape[0]
-        B_mb = B_loc // k
-        xmb = xloc.reshape(k, B_mb, S, in_max)
-        dt = xloc.dtype
-        perm = [(i, i + 1) for i in range(num_stages - 1)]
-
-        def cell(l, x_in, h_prev, c_prev):
-            # x_in [B, K] where K = in_max (l==0) or hidden; pad to in_max
-            if x_in.shape[-1] < in_max:
-                x_in = jnp.pad(x_in, ((0, 0), (0, in_max - x_in.shape[-1])))
-            if stage_kernel != "jnp":
-                # fused Pallas cell: gate GEMMs + state update in one kernel,
-                # fed the stacked [in_max, 4, H] weights as-is (static gate
-                # split).  h/c carries are fp32, so the kernel's outputs are
-                # fp32 too; the analytic custom-vjp backward keeps the
-                # pipelined train step differentiable.
-                from repro.kernels.lstm_cell.ops import lstm_cell_fused
-
-                return lstm_cell_fused(
-                    x_in, h_prev, c_prev, wx[l], wh[l], b[l],
-                    interpret=stage_kernel == "pallas_interpret",
-                )
-            gates = (
-                jnp.einsum("bi,igh->bgh", x_in, wx[l].astype(dt))
-                + jnp.einsum("bj,jgh->bgh", h_prev.astype(dt), wh[l].astype(dt))
-                + b[l].astype(dt)
-            ).astype(jnp.float32)
-            i, f, g, o = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
-            c = jax.nn.sigmoid(f) * c_prev + jax.nn.sigmoid(i) * jnp.tanh(g)
-            h = jax.nn.sigmoid(o) * jnp.tanh(c)
-            return h, c
-
-        def tick(carry, tau):
-            h, c, left = carry  # h,c [Lp, B_mb, H] fp32; left [B_mb, H] from prev stage
-            u = tau - stage  # global token-step: microbatch m = u // S, timestep t = u % S
-            valid = ((u >= 0) & (u < k * S))[None, None]
-            uc = jnp.clip(u, 0, k * S - 1)
-            m, t = uc // S, uc % S
-            x_m = jax.lax.dynamic_index_in_dim(xmb, m, axis=0, keepdims=False)
-            x_t = jax.lax.dynamic_index_in_dim(x_m, t, axis=1, keepdims=False)
-            # microbatches are independent slices: recurrent state resets at t == 0
-            h_in = jnp.where(t == 0, jnp.zeros_like(h), h)
-            c_in = jnp.where(t == 0, jnp.zeros_like(c), c)
-            # stage 0 layer 0 input: the embedded token; other stages: handoff
-            first_in = jnp.where(stage == 0, x_t, jnp.pad(left, ((0, 0), (0, in_max - hidden))))
-            cur = first_in
-            hs, cs = [], []
-            for l in range(Lp):
-                hl, cl = cell(l, cur, h_in[l], c_in[l])
-                hl = jnp.where(valid, hl, h[l])
-                cl = jnp.where(valid, cl, c[l])
-                hs.append(hl)
-                cs.append(cl)
-                cur = hl.astype(dt)
-            top = cur  # [B_mb, H] this stage's output at tick tau
-            nxt_left = jax.lax.ppermute(top, model_axis, perm)
-            return (jnp.stack(hs), jnp.stack(cs), nxt_left), top
-
-        vary = lambda a: compat.pcast_varying(a, mesh.axis_names)
-        h0 = vary(jnp.zeros((Lp, B_mb, hidden), jnp.float32))
-        c0 = vary(jnp.zeros((Lp, B_mb, hidden), jnp.float32))
-        left0 = vary(jnp.zeros((B_mb, hidden), dt))
-        _, tops = jax.lax.scan(tick, (h0, c0, left0), jnp.arange(TT))
-        # stage s's valid outputs occupy ticks [s, s + k*S); un-interleave the
-        # microbatches locally so the batch order matches the input shard's.
-        window = jax.lax.dynamic_slice_in_dim(tops, stage, k * S, axis=0)  # [k*S, B_mb, H]
-        out = window.reshape(k, S, B_mb, hidden).transpose(0, 2, 1, 3).reshape(B_loc, S, hidden)
-        return out[None]  # [1, B_loc, S, H]
+    sched = PipelineSchedule(seq_len=S, num_stages=num_stages, micro_batches=k, kind=schedule)
+    assert sched.forward_ticks == k * S + num_stages - 1  # one fill/drain per STEP
 
     # Pin the stacked params replicated BEFORE the shard_map boundary.  When
     # the stacking (jnp.stack of the per-layer trees) is traced inside the
@@ -193,14 +463,11 @@ def pipeline_lstm(
     stacked = jax.tree.map(
         lambda a: jax.lax.with_sharding_constraint(a, NamedSharding(mesh, P())), stacked
     )
-    in_specs = (
-        jax.tree.map(lambda _: P(model_axis), stacked),
-        P(batch_axes if batch_axes else None, None, None),
+    run = _scheduled_pipeline(
+        mesh, sched, model_axis=model_axis, batch_axes=batch_axes,
+        in_max=in_max, hidden=hidden, stage_kernel=stage_kernel,
     )
-    out_specs = P(model_axis, batch_axes if batch_axes else None, None, None)
-    outs = compat.shard_map(stage_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)(stacked, x)
-    # outs [NS, B, S, H]: only the last stage's row carries the top layer.
-    return outs[num_stages - 1]
+    return run(stacked, x)
 
 
 def batch_shard_backbone(mesh: Mesh, batch_axes: tuple, dropout: float = 0.0):
@@ -220,8 +487,16 @@ def batch_shard_backbone(mesh: Mesh, batch_axes: tuple, dropout: float = 0.0):
         dsz = 1
         for a in batch_axes:
             dsz *= sizes[a]
-        if not batch_axes or B % dsz:
+        if not batch_axes:
+            # nothing to shard over — the plain scan IS the requested layout
             return lstm_mod.run_stacked_lstm(layer_params, xs, dropout_rng=rng, dropout=dropout)[0]
+        if B % dsz:
+            # refuse rather than silently run the unsharded path (which
+            # would change the collective structure the caller asked for)
+            raise ValueError(
+                f"batch {B} not divisible by batch shards {dsz} over axes "
+                f"{batch_axes}; pad the batch or drop the batch-sharded backbone"
+            )
         pspec = jax.tree.map(lambda _: P(), layer_params)
         xspec = P(batch_axes, None, None)
 
@@ -237,18 +512,20 @@ def batch_shard_backbone(mesh: Mesh, batch_axes: tuple, dropout: float = 0.0):
     return run
 
 
-def pipeline_backbone(mesh: Mesh, model_axis: str = "model", micro_batches: int = 1, stage_kernel: str = "jnp"):
+def pipeline_backbone(mesh: Mesh, model_axis: str = "model", micro_batches: int = 1,
+                      stage_kernel: str = "jnp", schedule: str = "gpipe"):
     """Adapter for ``seq2seq.forward_no_input_feeding(backbone=...)``: runs
     the stacked-LSTM encoder/decoder through the wavefront pipeline (with
-    ``micro_batches`` slices interleaved through one fill/drain and
-    ``stage_kernel`` selecting the per-tick cell compute)."""
+    ``micro_batches`` slices interleaved through one fill/drain,
+    ``stage_kernel`` selecting the per-tick cell compute, and ``schedule``
+    the backward's activation liveness)."""
 
     def run(layer_params, xs, rng):  # rng unused: no dropout inside the pipeline
         del rng
         stacked, in_max = stack_pipeline_params(layer_params, dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis])
         return pipeline_lstm(
             mesh, stacked, xs, in_dim=xs.shape[-1], model_axis=model_axis,
-            micro_batches=micro_batches, stage_kernel=stage_kernel,
+            micro_batches=micro_batches, stage_kernel=stage_kernel, schedule=schedule,
         )
 
     return run

@@ -90,13 +90,22 @@ class ExecutionPlan:
     # math, the fused Pallas cell kernel (TPU), or the same kernel in
     # interpret mode (CPU-runnable; bitwise the same kernel program)
     stage_kernel: str = "jnp"
+    # the PipelineSchedule kind driving the pipelined backward's activation
+    # liveness: "gpipe" stashes all k microbatches at the fwd/bwd boundary,
+    # "1f1b" bounds the per-stage stash at min(k, NS) microbatches — same
+    # gradients, different order (DESIGN.md §4)
+    schedule: str = "gpipe"
 
     def __post_init__(self):
+        from repro.core.schedule import SCHEDULES
+
         object.__setattr__(self, "strategy", stg.Strategy(self.strategy))
         if self.micro_batches < 1:
             raise ValueError(f"micro_batches must be >= 1, got {self.micro_batches}")
         if self.stage_kernel not in STAGE_KERNELS:
             raise ValueError(f"stage_kernel must be one of {STAGE_KERNELS}, got {self.stage_kernel!r}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule must be one of {SCHEDULES}, got {self.schedule!r}")
         if self.overlap and self.pipelined:
             # the pipelined schedule runs ONE fwd/bwd (head grads sync once),
             # so there is no per-microbatch sync to delay — reject rather
@@ -132,10 +141,20 @@ class ExecutionPlan:
         return 1 if self.pipelined else self.micro_batches
 
     def wavefront(self, seq_len: int) -> WavefrontSchedule:
-        return WavefrontSchedule(
+        """Forward clock arithmetic — delegates to the full schedule's
+        wavefront view so the two can never drift."""
+        return self.pipeline_schedule(seq_len).wavefront
+
+    def pipeline_schedule(self, seq_len: int):
+        """The full (forward + backward) :class:`PipelineSchedule` this plan
+        prescribes for one wavefront of ``seq_len`` timesteps."""
+        from repro.core.schedule import PipelineSchedule
+
+        return PipelineSchedule(
             seq_len=seq_len,
             num_stages=self.num_stages,
             micro_batches=self.micro_batches if self.pipelined else 1,
+            kind=self.schedule,
         )
 
     # -- sharding specs (delegated to core.strategy, bound to this plan) ----
@@ -219,6 +238,7 @@ class ExecutionPlan:
                 model_axis=self.model_axis,
                 micro_batches=self.micro_batches,
                 stage_kernel=self.stage_kernel,
+                schedule=self.schedule,
             )
         if batch_backbone and self.mesh is not None:
             # batch over ALL axes: the paper's hand-off already spreads the

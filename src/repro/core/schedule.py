@@ -1,0 +1,305 @@
+"""PipelineSchedule: precomputed per-tick work tables for the wavefront
+pipeline — forward AND backward.
+
+PR 1's :class:`repro.core.plan.WavefrontSchedule` does the *forward* clock
+arithmetic (stage s computes global token-step ``u = m*S + t`` at tick
+``s + u``).  The backward, however, was whatever autodiff produced by
+transposing one big ``lax.scan``: every stage stashes activations for all
+``k*S`` token-steps, so raising ``micro_batches`` — the throughput lever —
+raises peak memory linearly.  This module makes the *whole* schedule an
+explicit object:
+
+* a **work table**: for every clock tick and stage, which (microbatch m,
+  timestep t) is computed, forward or backward.  The table is the single
+  source of truth for tick counts, bubble fractions, and — the point —
+  **activation liveness**: a token-step's activations are live from its
+  forward unit to its backward unit, and peak live count per stage is a
+  table property, not an emergent autodiff artifact.
+
+Two instances:
+
+``gpipe``
+    Today's behavior: the full forward wavefront (``k*S + NS - 1`` ticks,
+    table-identical to ``WavefrontSchedule``), then the mirrored backward
+    wavefront.  Every stage holds all ``k`` microbatches' activations at
+    the fwd/bwd boundary — peak live microbatches per stage is ``k``.
+
+``1f1b``
+    One-forward-one-backward (PipeDream-flush / Megatron's memory
+    schedule, applied at the wavefront's (m, t) granularity): a stage
+    starts a microbatch's backward as soon as the backward wave reaches
+    it, and is *gated* from starting a new microbatch's forward while
+    ``min(k, NS - s)`` microbatches are in flight.  Peak live microbatches
+    per stage is ``min(k, NS - s)`` — bounded by pipeline depth,
+    independent of ``k``.
+
+The table models the parallel-hardware timeline (what NS devices would
+execute).  The single-program executor in ``core/pipeline.py`` realizes
+the same dependency order with the same liveness bound via per-group
+recompute; see its module docstring for the exact correspondence.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, NamedTuple, Tuple
+
+SCHEDULES = ("gpipe", "1f1b")
+
+FWD = "F"
+BWD = "B"
+
+
+class Unit(NamedTuple):
+    """One cell of the work table: at clock ``tick``, ``stage`` computes
+    (``micro``, ``t``) in direction ``kind`` (``"F"`` or ``"B"``)."""
+
+    tick: int
+    stage: int
+    kind: str
+    micro: int
+    t: int
+
+
+def _build_gpipe(S: int, NS: int, k: int) -> Tuple[Unit, ...]:
+    """Closed form: forward wavefront then its mirror.  Forward ticks are
+    exactly WavefrontSchedule's arithmetic (``tick = s + m*S + t``); the
+    backward of token-step u at stage s runs at
+    ``TT + (NS-1-s) + (k*S-1-u)`` where ``TT = k*S + NS - 1``."""
+    TT = k * S + NS - 1
+    units = []
+    for s in range(NS):
+        for u in range(k * S):
+            m, t = divmod(u, S)
+            units.append(Unit(s + u, s, FWD, m, t))
+            units.append(Unit(TT + (NS - 1 - s) + (k * S - 1 - u), s, BWD, m, t))
+    return tuple(sorted(units))
+
+
+def _build_1f1b(S: int, NS: int, k: int) -> Tuple[Unit, ...]:
+    """Greedy event simulation at (m, t) granularity.
+
+    Per tick each stage runs at most one unit, preferring backward;
+    forward units execute in (m, t) order, backward in (m ascending,
+    t descending) order — both orders keep exactly one recurrent carry
+    live per direction, which is what the executor implements.  A stage
+    may not START a new microbatch's forward (t == 0) while
+    ``min(k, NS - s)`` microbatches are in flight (forward started,
+    backward not finished) — the 1F1B depth gate.
+    """
+    n = k * S
+    done_f = [[-1] * n for _ in range(NS)]  # completion tick of F(s, u)
+    done_b = [[-1] * n for _ in range(NS)]
+    pf = [0] * NS  # next forward u per stage (lexicographic (m, t))
+    bwd_cur: List = [None] * NS  # (m, next t) when mid-backward
+    bwd_next_m = [0] * NS  # next microbatch to start backward (ascending)
+    n_bwd_done = [0] * NS
+    limit = [min(k, NS - s) for s in range(NS)]
+    units: List[Unit] = []
+    remaining = 2 * NS * n
+    tick = 0
+    while remaining:
+        chosen = []
+        for s in range(NS):
+            unit = None
+            # backward first (the "1B" half): finish the in-progress
+            # microbatch, else start the next one at t = S-1
+            if bwd_cur[s] is not None:
+                cand = bwd_cur[s]
+            elif bwd_next_m[s] < k:
+                cand = (bwd_next_m[s], S - 1)
+            else:
+                cand = None
+            if cand is not None:
+                m, t = cand
+                u = m * S + t
+                ok = 0 <= done_f[s][u] < tick
+                if ok and t < S - 1:
+                    ok = 0 <= done_b[s][u + 1] < tick
+                if ok and s < NS - 1:
+                    ok = 0 <= done_b[s + 1][u] < tick
+                if ok:
+                    unit = (BWD, m, t)
+            if unit is None and pf[s] < n:
+                m, t = divmod(pf[s], S)
+                ok = s == 0 or 0 <= done_f[s - 1][pf[s]] < tick
+                if ok and t == 0:
+                    ok = (m - n_bwd_done[s]) < limit[s]  # depth gate
+                if ok:
+                    unit = (FWD, m, t)
+            if unit is not None:
+                chosen.append((s, unit))
+        if not chosen:
+            raise RuntimeError(
+                f"1f1b schedule deadlock at tick {tick} "
+                f"(S={S}, NS={NS}, k={k}; {remaining} units left)"
+            )
+        for s, (kind, m, t) in chosen:
+            u = m * S + t
+            if kind == FWD:
+                done_f[s][u] = tick
+                pf[s] += 1
+            else:
+                done_b[s][u] = tick
+                if bwd_cur[s] is None:  # starting this microbatch's backward
+                    bwd_next_m[s] += 1
+                bwd_cur[s] = (m, t - 1) if t > 0 else None
+                if t == 0:
+                    n_bwd_done[s] += 1
+            units.append(Unit(tick, s, kind, m, t))
+            remaining -= 1
+        tick += 1
+    return tuple(units)
+
+
+@functools.lru_cache(maxsize=128)
+def _table(seq_len: int, num_stages: int, micro_batches: int, kind: str) -> Tuple[Unit, ...]:
+    if kind == "gpipe":
+        return _build_gpipe(seq_len, num_stages, micro_batches)
+    if kind == "1f1b":
+        return _build_1f1b(seq_len, num_stages, micro_batches)
+    raise ValueError(f"schedule must be one of {SCHEDULES}, got {kind!r}")
+
+
+@dataclass(frozen=True)
+class PipelineSchedule:
+    """A concrete (seq_len, num_stages, micro_batches, kind) work table.
+
+    Forward arithmetic is shared with (and, for ``gpipe``, identical to)
+    :class:`repro.core.plan.WavefrontSchedule`; the table adds the
+    backward half and the liveness accounting.
+    """
+
+    seq_len: int
+    num_stages: int
+    micro_batches: int = 1
+    kind: str = "gpipe"
+
+    def __post_init__(self):
+        if self.seq_len < 1 or self.num_stages < 1 or self.micro_batches < 1:
+            raise ValueError(f"degenerate schedule {self}")
+        if self.kind not in SCHEDULES:
+            raise ValueError(f"schedule must be one of {SCHEDULES}, got {self.kind!r}")
+
+    # -- the table ----------------------------------------------------------
+
+    def table(self) -> Tuple[Unit, ...]:
+        """All work units, sorted by (tick, stage)."""
+        return _table(self.seq_len, self.num_stages, self.micro_batches, self.kind)
+
+    @property
+    def wavefront(self):
+        """The forward-only clock arithmetic (PR 1's schedule object)."""
+        from repro.core.plan import WavefrontSchedule
+
+        return WavefrontSchedule(
+            seq_len=self.seq_len, num_stages=self.num_stages, micro_batches=self.micro_batches
+        )
+
+    @property
+    def forward_ticks(self) -> int:
+        """Ticks of the forward wavefront alone (``k*S + NS - 1``) — the
+        trip count of the executor's forward scan for every kind."""
+        return self.micro_batches * self.seq_len + self.num_stages - 1
+
+    @property
+    def total_ticks(self) -> int:
+        """Length of the table's timeline (forward + backward)."""
+        return self.table()[-1].tick + 1
+
+    @property
+    def work_units(self) -> int:
+        """2 * NS * k * S: each (stage, m, t) once forward, once backward."""
+        return 2 * self.num_stages * self.micro_batches * self.seq_len
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Fraction of (tick, stage) slots idle over the whole table."""
+        return 1.0 - self.work_units / (self.num_stages * self.total_ticks)
+
+    # -- liveness accounting ------------------------------------------------
+
+    def peak_live_microbatches(self, stage: int) -> int:
+        """Max microbatches in flight at ``stage`` (forward started,
+        backward not finished).  ``gpipe``: k.  ``1f1b``: min(k, NS - s).
+
+        Microbatch liveness brackets: a microbatch is in flight from its
+        F(t=0) until its B(t=0) — forward starts at t=0 and backward
+        finishes at t=0 in both schedules."""
+        deltas: Dict[int, int] = {}
+        for u in self.table():
+            if u.stage != stage or u.t != 0:
+                continue
+            if u.kind == FWD:
+                deltas[u.tick] = deltas.get(u.tick, 0) + 1
+            else:
+                deltas[u.tick + 1] = deltas.get(u.tick + 1, 0) - 1
+        live = peak = 0
+        for tick in sorted(deltas):
+            live += deltas[tick]
+            peak = max(peak, live)
+        return peak
+
+    def peak_stash_steps(self, stage: int) -> int:
+        """Max token-steps whose activations are live at ``stage`` (forward
+        done, backward not done) — the stash the executor must hold,
+        in units of one tick's per-stage activations."""
+        deltas: Dict[int, int] = {}
+        for u in self.table():
+            if u.stage != stage:
+                continue
+            key = u.tick + 1  # live after the fwd tick, freed after the bwd tick
+            deltas[key] = deltas.get(key, 0) + (1 if u.kind == FWD else -1)
+        live = peak = 0
+        for tick in sorted(deltas):
+            live += deltas[tick]
+            peak = max(peak, live)
+        return peak
+
+    @property
+    def max_live_microbatches(self) -> int:
+        return max(self.peak_live_microbatches(s) for s in range(self.num_stages))
+
+    @property
+    def max_stash_steps(self) -> int:
+        return max(self.peak_stash_steps(s) for s in range(self.num_stages))
+
+    def peak_activation_bytes(self, bytes_per_step: float) -> float:
+        """Peak stashed-activation bytes per stage, given the bytes one
+        (stage, m, t) unit stashes (see hybrid.pipeline_activation_model
+        for the seq2seq LSTM term)."""
+        return self.max_stash_steps * bytes_per_step
+
+    # -- executor contract --------------------------------------------------
+
+    @property
+    def bwd_group_size(self) -> int:
+        """Microbatches the executor's backward processes per recompute
+        group: ``gpipe`` rebuilds the whole step's stash at once (k),
+        ``1f1b`` one microbatch at a time (1) — the single-program
+        realization of the table's liveness bound."""
+        return self.micro_batches if self.kind == "gpipe" else 1
+
+    @property
+    def bwd_group_starts(self) -> Tuple[int, ...]:
+        """First microbatch of each backward group, in execution order
+        (ascending — the order the table retires microbatches)."""
+        g = self.bwd_group_size
+        return tuple(range(0, self.micro_batches, g))
+
+    # -- reporting ----------------------------------------------------------
+
+    def summary(self) -> dict:
+        """The numbers dryrun prints next to the roofline terms."""
+        return {
+            "kind": self.kind,
+            "seq_len": self.seq_len,
+            "num_stages": self.num_stages,
+            "micro_batches": self.micro_batches,
+            "forward_ticks": self.forward_ticks,
+            "total_ticks": self.total_ticks,
+            "work_units": self.work_units,
+            "bubble_fraction": round(self.bubble_fraction, 4),
+            "peak_live_microbatches": self.max_live_microbatches,
+            "peak_stash_steps": self.max_stash_steps,
+        }

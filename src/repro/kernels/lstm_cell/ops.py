@@ -29,6 +29,45 @@ def _gates(x, h, wx, wh, b):
     )
 
 
+def lstm_cell_adjoint(x, h, c, wx, wh, b, dh_new, dc_new):
+    """Analytic fp32 adjoint of one LSTM cell, gates recomputed from the
+    saved inputs (the flash-style recompute schedule — no activation
+    stash).  The single source of truth for the cell's backward math:
+    consumed by the fused kernel's custom-vjp below AND by the pipeline's
+    scheduled backward (``core/pipeline.py``).
+
+    (x [B, In], h/c [B, H] previous state, dh_new/dc_new cotangents of the
+    new state, all any dtype) -> fp32 (dx, dh, dc, dwx, dwh, db)."""
+    dh_new = dh_new.astype(jnp.float32)
+    dc_new = dc_new.astype(jnp.float32)
+    gates = _gates(x, h, wx, wh, b)
+    i_s = jax.nn.sigmoid(gates[:, 0])
+    f_s = jax.nn.sigmoid(gates[:, 1])
+    g_t = jnp.tanh(gates[:, 2])
+    o_s = jax.nn.sigmoid(gates[:, 3])
+    cf = c.astype(jnp.float32)
+    c_new = f_s * cf + i_s * g_t
+    tc = jnp.tanh(c_new)
+    # dL/dc' accumulates the direct cotangent and h' = o*tanh(c') path
+    dc_tot = dc_new + dh_new * o_s * (1.0 - tc * tc)
+    d_pre = jnp.stack(
+        [
+            dc_tot * g_t * i_s * (1.0 - i_s),          # i gate
+            dc_tot * cf * f_s * (1.0 - f_s),           # f gate
+            dc_tot * i_s * (1.0 - g_t * g_t),          # g gate
+            dh_new * tc * o_s * (1.0 - o_s),           # o gate
+        ],
+        axis=1,
+    )  # [B, 4, H]
+    dx = jnp.einsum("bgh,igh->bi", d_pre, wx.astype(jnp.float32))
+    dh = jnp.einsum("bgh,jgh->bj", d_pre, wh.astype(jnp.float32))
+    dc = dc_tot * f_s
+    dwx = jnp.einsum("bi,bgh->igh", x.astype(jnp.float32), d_pre)
+    dwh = jnp.einsum("bj,bgh->jgh", h.astype(jnp.float32), d_pre)
+    db = d_pre.sum(axis=0)
+    return dx, dh, dc, dwx, dwh, db
+
+
 @functools.lru_cache(maxsize=None)
 def _make_fused_cell(block_b: int, block_h: int, interpret: bool):
     @jax.custom_vjp
@@ -39,35 +78,7 @@ def _make_fused_cell(block_b: int, block_h: int, interpret: bool):
         return cell(x, h, c, wx, wh, b), (x, h, c, wx, wh, b)
 
     def bwd(res, cts):
-        x, h, c, wx, wh, b = res
-        dh_new, dc_new = (ct.astype(jnp.float32) for ct in cts)
-        gates = _gates(x, h, wx, wh, b)
-        i_s = jax.nn.sigmoid(gates[:, 0])
-        f_s = jax.nn.sigmoid(gates[:, 1])
-        g_t = jnp.tanh(gates[:, 2])
-        o_s = jax.nn.sigmoid(gates[:, 3])
-        cf = c.astype(jnp.float32)
-        c_new = f_s * cf + i_s * g_t
-        tc = jnp.tanh(c_new)
-        # dL/dc' accumulates the direct cotangent and h' = o*tanh(c') path
-        dc_tot = dc_new + dh_new * o_s * (1.0 - tc * tc)
-        d_pre = jnp.stack(
-            [
-                dc_tot * g_t * i_s * (1.0 - i_s),          # i gate
-                dc_tot * cf * f_s * (1.0 - f_s),           # f gate
-                dc_tot * i_s * (1.0 - g_t * g_t),          # g gate
-                dh_new * tc * o_s * (1.0 - o_s),           # o gate
-            ],
-            axis=1,
-        )  # [B, 4, H]
-        wxf, whf = wx.astype(jnp.float32), wh.astype(jnp.float32)
-        dx = jnp.einsum("bgh,igh->bi", d_pre, wxf)
-        dh = jnp.einsum("bgh,jgh->bj", d_pre, whf)
-        dc = dc_tot * f_s
-        dwx = jnp.einsum("bi,bgh->igh", x.astype(jnp.float32), d_pre)
-        dwh = jnp.einsum("bj,bgh->jgh", h.astype(jnp.float32), d_pre)
-        db = d_pre.sum(axis=0)
-        leaves = (dx, dh, dc, dwx, dwh, db)
+        leaves = lstm_cell_adjoint(*res, *cts)
         return tuple(g.astype(a.dtype) for g, a in zip(leaves, res))
 
     cell.defvjp(fwd, bwd)

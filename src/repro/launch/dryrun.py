@@ -23,6 +23,7 @@ import jax
 
 from repro.configs import ARCH_IDS, get_config, get_shape, supported_shapes
 from repro.core import compat
+from repro.core.schedule import SCHEDULES
 from repro.core.strategy import Strategy
 from repro.launch import hlo_analysis
 from repro.launch.inputs import build_lowerable
@@ -107,7 +108,29 @@ def apply_variant(cfg, variant: str | None, strategy: str | None = None):
     return cfg, dict(v.get("build", {}))
 
 
-def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: str | None, *, micro: int | None = None, overlap: bool = False, tag: str = "", variant: str | None = None, save_hlo: bool = True):
+def schedule_report(cfg, shape, mesh, strat, micro: int, schedule: str, build_kw: dict):
+    """Tick-table summary + predicted activation bytes for a pipelined
+    seq2seq plan (None when the plan does not pipeline)."""
+    from repro.core.hybrid import pipeline_activation_model
+    from repro.core.plan import ExecutionPlan
+
+    plan = ExecutionPlan(
+        strategy=strat, mesh=mesh, micro_batches=micro,
+        use_pipeline=build_kw.get("use_pipeline", False), schedule=schedule,
+    )
+    if not plan.pipelined or cfg.family != "seq2seq":
+        return None
+    M = N = shape.seq_len // 2
+    summ = plan.pipeline_schedule(N).summary()
+    act = pipeline_activation_model(
+        cfg, schedule=schedule, num_stages=plan.num_stages, micro_batches=micro,
+        batch=shape.global_batch // max(plan.batch_shard_size(), 1),
+        src_len=M, tgt_len=N,
+    )
+    return {"table": summ, "activation_model": act}
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: str | None, *, micro: int | None = None, overlap: bool = False, schedule: str = "gpipe", tag: str = "", variant: str | None = None, save_hlo: bool = True):
     cfg, build_kw = apply_variant(get_config(arch), variant, strategy)
     shape = get_shape(shape_name)
     multi = mesh_kind == "multipod"
@@ -116,8 +139,22 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: 
     strat = Strategy(strategy)
     if micro is None:
         micro = default_micro(arch, shape_name, mesh_kind)
+    sched_rec = schedule_report(cfg, shape, mesh, strat, micro, schedule, build_kw) if shape.kind == "train" else None
+    if schedule != "gpipe" and sched_rec is None:
+        print(f"[dryrun] warning: --schedule={schedule} has no effect for {arch} x {shape_name} "
+              f"x {strategy} (needs the seq2seq pipeline variant)", flush=True)
+    if sched_rec is not None:
+        t, a = sched_rec["table"], sched_rec["activation_model"]
+        print(
+            f"[dryrun] {arch}: schedule={t['kind']} ticks={t['total_ticks']} "
+            f"(fwd {t['forward_ticks']}) bubble={t['bubble_fraction']:.3f} "
+            f"peak_live_microbatches={t['peak_live_microbatches']} "
+            f"predicted_act_bytes/stage={a['peak_bytes']/2**20:.1f} MiB "
+            f"(stash {a['peak_stash_bytes']/2**20:.1f} + boundary {a['boundary_bytes']/2**20:.1f})",
+            flush=True,
+        )
     t0 = time.perf_counter()
-    fn, args = build_lowerable(cfg, shape, mesh, strat, micro_batches=micro, overlap=overlap, **build_kw)
+    fn, args = build_lowerable(cfg, shape, mesh, strat, micro_batches=micro, overlap=overlap, schedule=schedule, **build_kw)
     with compat.set_mesh(mesh):
         lowered = fn.lower(*args)
         t_lower = time.perf_counter() - t0
@@ -155,6 +192,9 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: 
         "strategy": strategy,
         "micro_batches": micro,
         "overlap": overlap,
+        # None when no schedule drove the step (non-pipelined plan): a
+        # recorded kind must mean the backward actually used it
+        "schedule": schedule if sched_rec is not None else None,
         "chips": chips,
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),
@@ -169,6 +209,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: 
         "collectives_per_device_bytes": breakdown,
         "roofline": roof.to_dict(),
     }
+    if sched_rec is not None:
+        rec["pipeline_schedule"] = sched_rec
     print(
         f"[dryrun] {arch:>22s} x {shape_name:<11s} {mesh_kind:<8s} {strategy:<10s} "
         f"lower {t_lower:6.1f}s compile {t_compile:6.1f}s "
@@ -227,6 +269,8 @@ def main():
     ap.add_argument("--all", action="store_true", help="run every supported (arch x shape)")
     ap.add_argument("--micro", type=int, default=None)
     ap.add_argument("--overlap", action="store_true", help="overlap the hybrid head grad sync across microbatches")
+    ap.add_argument("--schedule", default="gpipe", choices=SCHEDULES,
+                    help="pipelined-backward activation liveness (needs the pipeline variant)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--tag", default="")
     ap.add_argument("--variant", default=None, choices=sorted(VARIANTS))
@@ -253,7 +297,7 @@ def main():
                 print(f"[dryrun] skip existing {fname}", flush=True)
                 continue
             try:
-                run_one(arch, shape, mesh_kind, args.strategy, args.out, micro=args.micro, overlap=args.overlap, tag=args.tag, variant=args.variant)
+                run_one(arch, shape, mesh_kind, args.strategy, args.out, micro=args.micro, overlap=args.overlap, schedule=args.schedule, tag=args.tag, variant=args.variant)
             except Exception as e:  # noqa: BLE001 — report and continue the sweep
                 failures.append((arch, shape, mesh_kind, repr(e)))
                 print(f"[dryrun] FAIL {arch} x {shape} x {mesh_kind}: {e}", flush=True)

@@ -125,6 +125,7 @@ def build_lowerable(
     remat: bool = True,
     use_pipeline: bool = False,
     overlap: bool = False,
+    schedule: str = "gpipe",
     pin_residual: bool = False,
     batch_backbone: bool = False,
     q_chunk: int = 128,
@@ -132,7 +133,7 @@ def build_lowerable(
     """Returns (jitted_fn, args) such that jitted_fn.lower(*args) is the
     production step for this (arch x shape x mesh x strategy).  Train steps
     go through an :class:`ExecutionPlan` binding (strategy, mesh,
-    micro_batches, overlap, pipeline)."""
+    micro_batches, overlap, pipeline, schedule)."""
     init_fn = (lambda k, c: __import__("repro.models.seq2seq", fromlist=["x"]).init_seq2seq(k, c)) if cfg.family == "seq2seq" else (lambda k, c: tfm.init_lm(k, c))
     shapes, specs = abstract_init(cfg, init_fn)
     data = input_specs(cfg, shape, mesh, strat)
@@ -141,7 +142,7 @@ def build_lowerable(
         optimizer = adam()
         plan = ExecutionPlan(
             strategy=strat, mesh=mesh, micro_batches=micro_batches,
-            overlap=overlap, use_pipeline=use_pipeline,
+            overlap=overlap, use_pipeline=use_pipeline, schedule=schedule,
         )
         plan.validate_batch(shape.global_batch)
         step_fn, sshard, _ = trainer_mod.make_train_step(

@@ -19,6 +19,7 @@ import numpy as np
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_IDS, get_config
 from repro.core.plan import ExecutionPlan, STAGE_KERNELS
+from repro.core.schedule import SCHEDULES
 from repro.core.strategy import Strategy
 from repro.data import LMBatchIterator, MTBatchIterator, SyntheticLMTask, SyntheticMTTask
 from repro.models import seq2seq as s2s
@@ -47,6 +48,12 @@ def main():
         help="wavefront stage cell compute: plain jnp math, the fused Pallas "
         "LSTM cell kernel (TPU), or the same kernel interpreted (CPU)",
     )
+    ap.add_argument(
+        "--schedule", choices=SCHEDULES, default="gpipe",
+        help="pipelined-backward activation liveness: gpipe stashes all "
+        "microbatches at the fwd/bwd boundary, 1f1b bounds the per-stage "
+        "stash at min(micro_batches, num_stages)",
+    )
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -73,7 +80,7 @@ def main():
     plan = ExecutionPlan(
         strategy=strat, mesh=mesh, micro_batches=args.micro_batches,
         overlap=args.overlap, use_pipeline=args.pipeline,
-        stage_kernel=args.stage_kernel,
+        stage_kernel=args.stage_kernel, schedule=args.schedule,
     )
     plan.validate_batch(args.batch)
     if args.pipeline and not plan.pipelined:
@@ -81,6 +88,9 @@ def main():
               f"(wavefront needs model/hybrid); microbatches run as grad accumulation")
     if args.stage_kernel != "jnp" and not plan.pipelined:
         print(f"warning: --stage-kernel={args.stage_kernel} has no effect without "
+              f"the wavefront pipeline (needs --pipeline and model/hybrid)")
+    if args.schedule != "gpipe" and not plan.pipelined:
+        print(f"warning: --schedule={args.schedule} has no effect without "
               f"the wavefront pipeline (needs --pipeline and model/hybrid)")
 
     key = jax.random.key(args.seed)
@@ -103,7 +113,7 @@ def main():
     print(
         f"arch={cfg.name} params={n_params/1e6:.1f}M strategy={strat.value} mesh={args.mesh} "
         f"micro_batches={args.micro_batches} pipeline={plan.pipelined} overlap={args.overlap} "
-        f"stage_kernel={plan.stage_kernel}"
+        f"stage_kernel={plan.stage_kernel} schedule={plan.schedule}"
     )
     chunk = max(args.eval_every, args.steps if not args.eval_every else args.eval_every)
     done = 0

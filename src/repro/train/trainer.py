@@ -183,6 +183,7 @@ def make_train_step(
     remat: bool = True,
     micro_batches: int = 1,
     overlap: bool = False,
+    schedule: str = "gpipe",
     pin_residual: bool = False,
     batch_backbone: bool = False,
     jit: bool = True,
@@ -190,13 +191,15 @@ def make_train_step(
     """Returns (train_step, state_shardings, batch_sharding_fn).
 
     ``plan`` carries every execution decision; when omitted, one is built
-    from the legacy (strat, mesh, micro_batches, overlap, use_pipeline)
-    kwargs.  See :func:`make_grad_fn` for how the plan's microbatch
-    schedule is realized."""
+    from the legacy (strat, mesh, micro_batches, overlap, use_pipeline,
+    schedule) kwargs.  See :func:`make_grad_fn` for how the plan's
+    microbatch schedule is realized; the pipelined backward's activation
+    liveness (``schedule``: gpipe vs 1f1b) is entirely the plan's and the
+    pipeline executor's business — the trainer is untouched by the swap."""
     if plan is None:
         plan = ExecutionPlan(
             strategy=strat, mesh=mesh, micro_batches=micro_batches,
-            overlap=overlap, use_pipeline=use_pipeline,
+            overlap=overlap, use_pipeline=use_pipeline, schedule=schedule,
         )
     strat, mesh = plan.strategy, plan.mesh
     grads_of = make_grad_fn(cfg, plan, remat=remat, pin_residual=pin_residual, batch_backbone=batch_backbone)

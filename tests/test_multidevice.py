@@ -144,6 +144,58 @@ def test_pipeline_microbatched_wavefront_matches_sequential():
         assert r["naive_absent"] == 1, (k, r)
 
 
+def test_pipeline_schedule_grads_match_sequential_multistage():
+    """The schedule-driven custom-vjp backward on a REAL 4-stage pipeline:
+    for gpipe and 1f1b at k in (1, 2, 4), outputs AND parameter/input grads
+    match the sequential reference — the mirrored backward wavefront's
+    ppermute chain and the per-group recompute are numerically exact."""
+    code = PREAMBLE + textwrap.dedent(
+        """
+        from repro.models import lstm
+        from repro.models.common import Initializer
+        from repro.core import pipeline as pl
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        ini = Initializer(jax.random.key(0))
+        L, e, h, B, S = 8, 24, 32, 8, 13
+        params, _ = lstm.init_stacked_lstm(ini, "enc", L, e, h)
+        x = jax.random.normal(jax.random.key(1), (B, S, e), jnp.float32)
+        ref_y = lstm.run_stacked_lstm(params, x)[0]
+        w = jax.random.normal(jax.random.key(2), ref_y.shape, jnp.float32)
+        gref, gxref = jax.grad(
+            lambda p, xx: (lstm.run_stacked_lstm(p, xx)[0] * w).sum(), argnums=(0, 1)
+        )(params, x)
+        res = {}
+        with compat.set_mesh(mesh):
+            stacked, _ = pl.stack_pipeline_params(params, 4)  # 2 layers/stage
+            for k in (1, 2, 4):
+                for sched in ("gpipe", "1f1b"):
+                    fn = lambda st_, xx: pl.pipeline_lstm(
+                        mesh, st_, xx, in_dim=e, micro_batches=k, schedule=sched)
+                    y = jax.jit(fn)(stacked, x)
+                    g, gx = jax.jit(jax.grad(
+                        lambda st_, xx: (fn(st_, xx) * w).sum(), argnums=(0, 1)))(stacked, x)
+                    gerr = 0.0
+                    for li, pref in enumerate(gref):
+                        s_, l_ = li // 2, li % 2
+                        gerr = max(gerr, float(jnp.abs(g["wh"][s_, l_] - pref["wh"]).max()))
+                        gerr = max(gerr, float(jnp.abs(g["b"][s_, l_] - pref["b"]).max()))
+                        nwx = pref["wx"].shape[0]
+                        gerr = max(gerr, float(jnp.abs(g["wx"][s_, l_, :nwx] - pref["wx"]).max()))
+                    res[f"{sched}_k{k}"] = {
+                        "yerr": float(jnp.abs(y - ref_y).max()),
+                        "gerr": gerr,
+                        "gxerr": float(jnp.abs(gx - gxref).max()),
+                    }
+        print(json.dumps(res))
+        """
+    )
+    res = _run(code)
+    for name, r in res.items():
+        assert r["yerr"] < 1e-5, (name, r)
+        assert r["gerr"] < 2e-4, (name, r)
+        assert r["gxerr"] < 1e-4, (name, r)
+
+
 def test_train_step_plan_microbatched_pipeline_runs_sharded():
     """End-to-end: a jit'd hybrid train step under ExecutionPlan(pipeline,
     micro_batches=2, overlap) on the (2, 4) mesh — losses finite and equal
@@ -335,12 +387,20 @@ def test_batch_shard_backbone_matches_plain_loss_and_grads():
             l1, g1 = jax.jit(jax.value_and_grad(lambda p: S.forward(p, cfg, batch)[0]))(params)
             l2, g2 = jax.jit(jax.value_and_grad(lambda p: S.forward(p, cfg, batch, backbone=bb)[0]))(params)
         gerr = max(float(jnp.abs(a - b).max()) for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
-        print(json.dumps({"lerr": abs(float(l1) - float(l2)), "gerr": gerr}))
+        # a batch the 8 shards cannot divide must raise, not silently run
+        # the unsharded path with a different collective structure
+        try:
+            bb([], jnp.zeros((6, 4, 8)), None)
+            divis_err = "missing"
+        except ValueError as e:
+            divis_err = "divisible" if "divisible" in str(e) else str(e)
+        print(json.dumps({"lerr": abs(float(l1) - float(l2)), "gerr": gerr, "divis_err": divis_err}))
         """
     )
     res = _run(code)
     assert res["lerr"] < 1e-4, res
     assert res["gerr"] < 1e-3, res
+    assert res["divis_err"] == "divisible", res
 
 
 def test_cache_shardings_resolve():

@@ -153,6 +153,90 @@ def test_luong_attn_kernel_parity_property(b, n, m, h, bn, dt, seed):
     KH.assert_parity("luong_attn", dict(B=b, N=n, M=m, h=h, bn=bn), dt, seed=seed)
 
 
+# ---------------------------------------------------------------------------
+# PipelineSchedule invariants: the work table is the single source of truth
+# for the pipelined backward — its structure must hold for ANY (S, NS, k).
+# ---------------------------------------------------------------------------
+
+schedule_kinds = hst.sampled_from(["gpipe", "1f1b"])
+
+
+@pytest.mark.pipeline
+@SET
+@given(hst.integers(1, 6), hst.integers(1, 5), hst.integers(1, 6), schedule_kinds)
+def test_pipeline_schedule_table_invariants(S, NS, k, kind):
+    """Every (stage, microbatch, timestep) appears exactly once forward and
+    once backward; at most one unit per (tick, stage); dependencies respect
+    wavefront order (forward needs the unit below-left, backward the unit
+    above-right plus its own forward)."""
+    from repro.core.schedule import PipelineSchedule
+
+    sc = PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind=kind)
+    tab = sc.table()
+    assert len(tab) == sc.work_units == 2 * NS * k * S
+    tick = {}
+    per_slot = set()
+    for u in tab:
+        assert (u.kind, u.stage, u.micro, u.t) not in tick
+        tick[(u.kind, u.stage, u.micro, u.t)] = u.tick
+        assert (u.tick, u.stage) not in per_slot  # one unit per stage per tick
+        per_slot.add((u.tick, u.stage))
+    for s in range(NS):
+        for m in range(k):
+            for t in range(S):
+                ft, bt = tick[("F", s, m, t)], tick[("B", s, m, t)]
+                assert bt > ft  # backward needs its own forward
+                if s > 0:
+                    assert ft > tick[("F", s - 1, m, t)]
+                if t > 0:
+                    assert ft > tick[("F", s, m, t - 1)]
+                if s < NS - 1:
+                    assert bt > tick[("B", s + 1, m, t)]
+                if t < S - 1:
+                    assert bt > tick[("B", s, m, t + 1)]
+
+
+@pytest.mark.pipeline
+@SET
+@given(hst.integers(1, 6), hst.integers(1, 5), hst.integers(1, 6))
+def test_pipeline_schedule_gpipe_matches_wavefront(S, NS, k):
+    """The gpipe forward table IS WavefrontSchedule's tick arithmetic
+    (stage s computes u = m*S + t at tick s + u), and its timeline is the
+    two mirrored wavefronts."""
+    from repro.core.plan import WavefrontSchedule
+    from repro.core.schedule import PipelineSchedule
+
+    sc = PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind="gpipe")
+    wf = WavefrontSchedule(seq_len=S, num_stages=NS, micro_batches=k)
+    fwd_ticks = [u.tick for u in sc.table() if u.kind == "F"]
+    for u in sc.table():
+        if u.kind == "F":
+            assert u.tick == u.stage + u.micro * S + u.t
+    assert max(fwd_ticks) + 1 == wf.ticks == sc.forward_ticks
+    assert sc.total_ticks == 2 * wf.ticks
+
+
+@pytest.mark.pipeline
+@SET
+@given(hst.integers(1, 6), hst.integers(1, 5), hst.integers(1, 6))
+def test_pipeline_schedule_1f1b_depth_gate(S, NS, k):
+    """1f1b's point: peak in-flight microbatches at stage s is bounded by
+    min(k, NS - s) — pipeline depth, not microbatch count — while gpipe
+    holds all k everywhere."""
+    from repro.core.schedule import PipelineSchedule
+
+    ob = PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind="1f1b")
+    gp = PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind="gpipe")
+    for s in range(NS):
+        assert gp.peak_live_microbatches(s) == k
+        assert ob.peak_live_microbatches(s) <= min(k, NS - s)
+        assert ob.peak_stash_steps(s) <= min(k, NS) * S
+    # same work retired either way, and 1f1b never takes LONGER on the
+    # idealized timeline (both fill 2*NS*k*S units; greedy backward-first
+    # cannot add ticks over the two mirrored wavefronts)
+    assert ob.total_ticks <= gp.total_ticks
+
+
 @SET
 @given(hst.integers(0, 2**31 - 1), hst.integers(1, 4))
 def test_hlo_shape_bytes_parser(seed, n):
