@@ -8,16 +8,29 @@ skewed workloads (a few long requests among many short ones) keep the
 slot table full.  Both modes run through the same jit'd extend step under
 a :class:`repro.core.plan.ServePlan`; only ``admission`` differs.
 
+A ``--mesh`` sweep (also part of the default ``run()``) reruns the skewed
+continuous workload in subprocesses with a FORCED host device count (1 vs
+8) under a slot-sharded plan — the decode tick's vmapped batch axis spread
+over the data axes per DESIGN.md §5 — and appends tok/s records to
+``experiments/bench/serve_bench.json`` so the sharding trajectory survives
+across bench runs.
+
 Rows: (name, us_per_generated_token, tok_per_s, notes) per
 (skew, admission) at smoke scale on this host.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
 import numpy as np
+
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench", "serve_bench.json")
 
 
 def _requests(rng, vocab: int, skew: str, n: int):
@@ -31,6 +44,84 @@ def _requests(rng, vocab: int, skew: str, n: int):
             plen, gen = 24, 24
         reqs.append((rng.integers(3, vocab, size=plen).astype(np.int32), gen))
     return reqs
+
+
+_MESH_CHILD = """
+import dataclasses, json, time
+import jax, numpy as np
+from repro.configs import get_config
+from repro.core.plan import ServePlan
+from repro.models import transformer as tfm
+from repro.serve import ContinuousEngine
+
+cfg = dataclasses.replace(get_config("qwen3-1.7b", smoke=True), dtype="float32")
+params, _ = tfm.init_lm(jax.random.key(0), cfg)
+rng = np.random.default_rng(0)
+reqs = []
+for i in range(16):  # skewed: short quick requests + long stragglers
+    plen, gen = (8, 6) if i % 4 else (24, 24)
+    reqs.append((rng.integers(3, cfg.vocab_size, size=plen).astype(np.int32), gen))
+K = jax.device_count()
+mesh = jax.make_mesh((K,), ("data",)) if K > 1 else None
+plan = ServePlan.for_config(
+    cfg, max_slots=8, max_len=64, prefill_chunk=8,
+    strategy="data" if mesh is not None else "single", mesh=mesh,
+)
+eng = ContinuousEngine(cfg, params, plan)
+prompts, budgets = [p for p, _ in reqs], [g for _, g in reqs]
+eng.run(prompts, budgets)  # compile
+t0 = time.perf_counter()
+outs = eng.run(prompts, budgets)
+dt = time.perf_counter() - t0
+tok = sum(len(o) for o in outs)
+print(json.dumps({"devices": K, "sharded": mesh is not None,
+                  "tok_per_s": round(tok / dt, 1), "us_per_tok": round(dt / tok * 1e6, 1)}))
+"""
+
+
+def mesh_sweep(device_counts=(1, 8)):
+    """Skewed continuous serving at forced host device counts: tok/s with
+    the slot table sharded over all host devices vs single-device.  Returns
+    (rows, records); records are appended to the bench trajectory."""
+    rows, records = [], []
+    for n in device_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+        )
+        out = subprocess.run(
+            [sys.executable, "-c", _MESH_CHILD], capture_output=True, text=True, env=env, timeout=900
+        )
+        if out.returncode != 0:
+            err = (out.stderr.strip().splitlines() or [""])[-1][:80]
+            rows.append((f"serve_mesh_{n}dev", "ERROR", 0, err))
+            continue
+        rec = json.loads(out.stdout.strip().splitlines()[-1])
+        records.append(rec)
+        rows.append((
+            f"serve_mesh_{n}dev",
+            rec["us_per_tok"],
+            rec["tok_per_s"],
+            f"tok/s, skewed, {'sharded slots' if rec['sharded'] else 'no mesh'}",
+        ))
+    if records:
+        try:
+            os.makedirs(os.path.dirname(TRAJECTORY), exist_ok=True)
+            traj = []
+            if os.path.exists(TRAJECTORY):
+                try:
+                    with open(TRAJECTORY) as f:
+                        traj = json.load(f)
+                except ValueError:
+                    traj = []  # interrupted prior write: restart the trajectory
+            traj.append({"time": time.strftime("%Y-%m-%dT%H:%M:%S"), "records": records})
+            with open(TRAJECTORY, "w") as f:
+                json.dump(traj, f, indent=1)
+        except OSError:
+            pass  # read-only checkout: the CSV rows still report the sweep
+    return rows, records
 
 
 def run():
@@ -74,4 +165,15 @@ def run():
                     f"tok/s over {n} reqs, {K} slots",
                 )
             )
+    rows += mesh_sweep()[0]
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", action="store_true", help="run only the 1-vs-8-device sharded-slot sweep")
+    args = ap.parse_args()
+    for row in (mesh_sweep()[0] if args.mesh else run()):
+        print(",".join(str(c) for c in row))

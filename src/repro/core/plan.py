@@ -164,17 +164,7 @@ class ExecutionPlan:
 
     def batch_shard_size(self) -> int:
         """Product of mesh axis sizes the batch dim is sharded over."""
-        if self.mesh is None:
-            return 1
-        bs = self.batch_spec()
-        if not bs:
-            return 1
-        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
-        axes = bs[0] if isinstance(bs[0], tuple) else (bs[0],)
-        n = 1
-        for a in axes:
-            n *= sizes[a]
-        return n
+        return stg.batch_shard_size(self.strategy, self.mesh)
 
     def validate_batch(self, global_batch: int) -> None:
         if global_batch % self.micro_batches:
@@ -182,10 +172,18 @@ class ExecutionPlan:
                 f"global batch {global_batch} not divisible by micro_batches={self.micro_batches}"
             )
         dsz = self.batch_shard_size()
-        # when the batch cannot shard evenly at all, input_specs falls back
-        # to replicated inputs and GSPMD handles it — only reject the case
-        # where sharding works but the micro slices would break it
-        if global_batch % dsz == 0 and global_batch % (dsz * self.micro_batches):
+        # the plan's executors do not silently fall back to replicated
+        # inputs: batch_shard_backbone raises at trace time on exactly this
+        # case, so a plan that accepted it here would validate and then
+        # crash mid-train — reject up front instead
+        if global_batch % dsz:
+            raise ValueError(
+                f"global batch {global_batch} not divisible by the {dsz} batch "
+                f"shards of strategy={self.strategy.value} on this mesh "
+                "(batch-sharded executors refuse to run unsharded); pad the "
+                "global batch or pick a mesh whose batch axes divide it"
+            )
+        if global_batch % (dsz * self.micro_batches):
             raise ValueError(
                 f"global batch {global_batch} not divisible by batch shards x "
                 f"micro_batches = {dsz} x {self.micro_batches}"
@@ -335,6 +333,35 @@ class ServePlan:
                 )
         elif self.window is not None:
             raise ValueError(f"window is only meaningful for cache_policy='window', got {self.cache_policy!r}")
+        if self.mesh is not None:
+            # an explicit mesh must never be quietly ignored: the slot table
+            # (the vmapped batch axis of the decode tick) shards over the
+            # strategy's batch axes, so the plan needs a strategy that HAS
+            # batch axes and a slot count those axes divide
+            if self.strategy == stg.Strategy.SINGLE:
+                raise ValueError(
+                    "ServePlan carries a mesh but strategy='single' would leave the "
+                    "slot table unsharded — pick a data-parallel strategy (e.g. "
+                    "'data') or drop the mesh"
+                )
+            spec = self.slot_spec()
+            axes = spec[0] if len(spec) else ()
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            if not axes:
+                # e.g. a ('model',)-only mesh under HYBRID: batch_spec is
+                # P(()) — an empty axis GROUP, not an empty spec
+                raise ValueError(
+                    f"ServePlan mesh axes {tuple(self.mesh.axis_names)} provide no "
+                    f"batch axes for strategy={self.strategy.value}; the slot table "
+                    "cannot shard — rename a mesh axis to 'data'/'pod' or drop the mesh"
+                )
+            dsz = self.data_shard_size()
+            if self.max_slots % dsz:
+                raise ValueError(
+                    f"max_slots={self.max_slots} not divisible by the {dsz} slot "
+                    f"shards of strategy={self.strategy.value} on this mesh "
+                    "(every device must own the same number of decode lanes)"
+                )
 
     # -- construction -------------------------------------------------------
 
@@ -408,6 +435,28 @@ class ServePlan:
         """Per-slot attention-cache capacity in tokens (the rolling buffer
         size under the window policy)."""
         return self.window if self.cache_policy == "window" else self.max_len
+
+    def slot_spec(self) -> P:
+        """PartitionSpec axes for the slot (vmapped batch) dimension of the
+        engine's slot table — the strategy's batch axes."""
+        return stg.batch_spec(self.strategy, self.mesh)
+
+    def data_shard_size(self) -> int:
+        """Product of mesh axis sizes the slot dim shards over (mirrors
+        :meth:`ExecutionPlan.batch_shard_size`)."""
+        return stg.batch_shard_size(self.strategy, self.mesh)
+
+    def slot_sharding(self, ndim: int = 1) -> Optional[NamedSharding]:
+        """NamedSharding for one slot-table leaf of rank ``ndim``: the slot
+        dim over the plan's batch axes, inner dims replicated (slot-dim-only
+        placement — see ``strategy.slot_entry_spec`` and DESIGN.md §5).
+        None without a mesh."""
+        if self.mesh is None:
+            return None
+        spec = stg.slot_entry_spec(
+            (self.max_slots,) + (1,) * (ndim - 1), self.mesh, self.strategy
+        )
+        return NamedSharding(self.mesh, spec)
 
     def phase_boundary(self) -> Callable:
         return stg.phase_boundary_fn(self.strategy, self.mesh)

@@ -88,6 +88,19 @@ def batch_spec(strategy: Strategy, mesh: Optional[Mesh]) -> P:
     return P(data_axes(mesh))
 
 
+def batch_shard_size(strategy: Strategy, mesh: Optional[Mesh]) -> int:
+    """Product of mesh axis sizes the batch dim shards over — the ONE
+    source of truth behind ``ExecutionPlan.batch_shard_size``,
+    ``ServePlan.data_shard_size`` and the serve launcher's slot rounding."""
+    if mesh is None:
+        return 1
+    spec = batch_spec(strategy, mesh)
+    if not len(spec):
+        return 1
+    axes = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+    return _prod(mesh, axes)
+
+
 # ---------------------------------------------------------------------------
 # leaf resolution
 # ---------------------------------------------------------------------------
@@ -268,6 +281,22 @@ def _prod(mesh: Mesh, axes: tuple) -> int:
     for a in axes:
         n *= _axis_size(mesh, a)
     return n
+
+
+def slot_entry_spec(shape: tuple, mesh: Mesh, strategy: Strategy = Strategy.DATA) -> P:
+    """Slot-table leaf [K, ...] — a single-slot cache leaf with the slot axis
+    prepended (recurrent states, encdec memory, per-slot KV blocks and the
+    per-slot length counter alike): the slot dim shards over the strategy's
+    batch axes when divisible, every inner dim stays replicated.  Per-slot
+    batch is 1 and per-slot state is small, so splitting inner dims would buy
+    nothing but collectives inside the vmapped decode tick (DESIGN.md §5)."""
+    spec = batch_spec(strategy, mesh)
+    bax = spec[0] if len(spec) else None
+    if bax is not None:
+        names = bax if isinstance(bax, tuple) else (bax,)
+        if shape[0] % _prod(mesh, names):
+            bax = None
+    return P(bax, *([None] * (len(shape) - 1)))
 
 
 def state_entry_spec(shape: tuple, mesh: Mesh) -> P:

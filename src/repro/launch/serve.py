@@ -4,6 +4,8 @@ including the paper's own seq2seq arch (encdec_memory cache policy).
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --batch 4 --prompt-len 32 --steps 16
     PYTHONPATH=src python -m repro.launch.serve --arch seq2seq-rnn --smoke
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --arch seq2seq-rnn --smoke --mesh host
 
 A :class:`repro.core.plan.ServePlan` carries every serving decision
 (cache policy, slot table, prefill chunk, admission); the engine consumes
@@ -21,10 +23,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core import strategy as stg
 from repro.core.plan import ADMISSIONS, CACHE_POLICIES, ServePlan
+from repro.core.strategy import Strategy
 from repro.models import seq2seq as s2s
 from repro.models import transformer as tfm
 from repro.serve import ContinuousEngine, ServeEngine, make_sampler
+
+
+def _build_mesh(kind: str):
+    """--mesh vocabulary (mirrors launch/train.py, plus 'host' = every host
+    device on one data axis — what the forced-8-device CI/bench runs use)."""
+    if kind == "none":
+        return None
+    if kind == "host":
+        return jax.make_mesh((jax.device_count(),), ("data",))
+    if kind in ("pod", "multipod"):
+        from repro.launch.mesh import make_production_mesh
+
+        return make_production_mesh(multi_pod=kind == "multipod")
+    from repro.launch.mesh import make_test_mesh
+
+    return make_test_mesh()
 
 
 def main():
@@ -41,6 +61,10 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=None, help="per-slot cache capacity")
     ap.add_argument("--engine", choices=("continuous", "static"), default="continuous")
+    ap.add_argument("--strategy", default=None, choices=[s.value for s in Strategy],
+                    help="slot-table sharding strategy (default: data when --mesh is set, single otherwise)")
+    ap.add_argument("--mesh", choices=("none", "host", "test", "pod", "multipod"), default="none",
+                    help="mesh the slot table shards over ('host' = all host devices on one data axis)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -50,13 +74,26 @@ def main():
     sampler = make_sampler(args.temperature)
     sample_rng = jax.random.key(args.seed) if args.temperature > 0 else None
 
+    mesh = _build_mesh(args.mesh)
+    strat = Strategy(args.strategy) if args.strategy else (Strategy.DATA if mesh is not None else Strategy.SINGLE)
     max_len = args.max_len or max(64, args.prompt_len + args.steps)
+    slots = args.max_slots or args.batch
     overrides = dict(
-        max_slots=args.max_slots or args.batch,
+        max_slots=slots,
         max_len=max_len,
         prefill_chunk=args.prefill_chunk,  # for_config fits it to the capacity
         admission=args.admission,
+        strategy=strat,
+        mesh=mesh,
     )
+    if mesh is not None:
+        # every device owns the same number of decode lanes: round the slot
+        # table up to the next multiple of the slot shards
+        dsz = stg.batch_shard_size(strat, mesh)
+        if slots % dsz:
+            slots = -(-slots // dsz) * dsz
+            print(f"note: max_slots rounded up to {slots} ({dsz} slot shards)")
+            overrides["max_slots"] = slots
     if args.cache_policy != "auto":
         overrides["cache_policy"] = args.cache_policy
     if args.window is not None:
@@ -95,7 +132,8 @@ def main():
     outs = engine.run(prompts, args.steps, sampler=sampler, rng=sample_rng)
     dt = time.perf_counter() - t0
     tok = sum(len(o) for o in outs)
-    print(f"[{cfg.name} | {plan.cache_policy} | {plan.admission}] {len(outs)} requests, "
+    mesh_note = f" | {plan.strategy.value}:{plan.data_shard_size()} slot shards" if plan.mesh is not None else ""
+    print(f"[{cfg.name} | {plan.cache_policy} | {plan.admission}{mesh_note}] {len(outs)} requests, "
           f"{tok} tokens in {dt:.2f}s ({tok / dt:.1f} tok/s)")
     for o in outs[:2]:
         print(o.tolist())

@@ -22,6 +22,13 @@ Cache sharding comes from ``core.strategy.cache_entry_spec``: batch over
 the data axes, KV heads over ``model`` when divisible — otherwise the cache
 *sequence* dim is model-sharded and the single-query softmax reduces with
 small stat collectives (sequence-parallel decode; see DESIGN.md §2).
+
+``ContinuousEngine`` honors ``ServePlan.mesh`` end-to-end (DESIGN.md §5):
+the slot table shards over the plan's batch axes from construction onward
+(``slot_table_shardings`` / ``ServePlan.slot_sharding``), every jit'd table
+update donates the table argument so the caches stay device-resident across
+ticks (no per-tick host round-trip of the full table), and retire+admit is
+ONE batched masked recycle update instead of per-slot dispatches.
 """
 from __future__ import annotations
 
@@ -260,6 +267,16 @@ def _mask_like(mask, leaf):
     return mask.reshape((mask.shape[0],) + (1,) * (leaf.ndim - 1))
 
 
+def slot_table_shardings(plan: ServePlan, single: Any):
+    """NamedShardings for the ContinuousEngine slot table built from the
+    single-slot cache ``single`` (each table leaf is the matching single-slot
+    leaf with the slot axis prepended): the slot dim over the plan's batch
+    axes, inner dims replicated.  None without a mesh."""
+    if plan.mesh is None:
+        return None
+    return jax.tree.map(lambda a: plan.slot_sharding(a.ndim + 1), single)
+
+
 class ContinuousEngine:
     """Slot-table serving under a :class:`ServePlan`.
 
@@ -271,9 +288,15 @@ class ContinuousEngine:
       masked back to their prior state, shapes never change;
     * admit-on-EOS recycling (``admission="continuous"``): a finished
       slot is reset to the fresh single-slot cache and the next queued
-      request enters; ``poison_on_recycle`` overwrites retired slots with
-      NaN/sentinel values first, so any state the reset misses becomes
-      loudly visible (the harness' poisoned-cache canary).
+      request enters — retire + admit apply as ONE batched masked recycle
+      update, not per-slot dispatches; ``poison_on_recycle`` overwrites
+      retired slots with NaN/sentinel values first, so any state the reset
+      misses becomes loudly visible (the harness' poisoned-cache canary);
+    * mesh placement (``plan.mesh``): the slot table shards over the
+      plan's batch axes from construction onward and every table update
+      donates its argument, so the caches stay device-resident (and
+      device-placed) across ticks — the attention-softmax phase served
+      data-parallel, per the paper's hybrid layout.
     """
 
     def __init__(self, cfg: ModelConfig, params, plan: Optional[ServePlan] = None, *, bos: int = 1, eos: Optional[int] = None, poison_on_recycle: bool = False):
@@ -286,6 +309,32 @@ class ContinuousEngine:
         K, C = self.plan.max_slots, self.plan.prefill_chunk
         self._K, self._C = K, C
         self._single = self.policy.single_cache()
+        self._shardings = slot_table_shardings(self.plan, self._single)
+
+        def poison_scalar(dtype, use_sentinel):
+            # NaN is the loudest recycling canary, but it cannot be
+            # materialized under a NaN checker (jax_debug_nans would abort on
+            # the poison write itself); a huge finite sentinel is equally
+            # loud for the assertions.  ``use_sentinel`` is a static jit
+            # argument read from the flag on EVERY recycle call, so toggling
+            # the checker between runs picks the right poison (each value
+            # compiles its own executable).
+            if dtype == jnp.bool_:
+                return True
+            if jnp.issubdtype(dtype, jnp.integer):
+                return 2**30
+            return float(jnp.finfo(dtype).max) / 2 if use_sentinel else jnp.nan
+
+        def constrain(caches):
+            if self._shardings is None:
+                return caches
+            return jax.tree.map(jax.lax.with_sharding_constraint, caches, self._shardings)
+
+        def fresh_table(caches):
+            return jax.tree.map(
+                lambda full, a: jnp.broadcast_to(a[None].astype(full.dtype), full.shape),
+                caches, self._single,
+            )
 
         def take(caches, slot):
             return jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(a, slot, 0, keepdims=False), caches)
@@ -298,36 +347,66 @@ class ContinuousEngine:
 
         def prefill_step(params, caches, slot, tokens):
             logits, one = self.policy.prefill_one(params, tokens, take(caches, slot))
-            return logits, put(caches, one, slot)
+            return logits, constrain(put(caches, one, slot))
 
         def decode_tick(params, caches, tokens, active):
-            logits, new = jax.vmap(self.policy.decode_one, in_axes=(None, 0, 0))(params, tokens[:, None], caches)
+            # With poisoning on, non-decoding lanes COMPUTE on the fresh
+            # single-slot values, never on a retired slot's poisoned state —
+            # the tick's math stays NaN-free even under jax_debug_nans.  The
+            # merge always writes the untouched table value back for
+            # non-active lanes, so the poison itself survives in the table
+            # until the admission reset: the recycling canary keeps guarding
+            # the whole retire -> reset window (under jax_debug_nans the
+            # poison is a finite sentinel, so the merged output stays
+            # checker-clean).  Without the canary, free lanes hold a retired
+            # request's finite values and are masked out of outputs anyway,
+            # so the scrub's extra full-table passes are skipped on the
+            # production hot path.
+            if self.poison_on_recycle:
+                safe = jax.tree.map(
+                    lambda full, f: jnp.where(_mask_like(active, full), full, f),
+                    caches, fresh_table(caches),
+                )
+            else:
+                safe = caches
+            logits, new = jax.vmap(self.policy.decode_one, in_axes=(None, 0, 0))(params, tokens[:, None], safe)
             merged = jax.tree.map(
-                lambda old, upd: jnp.where(_mask_like(active, upd), upd.astype(old.dtype), old), caches, new
+                lambda old, upd: jnp.where(_mask_like(active, upd), upd.astype(old.dtype), old),
+                caches, new,
             )
-            return logits[:, 0], merged
+            return logits[:, 0], constrain(merged)
 
-        def reset(caches, slot):
-            return put(caches, self._single, slot)
+        def recycle(caches, poison_mask, reset_mask, use_sentinel):
+            # ONE batched masked update replaces the old per-slot
+            # reset/poison dispatches: retired slots take the poison
+            # sentinel, admitted slots the fresh single-slot values (reset
+            # wins where a slot retires and is readmitted in the same tick)
+            fresh = fresh_table(caches)
 
-        def poison(caches, slot):
-            bad = jax.tree.map(
-                lambda a: jnp.full(
-                    a.shape,
-                    True if a.dtype == jnp.bool_ else (2**30 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.nan),
-                    a.dtype,
-                ),
-                self._single,
+            def leaf(full, f):
+                bad = jnp.full(full.shape, poison_scalar(full.dtype, use_sentinel), full.dtype)
+                out = jnp.where(_mask_like(poison_mask, full), bad, full)
+                return jnp.where(_mask_like(reset_mask, full), f, out)
+
+            return constrain(jax.tree.map(leaf, caches, fresh))
+
+        def init_table(single):
+            return constrain(
+                jax.tree.map(lambda a: jnp.broadcast_to(a[None], (K,) + a.shape), single)
             )
-            return put(caches, bad, slot)
 
-        self._prefill_step = jax.jit(prefill_step)
-        self._decode_tick = jax.jit(decode_tick)
-        self._reset = jax.jit(reset)
-        self._poison = jax.jit(poison)
+        # the table argument is donated everywhere it is updated: callers
+        # rebind on every call, so the update aliases the input buffer and
+        # the full slot table never round-trips through the host
+        self._prefill_step = jax.jit(prefill_step, donate_argnums=(1,))
+        self._decode_tick = jax.jit(decode_tick, donate_argnums=(1,))
+        self._recycle = jax.jit(recycle, donate_argnums=(0,), static_argnums=(3,))
+        self._init_table = jax.jit(init_table)
 
     def _init_caches(self):
-        return jax.tree.map(lambda a: jnp.repeat(a[None], self._K, axis=0), self._single)
+        """Build the slot table device-resident (and mesh-placed when the
+        plan carries one) from the single-slot cache."""
+        return self._init_table(self._single)
 
     def run(self, prompts: Sequence, max_new, *, sampler=greedy, rng=None) -> List[np.ndarray]:
         """Serve ``prompts`` (ragged list of 1-D int32 token arrays — source
@@ -349,15 +428,18 @@ class ContinuousEngine:
         queue = deque(range(n))
         outputs: List[Optional[np.ndarray]] = [None] * n
         cur_tok = np.zeros(self._K, np.int64)
+        # retire/admit masks accumulate host-side and apply as ONE batched
+        # masked recycle update at the top of the next tick
+        poison_pending = np.zeros(self._K, bool)
+        admit_pending = np.zeros(self._K, bool)
 
-        def retire(s: _Slot, k: int, caches):
+        def retire(s: _Slot, k: int):
             outputs[s.req] = np.asarray(s.generated, np.int64)
             s.req, s.phase, s.generated = -1, "free", []
             if self.poison_on_recycle:
-                caches = self._poison(caches, jnp.int32(k))
-            return caches
+                poison_pending[k] = True
 
-        def begin_decode(s: _Slot, k: int, logits, rng, caches):
+        def begin_decode(s: _Slot, k: int, logits, rng):
             """Prompt fully consumed: seed the decode phase (LM: sample the
             first token from the prefill logits; encdec: feed BOS)."""
             if self.policy.prompt_primes_logits:
@@ -366,18 +448,27 @@ class ContinuousEngine:
                 s.generated.append(tok)
                 cur_tok[k] = tok
                 if (self.eos is not None and tok == self.eos) or len(s.generated) >= max_news[s.req]:
-                    return retire(s, k, caches), rng
+                    retire(s, k)
+                    return rng
             else:
                 cur_tok[k] = self.bos
             s.phase = "decode"
-            return caches, rng
+            return rng
 
         while queue or any(s.phase != "free" for s in slots):
             # ---- admission (continuous: whenever a slot is free) ----------
             for k, s in enumerate(slots):
                 if s.phase == "free" and queue:
                     s.req, s.pos, s.phase, s.generated = queue.popleft(), 0, "prefill", []
-                    caches = self._reset(caches, jnp.int32(k))
+                    admit_pending[k] = True
+            # ---- retire + admit: one batched masked update ----------------
+            if poison_pending.any() or admit_pending.any():
+                caches = self._recycle(
+                    caches, jnp.asarray(poison_pending), jnp.asarray(admit_pending),
+                    bool(getattr(jax.config, "jax_debug_nans", False)),
+                )
+                poison_pending[:] = False
+                admit_pending[:] = False
             # ---- chunked prefill: one chunk per prefilling slot per tick --
             for k, s in enumerate(slots):
                 if s.phase != "prefill":
@@ -388,7 +479,7 @@ class ContinuousEngine:
                 logits, caches = self._prefill_step(self.params, caches, jnp.int32(k), chunk)
                 s.pos += step
                 if s.pos == len(prompt):
-                    caches, rng = begin_decode(s, k, logits, rng, caches)
+                    rng = begin_decode(s, k, logits, rng)
             # ---- decode tick: one vmapped step over the whole table -------
             active = np.array([s.phase == "decode" for s in slots])
             if active.any():
@@ -407,5 +498,5 @@ class ContinuousEngine:
                     s.generated.append(tok)
                     cur_tok[k] = tok
                     if (self.eos is not None and tok == self.eos) or len(s.generated) >= max_news[s.req]:
-                        caches = retire(s, k, caches)
+                        retire(s, k)
         return outputs

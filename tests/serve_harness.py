@@ -18,6 +18,15 @@ block:
   NaN/sentinel before reuse), recycled slots still reproduce the alone
   outputs: admission's reset must rebuild EVERY leaf of a slot's state.
 
+* ``assert_nan_safe_recycling`` — poisoned recycling under
+  ``jax_debug_nans``: free lanes must never push retired-slot poison
+  through the model.
+
+``run_sharded_case`` additionally reruns a case in a forced-8-device
+subprocess under a slot-sharded plan (``mesh`` over all host devices) and
+returns sharded vs single-device tokens for the parity assertions in
+``test_serve.py`` (marker ``serve_multidevice``, own CI step).
+
 ``tests/test_serve.py`` drives the registry exhaustively (pytest marker
 ``serve``); invalid policy x family pairs are pinned as ValueError in the
 coverage test there.
@@ -26,6 +35,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
+import os
+import subprocess
+import sys
+import textwrap
 from dataclasses import dataclass, field
 from typing import Dict
 
@@ -35,6 +49,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.plan import ServePlan
+
+_TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+_SRC_DIR = os.path.join(_TESTS_DIR, "..", "src")
 
 
 @dataclass
@@ -198,11 +215,88 @@ def assert_slot_recycling(name: str) -> None:
         assert np.isfinite(np.asarray(outs[i], np.float64)).all()
 
 
+def assert_nan_safe_recycling(name: str) -> None:
+    """poison_on_recycle under ``jax_debug_nans``: serving must complete —
+    the engine computes non-decoding lanes on the fresh single-slot values,
+    so a retired slot's poison never flows through the model — and recycled
+    slots must still match serving each request alone (the engine swaps the
+    NaN canary for an equally loud finite sentinel under the NaN checker,
+    which would otherwise abort on the poison write itself)."""
+    case = REGISTRY[name]
+    prompts = prompts_for(case, seed=4) * 2  # > max_slots -> forced recycling
+    prev = bool(getattr(jax.config, "jax_debug_nans", False))
+    jax.config.update("jax_debug_nans", True)
+    try:
+        eng = make_engine(case, engine_kwargs={"poison_on_recycle": True})
+        outs = eng.run(prompts, case.max_new)
+    finally:
+        jax.config.update("jax_debug_nans", prev)
+    for i, p in enumerate(prompts):
+        alone = make_engine(case).run([p], case.max_new)[0]
+        assert outs[i].tolist() == alone.tolist(), (
+            f"{name} req{i}: output under jax_debug_nans {outs[i].tolist()} != alone {alone.tolist()}"
+        )
+
+
 INVARIANTS = {
     "decode_parity": assert_decode_parity,
     "batch_independence": assert_batch_independence,
     "slot_recycling": assert_slot_recycling,
+    "nan_safe_recycling": assert_nan_safe_recycling,
 }
+
+
+# ---------------------------------------------------------------------------
+# sharded serving: forced multi-device subprocess battery
+# ---------------------------------------------------------------------------
+
+
+def run_sharded_case(name: str, *, devices: int = 8) -> dict:
+    """Serve ``name`` in a subprocess with a forced ``devices``-device CPU
+    host (the main pytest process keeps its single-device view): once under
+    a slot-sharded plan (mesh over all host devices, strategy='data') and
+    once with no mesh, plus poisoned-slot recycling under sharding.  Returns
+    the subprocess' JSON record; callers assert sharded == single-device."""
+    code = textwrap.dedent(
+        f"""
+        import json
+        import jax
+        import serve_harness as sh
+
+        name = {name!r}
+        case = sh.REGISTRY[name]
+        K = jax.device_count()
+        mesh = jax.make_mesh((K,), ("data",))
+        prompts = sh.prompts_for(case, seed=5)
+        sharded = sh.make_engine(case, strategy="data", mesh=mesh, max_slots=K)
+        plain = sh.make_engine(case, max_slots=K)
+        out_s = [o.tolist() for o in sharded.run(prompts, case.max_new)]
+        out_p = [o.tolist() for o in plain.run(prompts, case.max_new)]
+        # poisoned-slot recycling under sharding: more requests than slots
+        many = prompts * (K // len(prompts) + 2)
+        poi = sh.make_engine(
+            case, strategy="data", mesh=mesh, max_slots=K,
+            engine_kwargs={{"poison_on_recycle": True}},
+        ).run(many, case.max_new)
+        ref = sh.make_engine(case, max_slots=K).run(many, case.max_new)
+        plan = sh.make_plan(case, strategy="data", mesh=mesh, max_slots=K)
+        print(json.dumps({{
+            "device_count": K,
+            "data_shard_size": plan.data_shard_size(),
+            "sharded": out_s, "plain": out_p,
+            "poisoned_sharded": [o.tolist() for o in poi],
+            "poisoned_plain": [o.tolist() for o in ref],
+        }}))
+        """
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.pathsep.join([_SRC_DIR, _TESTS_DIR])
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=900
+    )
+    assert out.returncode == 0, f"sharded serve subprocess for {name} failed:\n{out.stderr[-4000:]}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
 
 
 # ---------------------------------------------------------------------------

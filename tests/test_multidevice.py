@@ -394,13 +394,24 @@ def test_batch_shard_backbone_matches_plain_loss_and_grads():
             divis_err = "missing"
         except ValueError as e:
             divis_err = "divisible" if "divisible" in str(e) else str(e)
-        print(json.dumps({"lerr": abs(float(l1) - float(l2)), "gerr": gerr, "divis_err": divis_err}))
+        # ... and the plan's validate_batch must reject the SAME batch up
+        # front (the other side of the seam pinned in test_plan.py)
+        from repro.core.plan import ExecutionPlan
+        from repro.core.strategy import Strategy
+        try:
+            ExecutionPlan(strategy=Strategy.DATA, mesh=mesh).validate_batch(6)
+            plan_err = "missing"
+        except ValueError as e:
+            plan_err = "shards" if "shards" in str(e) else str(e)
+        print(json.dumps({"lerr": abs(float(l1) - float(l2)), "gerr": gerr,
+                          "divis_err": divis_err, "plan_err": plan_err}))
         """
     )
     res = _run(code)
     assert res["lerr"] < 1e-4, res
     assert res["gerr"] < 1e-3, res
     assert res["divis_err"] == "divisible", res
+    assert res["plan_err"] == "shards", res
 
 
 def test_cache_shardings_resolve():

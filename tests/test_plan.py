@@ -57,6 +57,62 @@ def test_plan_microbatch_placement():
         ExecutionPlan(strategy=st.Strategy.HYBRID, mesh=mesh, micro_batches=3).validate_batch(32)
 
 
+class _ShapeMesh:
+    """Shape-only mesh stand-in: batch_shard_size/validate_batch read only
+    axis_names and devices.shape, and a real 2x4 mesh needs 8 devices
+    (multi-device execution tests live in test_multidevice.py)."""
+
+    axis_names = ("data", "model")
+    devices = np.zeros((2, 4))
+
+
+def test_validate_batch_rejects_unshardable_batch():
+    """The plan-vs-backbone seam: ``batch_shard_backbone`` raises at trace
+    time on global_batch % data_shards != 0, so ``validate_batch`` must
+    reject exactly that case up front instead of letting the plan validate
+    and then crash mid-train (the runtime side of this pin — the backbone's
+    own raise — lives in test_multidevice.py)."""
+    plan = ExecutionPlan(strategy=st.Strategy.HYBRID, mesh=_ShapeMesh())
+    assert plan.batch_shard_size() == 2  # (pod, data) axes -> data=2
+    with pytest.raises(ValueError, match="batch shards"):
+        plan.validate_batch(9)
+    plan.validate_batch(8)
+    # DATA shards the batch over ALL axes -> 2*4
+    data = ExecutionPlan(strategy=st.Strategy.DATA, mesh=_ShapeMesh())
+    assert data.batch_shard_size() == 8
+    with pytest.raises(ValueError, match="batch shards"):
+        data.validate_batch(12)
+    data.validate_batch(16)
+    # micro slices of an evenly-shardable batch must still divide
+    with pytest.raises(ValueError, match="micro_batches"):
+        ExecutionPlan(strategy=st.Strategy.HYBRID, mesh=_ShapeMesh(), micro_batches=3).validate_batch(8)
+
+
+def test_serve_plan_slot_sharding():
+    """ServePlan mirrors the training-side seam: a mesh it cannot use is a
+    construction error, and the slot-table placement derives from the plan."""
+    with pytest.raises(ValueError, match="unsharded"):
+        ServePlan(mesh=_ShapeMesh())  # strategy='single' would ignore the mesh
+    with pytest.raises(ValueError, match="max_slots"):
+        ServePlan(strategy="hybrid", mesh=_ShapeMesh(), max_slots=3)  # 3 % 2
+
+    class ModelOnlyMesh:  # batch_spec yields an EMPTY axis group: P((),)
+        axis_names = ("model",)
+        devices = np.zeros(8)
+
+    with pytest.raises(ValueError, match="no.*batch axes"):
+        ServePlan(strategy="hybrid", mesh=ModelOnlyMesh(), max_slots=8)
+    plan = ServePlan(strategy="hybrid", mesh=_ShapeMesh(), max_slots=4)
+    assert plan.data_shard_size() == 2 and plan.slot_spec() == st.batch_spec(st.Strategy.HYBRID, _ShapeMesh())
+    assert ServePlan(strategy="data", mesh=_ShapeMesh(), max_slots=8).data_shard_size() == 8
+    # meshless plans stay unconstrained
+    assert ServePlan().data_shard_size() == 1 and ServePlan().slot_sharding(3) is None
+    # slot_sharding places the slot dim only: one real (1-device) mesh leaf
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = ServePlan(strategy="data", mesh=mesh, max_slots=2).slot_sharding(3)
+    assert sh.spec == jax.sharding.PartitionSpec(("data",), None, None)
+
+
 def test_plan_stage_kernel_validation():
     """stage_kernel is a closed vocabulary; the default is the jnp math."""
     assert ExecutionPlan(strategy=st.Strategy.HYBRID).stage_kernel == "jnp"
