@@ -40,3 +40,8 @@ def run():
     if not recs:
         rows.append(("roofline_no_dryrun_artifacts", 0.0, 0, "run repro.launch.dryrun first"))
     return rows
+
+
+if __name__ == "__main__":
+    for _row in run():
+        print(",".join(str(c) for c in _row))

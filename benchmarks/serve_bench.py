@@ -8,12 +8,21 @@ skewed workloads (a few long requests among many short ones) keep the
 slot table full.  Both modes run through the same jit'd extend step under
 a :class:`repro.core.plan.ServePlan`; only ``admission`` differs.
 
-A ``--mesh`` sweep (also part of the default ``run()``) reruns the skewed
-continuous workload in subprocesses with a FORCED host device count (1 vs
-8) under a slot-sharded plan — the decode tick's vmapped batch axis spread
-over the data axes per DESIGN.md §5 — and appends tok/s records to
-``experiments/bench/serve_bench.json`` so the sharding trajectory survives
-across bench runs.
+A ``--mesh`` sweep (also part of the default ``run()``) times the jit'd
+decode tick itself in subprocesses with a FORCED host device count, over
+(scale: smoke/bench) x (layout: single / slot-sharded data / model-axis /
+hybrid per DESIGN.md §5-6) x slot count, and records the measured ms/tick
+next to the decode-tick roofline's prediction
+(:func:`repro.launch.roofline.decode_tick_roofline`).  Each (scale, slots)
+point also records the measured-fastest and predicted-fastest layouts —
+test_plan pins that they agree on the committed trajectory.  The roofline
+is core-aware: on a host with cores >= devices it predicts the model-axis
+layout beating single-device at bench scale (weights split 8 ways stream
+8x faster than one copy through one program); on this one-core container
+every forced host device time-slices the same core, so it predicts — and
+the sweep measures — single-device winning on overhead alone.  Records
+append to ``experiments/bench/serve_bench.json`` so the trajectory
+survives across bench runs.
 
 Rows: (name, us_per_generated_token, tok_per_s, notes) per
 (skew, admission) at smoke scale on this host.
@@ -46,66 +55,117 @@ def _requests(rng, vocab: int, skew: str, n: int):
     return reqs
 
 
+# one child per (scale, layout): builds the config at that scale, the mesh
+# for that layout, and times the jit'd decode tick at each slot count (the
+# donated slot table feeds back through the loop, as engine.run does)
 _MESH_CHILD = """
-import dataclasses, json, time
-import jax, numpy as np
+import dataclasses, json, sys, time
+import jax, jax.numpy as jnp
 from repro.configs import get_config
+from repro.core import strategy as stg
 from repro.core.plan import ServePlan
+from repro.launch.roofline import decode_tick_roofline, host_cores
 from repro.models import transformer as tfm
 from repro.serve import ContinuousEngine
 
+scale, layout, slots_csv, reps = sys.argv[1], sys.argv[2], sys.argv[3], int(sys.argv[4])
 cfg = dataclasses.replace(get_config("qwen3-1.7b", smoke=True), dtype="float32")
+if scale == "bench":  # big enough that weight streaming dominates dispatch
+    cfg = dataclasses.replace(cfg, d_model=1024, num_heads=16, num_kv_heads=8,
+                              head_dim=64, d_ff=4096, vocab_size=16384, emb_size=1024)
 params, _ = tfm.init_lm(jax.random.key(0), cfg)
-rng = np.random.default_rng(0)
-reqs = []
-for i in range(16):  # skewed: short quick requests + long stragglers
-    plen, gen = (8, 6) if i % 4 else (24, 24)
-    reqs.append((rng.integers(3, cfg.vocab_size, size=plen).astype(np.int32), gen))
-K = jax.device_count()
-mesh = jax.make_mesh((K,), ("data",)) if K > 1 else None
-plan = ServePlan.for_config(
-    cfg, max_slots=8, max_len=64, prefill_chunk=8,
-    strategy="data" if mesh is not None else "single", mesh=mesh,
-)
-eng = ContinuousEngine(cfg, params, plan)
-prompts, budgets = [p for p, _ in reqs], [g for _, g in reqs]
-eng.run(prompts, budgets)  # compile
-t0 = time.perf_counter()
-outs = eng.run(prompts, budgets)
-dt = time.perf_counter() - t0
-tok = sum(len(o) for o in outs)
-print(json.dumps({"devices": K, "sharded": mesh is not None,
-                  "tok_per_s": round(tok / dt, 1), "us_per_tok": round(dt / tok * 1e6, 1)}))
+devices = jax.device_count()
+policy = "window" if cfg.sliding_window else "full_kv"
+if layout == "single":
+    mesh, strat = None, "single"
+elif layout == "data":
+    mesh, strat = jax.make_mesh((devices,), ("data",)), "data"
+elif layout == "model":
+    msz = stg.fit_model_axis(cfg, policy, devices)
+    mesh, strat = jax.make_mesh((msz,), ("model",)), "model"
+else:
+    msz = stg.fit_model_axis(cfg, policy, max(1, devices // 2))
+    mesh, strat = jax.make_mesh((2, msz), ("data", "model")), "hybrid"
+for K in [int(s) for s in slots_csv.split(",")]:
+    plan = ServePlan.for_config(cfg, max_slots=K, max_len=64, prefill_chunk=8,
+                                strategy=strat, mesh=mesh)
+    eng = ContinuousEngine(cfg, params, plan)
+    caches = eng._init_caches()
+    toks = jnp.ones((K,), jnp.int32)
+    active = jnp.ones((K,), bool)
+    toks, caches = eng._decode_tick(eng.params, caches, toks, active, None)
+    jax.block_until_ready(toks)  # compile + first tick
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        toks, caches = eng._decode_tick(eng.params, caches, jnp.asarray(toks, jnp.int32), active, None)
+    jax.block_until_ready(toks)
+    tick = (time.perf_counter() - t0) / reps
+    pred = decode_tick_roofline(cfg, layout=layout, devices=devices, slots=K,
+                                cache_policy=plan.cache_policy, max_len=plan.max_len,
+                                window=plan.window)
+    print(json.dumps({"scale": scale, "layout": layout, "devices": devices,
+                      "host_cores": host_cores(), "slots": K,
+                      "ms_per_tick": round(tick * 1e3, 2), "tok_per_s": round(K / tick, 1),
+                      "pred_ms_per_tick": round(pred.tick_s * 1e3, 2),
+                      "pred_tok_per_s": round(pred.tok_s, 1),
+                      "pred_bottleneck": pred.bottleneck}), flush=True)
 """
 
 
-def mesh_sweep(device_counts=(1, 8)):
-    """Skewed continuous serving at forced host device counts: tok/s with
-    the slot table sharded over all host devices vs single-device.  Returns
-    (rows, records); records are appended to the bench trajectory."""
+def mesh_sweep(smoke: bool = False):
+    """Decode-tick latency across serving layouts at forced host device
+    counts, measured vs roofline-predicted.  Returns (rows, records); the
+    records — per-point timings plus a per-(scale, slots) winner record
+    asserting predicted == measured — append to the bench trajectory.
+    ``smoke`` runs a 2-layout single-point subset for CI."""
+    scales = ("smoke",) if smoke else ("smoke", "bench")
+    layouts = ("single", "model") if smoke else ("single", "data", "model", "hybrid")
+    slots_csv = "8" if smoke else "8,32"
     rows, records = [], []
-    for n in device_counts:
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
-        env["PYTHONPATH"] = os.pathsep.join(
-            [os.path.join(os.path.dirname(__file__), "..", "src")]
-            + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
-        )
-        out = subprocess.run(
-            [sys.executable, "-c", _MESH_CHILD], capture_output=True, text=True, env=env, timeout=900
-        )
-        if out.returncode != 0:
-            err = (out.stderr.strip().splitlines() or [""])[-1][:80]
-            rows.append((f"serve_mesh_{n}dev", "ERROR", 0, err))
-            continue
-        rec = json.loads(out.stdout.strip().splitlines()[-1])
-        records.append(rec)
-        rows.append((
-            f"serve_mesh_{n}dev",
-            rec["us_per_tok"],
-            rec["tok_per_s"],
-            f"tok/s, skewed, {'sharded slots' if rec['sharded'] else 'no mesh'}",
-        ))
+    for scale in scales:
+        reps = 2 if (smoke or scale == "bench") else 10
+        for layout in layouts:
+            n = 1 if layout == "single" else 8
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+            env["PYTHONPATH"] = os.pathsep.join(
+                [os.path.join(os.path.dirname(__file__), "..", "src")]
+                + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+            )
+            out = subprocess.run(
+                [sys.executable, "-c", _MESH_CHILD, scale, layout, slots_csv, str(reps)],
+                capture_output=True, text=True, env=env, timeout=900,
+            )
+            if out.returncode != 0:
+                err = (out.stderr.strip().splitlines() or [""])[-1][:80]
+                rows.append((f"serve_tick_{scale}_{layout}", "ERROR", 0, err))
+                continue
+            for line in out.stdout.strip().splitlines():
+                if not line.startswith("{"):
+                    continue
+                rec = json.loads(line)
+                records.append(rec)
+                rows.append((
+                    f"serve_tick_{scale}_{layout}_{rec['slots']}slots",
+                    rec["ms_per_tick"],
+                    rec["tok_per_s"],
+                    f"ms/tick on {rec['devices']} dev, roofline {rec['pred_ms_per_tick']}ms [{rec['pred_bottleneck']}]",
+                ))
+    # winner per swept point: does the roofline's predicted-fastest layout
+    # match the measured-fastest one?  (test_plan pins this on the
+    # committed trajectory)
+    for scale in scales:
+        for k in (int(s) for s in slots_csv.split(",")):
+            pts = [r for r in records if r["scale"] == scale and r["slots"] == k]
+            if len(pts) < 2:
+                continue
+            measured = max(pts, key=lambda r: r["tok_per_s"])["layout"]
+            predicted = max(pts, key=lambda r: r["pred_tok_per_s"])["layout"]
+            records.append({"scale": scale, "slots": k, "kind": "winner",
+                            "measured": measured, "predicted": predicted,
+                            "match": measured == predicted})
+            rows.append((f"serve_winner_{scale}_{k}slots", "-", "-",
+                         f"measured={measured} predicted={predicted} match={measured == predicted}"))
     if records:
         try:
             os.makedirs(os.path.dirname(TRAJECTORY), exist_ok=True)
@@ -173,7 +233,8 @@ if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mesh", action="store_true", help="run only the 1-vs-8-device sharded-slot sweep")
+    ap.add_argument("--mesh", action="store_true", help="run only the layout x slots decode-tick sweep")
+    ap.add_argument("--smoke", action="store_true", help="CI subset: smoke scale, 2 layouts, 1 slot count")
     args = ap.parse_args()
-    for row in (mesh_sweep()[0] if args.mesh else run()):
+    for row in (mesh_sweep(smoke=args.smoke)[0] if args.mesh else run()):
         print(",".join(str(c) for c in row))

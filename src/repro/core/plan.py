@@ -336,8 +336,9 @@ class ServePlan:
         if self.mesh is not None:
             # an explicit mesh must never be quietly ignored: the slot table
             # (the vmapped batch axis of the decode tick) shards over the
-            # strategy's batch axes, so the plan needs a strategy that HAS
-            # batch axes and a slot count those axes divide
+            # strategy's batch axes and/or the parameters + cached state
+            # shard over the 'model' axis, so the plan needs a strategy that
+            # uses at least one of the mesh's axes
             if self.strategy == stg.Strategy.SINGLE:
                 raise ValueError(
                     "ServePlan carries a mesh but strategy='single' would leave the "
@@ -347,13 +348,18 @@ class ServePlan:
             spec = self.slot_spec()
             axes = spec[0] if len(spec) else ()
             axes = axes if isinstance(axes, tuple) else (axes,)
-            if not axes:
+            if not axes and not (
+                self.strategy == stg.Strategy.MODEL and "model" in self.mesh.axis_names
+            ):
                 # e.g. a ('model',)-only mesh under HYBRID: batch_spec is
-                # P(()) — an empty axis GROUP, not an empty spec
+                # P(()) — an empty axis GROUP, not an empty spec.  Pure MODEL
+                # is the exception: the slot table replicates and the mesh is
+                # spent entirely on weights/caches/head (model-axis serving).
                 raise ValueError(
                     f"ServePlan mesh axes {tuple(self.mesh.axis_names)} provide no "
                     f"batch axes for strategy={self.strategy.value}; the slot table "
-                    "cannot shard — rename a mesh axis to 'data'/'pod' or drop the mesh"
+                    "cannot shard — rename a mesh axis to 'data'/'pod', use "
+                    "strategy='model', or drop the mesh"
                 )
             dsz = self.data_shard_size()
             if self.max_slots % dsz:
@@ -418,6 +424,33 @@ class ServePlan:
                 f"cache_policy={self.cache_policy!r} on the recurrent family {cfg.name}: "
                 "there is no KV cache to manage — use cache_policy='recurrent'"
             )
+        msz = self.model_shard_size()
+        if msz > 1:
+            # model-axis serving shards the output head over the vocab and
+            # the cached attention state over KV heads (encdec: the memory's
+            # hidden dim) — mirror the max_slots % data_shard_size seam with
+            # hard divisibility errors instead of silently replicating.
+            # HYBRID keeps the paper's replicated data-parallel head, so the
+            # vocab seam only binds the strategies that vocab-shard it.
+            vocab_sharded = self.strategy in (stg.Strategy.MODEL, stg.Strategy.HYBRID_OPT)
+            if vocab_sharded and cfg.vocab_size % msz:
+                raise ValueError(
+                    f"model axis of size {msz} does not divide vocab_size="
+                    f"{cfg.vocab_size}: the vocab-sharded output head cannot "
+                    "split — shrink the model axis or pick a divisible vocab"
+                )
+            if self.cache_policy in ("full_kv", "window") and cfg.num_kv_heads % msz:
+                raise ValueError(
+                    f"model axis of size {msz} does not divide num_kv_heads="
+                    f"{cfg.num_kv_heads}: KV-head-sharded decode attention "
+                    "cannot split the cache — shrink the model axis"
+                )
+            if self.cache_policy == "encdec_memory" and cfg.d_model % msz:
+                raise ValueError(
+                    f"model axis of size {msz} does not divide d_model="
+                    f"{cfg.d_model}: the encdec memory / Luong context cannot "
+                    "shard — shrink the model axis"
+                )
 
     def validate_batch(self, num_requests: int) -> None:
         """Static admission runs one batch start-to-finish: it must fit the
@@ -446,6 +479,13 @@ class ServePlan:
         :meth:`ExecutionPlan.batch_shard_size`)."""
         return stg.batch_shard_size(self.strategy, self.mesh)
 
+    def model_shard_size(self) -> int:
+        """Size of the tensor-parallel ``model`` axis as this plan uses it
+        (1 for single/data or a model-axis-less mesh) — the serve twin of
+        ``data_shard_size``, behind KV-head cache sharding and the
+        vocab-sharded head."""
+        return stg.model_shard_size(self.strategy, self.mesh)
+
     def slot_sharding(self, ndim: int = 1) -> Optional[NamedSharding]:
         """NamedSharding for one slot-table leaf of rank ``ndim``: the slot
         dim over the plan's batch axes, inner dims replicated (slot-dim-only
@@ -457,6 +497,31 @@ class ServePlan:
             (self.max_slots,) + (1,) * (ndim - 1), self.mesh, self.strategy
         )
         return NamedSharding(self.mesh, spec)
+
+    def slot_entry_sharding(self, shape: tuple, model_dims: tuple = ()) -> Optional[NamedSharding]:
+        """Shape-aware slot-table leaf sharding: slot dim over the batch
+        axes AND (under a model-axis strategy) the first divisible dim from
+        ``model_dims`` over ``model`` — how the engine keeps KV heads / the
+        encdec memory resident with their model-sharded parameters."""
+        if self.mesh is None:
+            return None
+        spec = stg.slot_entry_spec(shape, self.mesh, self.strategy, model_dims=model_dims)
+        return NamedSharding(self.mesh, spec)
+
+    def logits_sharding(self) -> Optional[NamedSharding]:
+        """Sharding for per-token logits [..., vocab] inside the decode tick:
+        vocab over ``model`` when the head is vocab-sharded, leading dims
+        unconstrained.  The tick's fused sampler argmaxes over this sharded
+        dim so the full [slots, vocab] array never gathers onto one device;
+        None when the head does not vocab-shard (meshless, no model axis,
+        or HYBRID's replicated data-parallel head)."""
+        if self.mesh is None or self.model_shard_size() <= 1:
+            return None
+        if self.strategy not in (stg.Strategy.MODEL, stg.Strategy.HYBRID_OPT):
+            return None
+        spec = self.slot_spec()
+        bax = spec[0] if len(spec) else None
+        return NamedSharding(self.mesh, P(bax, "model"))
 
     def phase_boundary(self) -> Callable:
         return stg.phase_boundary_fn(self.strategy, self.mesh)

@@ -101,6 +101,36 @@ def batch_shard_size(strategy: Strategy, mesh: Optional[Mesh]) -> int:
     return _prod(mesh, axes)
 
 
+def model_shard_size(strategy: Strategy, mesh: Optional[Mesh]) -> int:
+    """Size of the tensor-parallel ``model`` axis as the strategy uses it:
+    1 unless the strategy model-shards parameters AND the mesh carries a
+    ``model`` axis.  The serve-side twin of ``batch_shard_size`` — behind
+    ``ServePlan.model_shard_size`` and the engine's cache/head sharding."""
+    if mesh is None or strategy in (Strategy.SINGLE, Strategy.DATA):
+        return 1
+    if "model" not in mesh.axis_names:
+        return 1
+    return _axis_size(mesh, "model")
+
+
+def fit_model_axis(cfg, cache_policy: str, limit: int) -> int:
+    """Largest model-axis size <= ``limit`` a serving mesh can use for this
+    (architecture, cache_policy): it must divide the vocab (vocab-sharded
+    head) and the policy's head-sharded state dim — KV heads for the
+    attention policies, d_model for the encdec memory/context.  Used by the
+    serve launcher's ``host_model``/``host_hybrid`` presets and the bench
+    sweep to lay out the mesh before ``ServePlan.validate_for`` re-checks."""
+    dims = [cfg.vocab_size]
+    if cache_policy in ("full_kv", "window"):
+        dims.append(cfg.num_kv_heads)
+    elif cache_policy == "encdec_memory":
+        dims.append(cfg.d_model)
+    m = max(1, limit)
+    while m > 1 and any(d % m for d in dims):
+        m -= 1
+    return m
+
+
 # ---------------------------------------------------------------------------
 # leaf resolution
 # ---------------------------------------------------------------------------
@@ -256,6 +286,43 @@ def residual_pin(strategy: Strategy, mesh: Optional[Mesh]):
     return pin
 
 
+def decode_pin(strategy: Strategy, mesh: Optional[Mesh]):
+    """Activation constraints inside the serve engine's vmapped decode tick
+    (the model-axis twin of ``residual_pin``): per-slot q/k/v keep their KV
+    heads on ``model`` and the rank-3 residual / projected context vector is
+    pinned replicated — making "only the per-token context vector crosses
+    the model axis" explicit, so GSPMD completes the output-projection psum
+    at the block boundary instead of deferring it into the next layer's
+    (head-sharded) compute.
+
+    Only active for the pure-MODEL serving layout: the pin runs inside
+    ``vmap`` over slots, where the mapped slot dim takes an unsharded spec —
+    correct when slots replicate (MODEL), wrong when they shard over data
+    axes (HYBRID keeps GSPMD propagation instead)."""
+    if model_shard_size(strategy, mesh) <= 1 or batch_shard_size(strategy, mesh) > 1:
+        return None
+    msz = _axis_size(mesh, "model")
+
+    def pin(x, last=None):
+        if last is not None:  # e.g. MLP hidden [B, S, ff] with ff on `model`
+            last_ax = "model" if x.shape[-1] % msz == 0 else None
+            spec = P(*(None,) * (x.ndim - 1), last_ax)
+        elif x.ndim == 3:
+            spec = P(None, None, None)
+        elif x.ndim == 4:
+            kv_ax = "model" if x.shape[2] % msz == 0 else None
+            spec = P(None, None, kv_ax, None)
+        elif x.ndim == 5:
+            kv_ax = "model" if x.shape[2] % msz == 0 else None
+            g_ax = "model" if not kv_ax and x.shape[3] % msz == 0 else None
+            spec = P(None, None, kv_ax, g_ax, None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return pin
+
+
 # ---------------------------------------------------------------------------
 # serve-side cache sharding
 # ---------------------------------------------------------------------------
@@ -283,20 +350,37 @@ def _prod(mesh: Mesh, axes: tuple) -> int:
     return n
 
 
-def slot_entry_spec(shape: tuple, mesh: Mesh, strategy: Strategy = Strategy.DATA) -> P:
+def slot_entry_spec(
+    shape: tuple, mesh: Mesh, strategy: Strategy = Strategy.DATA, *, model_dims: tuple = ()
+) -> P:
     """Slot-table leaf [K, ...] — a single-slot cache leaf with the slot axis
     prepended (recurrent states, encdec memory, per-slot KV blocks and the
     per-slot length counter alike): the slot dim shards over the strategy's
-    batch axes when divisible, every inner dim stays replicated.  Per-slot
-    batch is 1 and per-slot state is small, so splitting inner dims would buy
-    nothing but collectives inside the vmapped decode tick (DESIGN.md §5)."""
+    batch axes when divisible.
+
+    ``model_dims`` names candidate inner dims (indices into ``shape``, in
+    priority order) for the tensor-parallel ``model`` axis; the first one the
+    axis size divides wins, mirroring the param resolver's divisibility
+    gating.  Under DATA this is ignored — per-slot batch is 1 and splitting
+    inner dims there would buy nothing but collectives inside the vmapped
+    decode tick.  Under MODEL/HYBRID the engine passes the head dim of each
+    cache leaf (KV heads of an attention block, the hidden dim of the encdec
+    memory / recurrent state) so cached state lives where the matching
+    model-sharded parameters already are (DESIGN.md §5-6)."""
     spec = batch_spec(strategy, mesh)
     bax = spec[0] if len(spec) else None
     if bax is not None:
         names = bax if isinstance(bax, tuple) else (bax,)
         if shape[0] % _prod(mesh, names):
             bax = None
-    return P(bax, *([None] * (len(shape) - 1)))
+    inner = [None] * (len(shape) - 1)
+    msz = model_shard_size(strategy, mesh)
+    if msz > 1:
+        for d in model_dims:
+            if 0 < d < len(shape) and shape[d] % msz == 0 and shape[d] >= msz:
+                inner[d - 1] = "model"
+                break
+    return P(bax, *inner)
 
 
 def state_entry_spec(shape: tuple, mesh: Mesh) -> P:

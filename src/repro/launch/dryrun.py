@@ -260,6 +260,33 @@ def reanalyze(out_dir: str):
               f"C {roof.compute_s*1e3:.1f}ms M {roof.memory_s*1e3:.1f}ms X {roof.collective_s*1e3:.1f}ms")
 
 
+def serve_tick_table(arch: str, *, devices: int = 8, cores: int | None = None, slots=(8, 32, 64), cache_policy: str = "full_kv", smoke: bool = False):
+    """Print the decode-tick roofline per layout x slot count — no compile.
+
+    Answers "which serving layout should win on this host?" before paying
+    for a mesh sweep; benchmarks/serve_bench.py --mesh measures the same
+    grid and test_plan pins predicted winner == measured winner.  Pass
+    ``cores`` to ask about a different host (cores >= devices is where the
+    model-axis layout overtakes single-device at real model sizes).
+    """
+    from repro.configs.base import reduced
+    from repro.launch.roofline import SERVE_LAYOUTS, decode_tick_roofline, host_cores, predict_serve_winner
+
+    cfg = get_config(arch)
+    if smoke:
+        cfg = reduced(cfg)
+    cores = cores or host_cores()
+    print(f"[serve-tick] {cfg.name} devices={devices} cores={cores} cache_policy={cache_policy}")
+    print(f"{'slots':>6} {'layout':>8} {'tick_ms':>9} {'tok/s':>8}  bottleneck")
+    for k in slots:
+        win = predict_serve_winner(cfg, devices=devices, slots=k, cores=cores, cache_policy=cache_policy)
+        for lay in SERVE_LAYOUTS:
+            r = decode_tick_roofline(cfg, layout=lay, devices=devices, slots=k, cores=cores, cache_policy=cache_policy)
+            mark = " <== predicted winner" if lay == win else ""
+            print(f"{k:>6} {lay:>8} {r.tick_s * 1e3:>9.1f} {r.tok_s:>8.1f}  {r.bottleneck}{mark}")
+    return None
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default=None)
@@ -276,7 +303,20 @@ def main():
     ap.add_argument("--variant", default=None, choices=sorted(VARIANTS))
     ap.add_argument("--reanalyze", action="store_true", help="re-derive rooflines from saved .hlo.gz")
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--serve-tick", action="store_true",
+                    help="print the decode-tick serving roofline (no compile) and exit")
+    ap.add_argument("--devices", type=int, default=8, help="device count for --serve-tick")
+    ap.add_argument("--cores", type=int, default=None, help="host cores for --serve-tick (default: detected)")
+    ap.add_argument("--cache-policy", default="full_kv",
+                    choices=("full_kv", "window", "recurrent", "encdec_memory"))
+    ap.add_argument("--smoke", action="store_true", help="use the reduced smoke config for --serve-tick")
     args = ap.parse_args()
+
+    if args.serve_tick:
+        assert args.arch, "--arch required with --serve-tick"
+        serve_tick_table(args.arch, devices=args.devices, cores=args.cores,
+                         cache_policy=args.cache_policy, smoke=args.smoke)
+        return
 
     if args.reanalyze:
         reanalyze(args.out)

@@ -68,6 +68,187 @@ def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
     return 2.0 * n_active * shape.global_batch
 
 
+# ---------------------------------------------------------------------------
+# decode-tick latency roofline (serving side, host-calibrated)
+# ---------------------------------------------------------------------------
+
+# Serving layouts the bench sweeps (how a ServePlan spends the mesh):
+#   single  1 device, no mesh
+#   data    slot-sharded: weights replicated per device (strategy='data')
+#   model   weights/caches/head split over `model` (strategy='model')
+#   hybrid  (2, devices/2) slot x model split (strategy='hybrid')
+SERVE_LAYOUTS = ("single", "data", "model", "hybrid")
+
+# Host-CPU constants, calibrated against measured ContinuousEngine decode
+# ticks on the forced-8-device host (benchmarks/serve_bench.py --mesh).
+# Decode at batch<=slots is weight-streaming-bound: one XLA CPU device
+# program sustains ~0.75 GB/s through the fused GEMV loops.  Forced host
+# devices are threads, not chips — only ``min(devices, cores)`` programs
+# stream concurrently, so aggregate bandwidth scales with CORES, while the
+# bytes streamed scale with weight REPLICAS (data: one full copy per
+# device; model: the shards sum to one copy).  That ratio is the whole
+# slot-axis vs model-axis story: on a multi-core host splitting the
+# weights multiplies effective bandwidth and the model layout wins at
+# every slot count; on a one-core host (this container) every layout
+# shares one stream, so the single-device engine wins and every mesh only
+# adds overhead.  Multi-device launches pay a fixed dispatch+sync cost per
+# partitioned executable, and model sharding adds a small per-slot
+# collective chain (per-token context vectors + argmax-over-vocab-shards).
+HOST_DEV_STREAM_BW = 0.75e9  # bytes/s of weight streaming per core
+HOST_DEV_FLOPS = 12e9  # decode-GEMV flop/s per core
+HOST_DISPATCH_S = 0.030  # fixed multi-device dispatch+sync per tick
+HOST_COLL_PER_SLOT_S = 1.5e-3  # model-axis collectives per slot per tick
+
+
+def host_cores() -> int:
+    """CPU cores actually usable by this process (affinity-aware)."""
+    import os
+
+    try:
+        return max(1, len(os.sched_getaffinity(0)))
+    except (AttributeError, OSError):  # non-Linux
+        return max(1, os.cpu_count() or 1)
+
+
+def streamed_param_bytes(cfg: ModelConfig, dtype_bytes: int = 4) -> float:
+    """Bytes of parameters a decode tick actually streams: everything except
+    pure-lookup embedding tables (a tied LM table streams — it IS the head;
+    the seq2seq f_c head streams, its two source/target tables do not)."""
+    n = cfg.param_count()
+    if cfg.family == "seq2seq":
+        n -= 2 * cfg.vocab_size * cfg.emb_size  # src + tgt lookup tables
+    elif not cfg.tie_embeddings:
+        n -= cfg.vocab_size * cfg.emb_size  # untied input table is lookup-only
+    return float(n) * dtype_bytes
+
+
+def _slot_cache_bytes(cfg: ModelConfig, cache_policy: str, max_len: int, window: Optional[int]) -> float:
+    """Approximate bytes of one slot's cached state read per tick."""
+    if cache_policy == "encdec_memory":
+        return 4.0 * max_len * cfg.d_model + 4.0 * 4 * cfg.num_layers * cfg.d_model
+    if cache_policy == "recurrent":
+        return 4.0 * 8 * cfg.num_layers * cfg.d_model  # O(1) states
+    cap = window if (cache_policy == "window" and window) else max_len
+    return 2.0 * 2 * cap * cfg.num_layers * cfg.num_kv_heads * cfg.head_dim  # bf16 k+v
+
+
+@dataclass
+class DecodeTickRoofline:
+    """Latency model for ONE ContinuousEngine decode tick as a function of
+    (layout, device count, CPU cores, slot count, cache policy):
+
+        streams      = min(devices, cores)        # concurrent device programs
+        weight_s     = W * replicas / (streams * HOST_DEV_STREAM_BW)
+        cache_s      = slots * slot_cache_bytes / (streams * HOST_DEV_STREAM_BW)
+        compute_s    = 2 * N_active * slots / (streams * HOST_DEV_FLOPS)
+        dispatch_s   = HOST_DISPATCH_S if devices > 1
+        collective_s = HOST_COLL_PER_SLOT_S * slots if model-sharded
+        tick_s       = max(weight_s + cache_s, compute_s) + dispatch_s + collective_s
+
+    ``replicas`` counts copies of the weights streamed per tick across the
+    mesh: 1 for single and model (the shards sum to one copy), ``devices``
+    for data.  Hybrid ALSO streams ``devices`` copies on this backend —
+    GSPMD cannot keep the weight shards resident when the batch axis is
+    sharded too and rematerializes them per device program
+    ("Involuntary full rematerialization" in the spmd partitioner log),
+    which the measured sweep confirms (hybrid tracks data, not W*2).
+
+    The slot-vs-model crossover is replicas/streams vs the dispatch floor:
+    with cores >= devices the model layout multiplies bandwidth by
+    ``devices`` and wins at every slot count once W is large enough that
+    weight_s dominates HOST_DISPATCH_S; with one core every layout shares
+    one stream and single-device wins by overhead alone."""
+
+    arch: str
+    layout: str
+    devices: int
+    cores: int
+    slots: int
+    cache_policy: str
+    weight_bytes: float
+    replicas: int
+    model_shards: int
+    weight_s: float = 0.0
+    cache_s: float = 0.0
+    compute_s: float = 0.0
+    dispatch_s: float = 0.0
+    collective_s: float = 0.0
+    tick_s: float = 0.0
+    tok_s: float = 0.0
+    bottleneck: str = ""
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def decode_tick_roofline(
+    cfg: ModelConfig,
+    *,
+    layout: str,
+    devices: int,
+    slots: int,
+    cores: Optional[int] = None,
+    cache_policy: str = "full_kv",
+    max_len: int = 64,
+    window: Optional[int] = None,
+    dtype_bytes: int = 4,
+) -> DecodeTickRoofline:
+    if layout not in SERVE_LAYOUTS:
+        raise ValueError(f"layout must be one of {SERVE_LAYOUTS}, got {layout!r}")
+    if layout == "single":
+        devices = 1
+    if cores is None:
+        cores = host_cores()
+    # hybrid streams a full copy per device: GSPMD weight remat (see class doc)
+    replicas = {"single": 1, "model": 1, "data": devices, "hybrid": devices}[layout]
+    model_shards = {"single": 1, "data": 1, "model": devices, "hybrid": max(1, devices // 2)}[layout]
+    W = streamed_param_bytes(cfg, dtype_bytes)
+    r = DecodeTickRoofline(
+        arch=cfg.name, layout=layout, devices=devices, cores=cores, slots=slots,
+        cache_policy=cache_policy, weight_bytes=W, replicas=replicas,
+        model_shards=model_shards,
+    )
+    streams = min(devices, cores)
+    bw = streams * HOST_DEV_STREAM_BW
+    r.weight_s = W * replicas / bw
+    r.cache_s = slots * _slot_cache_bytes(cfg, cache_policy, max_len, window) / bw
+    r.compute_s = 2.0 * cfg.active_param_count() * slots / (streams * HOST_DEV_FLOPS)
+    r.dispatch_s = HOST_DISPATCH_S if devices > 1 else 0.0
+    r.collective_s = HOST_COLL_PER_SLOT_S * slots if model_shards > 1 else 0.0
+    memory_s = r.weight_s + r.cache_s
+    r.tick_s = max(memory_s, r.compute_s) + r.dispatch_s + r.collective_s
+    r.tok_s = slots / r.tick_s if r.tick_s else 0.0
+    terms = {
+        "weights": r.weight_s, "cache": r.cache_s, "compute": r.compute_s,
+        "dispatch": r.dispatch_s, "collective": r.collective_s,
+    }
+    r.bottleneck = max(terms, key=terms.get)
+    return r
+
+
+def predict_serve_winner(
+    cfg: ModelConfig,
+    *,
+    devices: int,
+    slots: int,
+    cores: Optional[int] = None,
+    cache_policy: str = "full_kv",
+    max_len: int = 64,
+    window: Optional[int] = None,
+    layouts=SERVE_LAYOUTS,
+) -> str:
+    """The layout this roofline predicts fastest (highest tok/s) at one
+    swept point — pinned against the measured serve_bench mesh sweep."""
+    rows = [
+        decode_tick_roofline(
+            cfg, layout=lay, devices=devices, slots=slots, cores=cores,
+            cache_policy=cache_policy, max_len=max_len, window=window,
+        )
+        for lay in layouts
+    ]
+    return max(rows, key=lambda r: r.tok_s).layout
+
+
 def make_roofline(
     cfg: ModelConfig,
     shape: InputShape,

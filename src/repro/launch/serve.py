@@ -31,13 +31,36 @@ from repro.models import transformer as tfm
 from repro.serve import ContinuousEngine, ServeEngine, make_sampler
 
 
-def _build_mesh(kind: str):
-    """--mesh vocabulary (mirrors launch/train.py, plus 'host' = every host
-    device on one data axis — what the forced-8-device CI/bench runs use)."""
+def _resolved_policy(cfg, requested: str) -> str:
+    """Mirror ServePlan.for_config's family -> cache-policy default; the
+    model-axis mesh presets need the policy BEFORE the plan exists to fit
+    the axis size (kv heads vs d_model divisibility)."""
+    if requested != "auto":
+        return requested
+    if cfg.family == "seq2seq":
+        return "encdec_memory"
+    if not ServePlan._has_attention(cfg):
+        return "recurrent"
+    return "window" if cfg.sliding_window else "full_kv"
+
+
+def _build_mesh(kind: str, cfg=None, cache_policy: str = "full_kv"):
+    """--mesh vocabulary (mirrors launch/train.py, plus the host presets
+    the forced-8-device CI/bench runs use: 'host' = all devices on one
+    data axis; 'host_model' = all on the model axis, weights/caches/head
+    sharded; 'host_hybrid' = (2, n/2) slot x model split).  The model
+    presets fit the axis to the config (largest size dividing the vocab
+    and the kv heads / d_model the cache policy shards)."""
     if kind == "none":
         return None
     if kind == "host":
         return jax.make_mesh((jax.device_count(),), ("data",))
+    if kind == "host_model":
+        msz = stg.fit_model_axis(cfg, cache_policy, jax.device_count())
+        return jax.make_mesh((msz,), ("model",))
+    if kind == "host_hybrid":
+        msz = stg.fit_model_axis(cfg, cache_policy, max(1, jax.device_count() // 2))
+        return jax.make_mesh((2, msz), ("data", "model"))
     if kind in ("pod", "multipod"):
         from repro.launch.mesh import make_production_mesh
 
@@ -63,8 +86,10 @@ def main():
     ap.add_argument("--engine", choices=("continuous", "static"), default="continuous")
     ap.add_argument("--strategy", default=None, choices=[s.value for s in Strategy],
                     help="slot-table sharding strategy (default: data when --mesh is set, single otherwise)")
-    ap.add_argument("--mesh", choices=("none", "host", "test", "pod", "multipod"), default="none",
-                    help="mesh the slot table shards over ('host' = all host devices on one data axis)")
+    ap.add_argument("--mesh", choices=("none", "host", "host_model", "host_hybrid", "test", "pod", "multipod"),
+                    default="none",
+                    help="mesh the slot table shards over ('host' = all host devices on one data axis; "
+                         "'host_model' = all on the model axis; 'host_hybrid' = (2, n/2) slot x model)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -74,8 +99,14 @@ def main():
     sampler = make_sampler(args.temperature)
     sample_rng = jax.random.key(args.seed) if args.temperature > 0 else None
 
-    mesh = _build_mesh(args.mesh)
-    strat = Strategy(args.strategy) if args.strategy else (Strategy.DATA if mesh is not None else Strategy.SINGLE)
+    policy = _resolved_policy(cfg, args.cache_policy)
+    mesh = _build_mesh(args.mesh, cfg, policy)
+    if args.strategy:
+        strat = Strategy(args.strategy)
+    elif mesh is None:
+        strat = Strategy.SINGLE
+    else:
+        strat = {"host_model": Strategy.MODEL, "host_hybrid": Strategy.HYBRID}.get(args.mesh, Strategy.DATA)
     max_len = args.max_len or max(64, args.prompt_len + args.steps)
     slots = args.max_slots or args.batch
     overrides = dict(
@@ -132,7 +163,9 @@ def main():
     outs = engine.run(prompts, args.steps, sampler=sampler, rng=sample_rng)
     dt = time.perf_counter() - t0
     tok = sum(len(o) for o in outs)
-    mesh_note = f" | {plan.strategy.value}:{plan.data_shard_size()} slot shards" if plan.mesh is not None else ""
+    mesh_note = ""
+    if plan.mesh is not None:
+        mesh_note = f" | {plan.strategy.value}:{plan.data_shard_size()} slot x {plan.model_shard_size()} model shards"
     print(f"[{cfg.name} | {plan.cache_policy} | {plan.admission}{mesh_note}] {len(outs)} requests, "
           f"{tok} tokens in {dt:.2f}s ({tok / dt:.1f} tok/s)")
     for o in outs[:2]:

@@ -103,12 +103,21 @@ def project_qkv(p, cfg: ModelConfig, x: jax.Array, xkv: jax.Array | None = None)
 def _match_kv(q, k, v):
     """Broadcast kv heads to the q layout: grouped layout has q KV == k KV;
     flat layout has q 'KV' dim == H and G == 1, so kv repeats per group
-    (head h reads kv head h // G — repeat preserves that mapping)."""
+    (head h reads kv head h // G).  Spelled as broadcast+reshape rather than
+    ``jnp.repeat``: the same consecutive-copies mapping, but the lowering is
+    a local block copy the SPMD partitioner keeps shard-aligned when the KV
+    dim rides the serve plan's model axis (each kv-head shard expands into
+    its own query heads — no cross-shard gather in the decode tick)."""
     KVq, KVk = q.shape[2], k.shape[2]
     if KVq != KVk:
         rep = KVq // KVk
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
+
+        def expand(x):
+            B, T, KV, D = x.shape
+            wide = jnp.broadcast_to(x[:, :, :, None], (B, T, KV, rep, D))
+            return wide.reshape(B, T, KV * rep, D)
+
+        k, v = expand(k), expand(v)
     return k, v
 
 

@@ -238,10 +238,16 @@ def encode_extend(params, cfg: ModelConfig, src_chunk: jax.Array, cache: Seq2Seq
     )
 
 
-def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Seq2SeqCache, *, stage_kernel: str = "jnp"):
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Seq2SeqCache, *, stage_kernel: str = "jnp", pin=None):
     """One serving decode step: embed ``token`` [B], advance the decoder
     LSTM cells, run the attention-softmax head against the cached memory.
-    Returns (logits [B, V], new cache)."""
+    Returns (logits [B, V], new cache).
+
+    ``pin`` (model-axis serving): sharding constraint applied to the Luong
+    context vector Hc — eq. 4's contraction psums the hidden-sharded memory
+    and decoder state, and the pin marks Hc replicated right there, so the
+    per-token context vector is the only value crossing the model axis
+    before the vocab-sharded eq. 5 GEMM."""
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     emb = params["tgt_emb"]["table"].astype(dt)[token]
     x = jnp.concatenate([emb, cache.hc.astype(dt)], -1) if cfg.input_feeding else emb
@@ -253,6 +259,8 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Seq2SeqCache,
     Hc, logits = attention_softmax_head(
         params["head"], cache.memory, hcur[:, None, :], cache.src_mask, stage_kernel=stage_kernel
     )
+    if pin is not None:
+        Hc = pin(Hc)
     return logits[:, 0], cache._replace(dec_states=tuple(new_states), hc=Hc[:, 0])
 
 

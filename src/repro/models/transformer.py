@@ -168,7 +168,14 @@ def _self_attention(p, cfg: ModelConfig, x, ctx: RunCtx, cache, positions, lengt
         else:
             ck, cv = attn.cache_update(ck, cv, k, v, length, rolling)
             o = attn.decode_attention(q, ck, cv, length, rolling=rolling)
-        return attn.output_proj(p, cfg, o), (ck, cv)
+        if ctx.pin is not None:
+            # model-axis serving: the per-head context stays on `model`; the
+            # projected per-token context vector is all that crosses the axis
+            o = ctx.pin(o)
+        y = attn.output_proj(p, cfg, o)
+        if ctx.pin is not None:
+            y = ctx.pin(y)
+        return y, (ck, cv)
     if ctx.attn_mesh is not None and x.shape[1] > ctx.q_chunk:
         o = attn.attend_shard_map(
             ctx.attn_mesh, q, k, v, causal=True, window=ctx.window,

@@ -29,9 +29,18 @@ the slot table shards over the plan's batch axes from construction onward
 update donates the table argument so the caches stay device-resident across
 ticks (no per-tick host round-trip of the full table), and retire+admit is
 ONE batched masked recycle update instead of per-slot dispatches.
+
+Under a model-axis strategy (``strategy='model'`` / hybrid; DESIGN.md §6)
+the engine additionally places the PARAMETERS per the plan's resolver —
+decode is weight-streaming-bound, so splitting the weights over the axis is
+what makes devices add up — shards each cache entry's head dim with them
+(KV heads, encdec memory hidden), and fuses the sampler into the jit'd tick
+so the vocab-sharded head's logits argmax over shards without ever
+gathering a full [slots, vocab] array.
 """
 from __future__ import annotations
 
+import functools
 from collections import deque
 from typing import Any, List, Optional, Sequence
 
@@ -195,7 +204,13 @@ class _LMPolicy:
     def __init__(self, cfg: ModelConfig, plan: ServePlan):
         self.cfg, self.plan = cfg, plan
         window = plan.window if plan.cache_policy == "window" else None
-        self._ctx = tfm.RunCtx(mode="decode", window=window, remat=False)
+        # decode_pin holds KV heads on the model axis through the extend step
+        # and pins the projected per-token context vector replicated — the
+        # only value that crosses the axis (None outside pure-MODEL serving)
+        self._ctx = tfm.RunCtx(
+            mode="decode", window=window, remat=False,
+            pin=stg.decode_pin(plan.strategy, plan.mesh),
+        )
         self._pb = plan.phase_boundary()
         self._window = window
 
@@ -227,6 +242,7 @@ class _EncDecPolicy:
     def __init__(self, cfg: ModelConfig, plan: ServePlan):
         self.cfg, self.plan = cfg, plan
         self._sk = plan.stage_kernel
+        self._pin = stg.decode_pin(plan.strategy, plan.mesh)
 
     def single_cache(self):
         return s2s.init_seq2seq_cache(self.cfg, 1, self.plan.max_len)
@@ -235,7 +251,9 @@ class _EncDecPolicy:
         return None, s2s.encode_extend(params, self.cfg, tokens, cache)
 
     def decode_one(self, params, tokens, cache):
-        return s2s.decode_step(params, self.cfg, tokens.reshape(-1), cache, stage_kernel=self._sk)
+        return s2s.decode_step(
+            params, self.cfg, tokens.reshape(-1), cache, stage_kernel=self._sk, pin=self._pin
+        )
 
     def check_request(self, prompt_len: int, max_new: int):
         if prompt_len > self.plan.max_len:
@@ -267,14 +285,63 @@ def _mask_like(mask, leaf):
     return mask.reshape((mask.shape[0],) + (1,) * (leaf.ndim - 1))
 
 
-def slot_table_shardings(plan: ServePlan, single: Any):
+def slot_table_shardings(plan: ServePlan, single: Any, cfg: Optional[ModelConfig] = None):
     """NamedShardings for the ContinuousEngine slot table built from the
     single-slot cache ``single`` (each table leaf is the matching single-slot
     leaf with the slot axis prepended): the slot dim over the plan's batch
-    axes, inner dims replicated.  None without a mesh."""
+    axes; under a model-axis strategy the cached state additionally shards
+    over ``model`` so it stays resident with the matching model-sharded
+    parameters — KV heads of an attention entry (``cfg`` names which entries
+    those are), the hidden dim of the encdec memory / Luong context, the
+    largest divisible dim of a recurrent state.  None without a mesh."""
     if plan.mesh is None:
         return None
-    return jax.tree.map(lambda a: plan.slot_sharding(a.ndim + 1), single)
+
+    def slot_only(a):
+        return plan.slot_sharding(a.ndim + 1)
+
+    if plan.model_shard_size() <= 1:
+        return jax.tree.map(slot_only, single)
+
+    K = plan.max_slots
+
+    def state_sh(a):
+        # mirror state_entry_spec: largest divisible inner dim over model,
+        # floats only (masks and length counters stay slot-dim placed)
+        shape = (K,) + a.shape
+        if not jnp.issubdtype(a.dtype, jnp.floating):
+            return plan.slot_entry_sharding(shape)
+        dims = tuple(sorted(range(2, len(shape)), key=lambda i: -shape[i]))
+        return plan.slot_entry_sharding(shape, model_dims=dims)
+
+    def last_dim_sh(a):
+        shape = (K,) + a.shape
+        return plan.slot_entry_sharding(shape, model_dims=(len(shape) - 1,))
+
+    if isinstance(single, s2s.Seq2SeqCache):
+        return s2s.Seq2SeqCache(
+            memory=last_dim_sh(single.memory),  # [K, 1, M, h]: h on model
+            src_mask=plan.slot_entry_sharding((K,) + single.src_mask.shape),
+            enc_states=jax.tree.map(last_dim_sh, single.enc_states),
+            dec_states=jax.tree.map(last_dim_sh, single.dec_states),
+            hc=last_dim_sh(single.hc),
+            length=plan.slot_entry_sharding((K,)),
+        )
+    if cfg is not None and isinstance(single, tfm.LMCache):
+        kinds = tfm.block_pattern(cfg)
+
+        def entry_sh(i, e):
+            if kinds[i] == "attn":
+                # [K, G, 1, C, KV, D]: KV heads on model (dim 4) — the
+                # decode attention runs head-partitioned, softmax local
+                k, v = e
+                sh = plan.slot_entry_sharding((K,) + k.shape, model_dims=(4,))
+                return (sh, sh)
+            return jax.tree.map(state_sh, e)
+
+        entries = tuple(entry_sh(i, e) for i, e in enumerate(single.entries))
+        return tfm.LMCache(entries=entries, length=plan.slot_entry_sharding((K,)))
+    return jax.tree.map(state_sh, single)
 
 
 class ContinuousEngine:
@@ -309,7 +376,14 @@ class ContinuousEngine:
         K, C = self.plan.max_slots, self.plan.prefill_chunk
         self._K, self._C = K, C
         self._single = self.policy.single_cache()
-        self._shardings = slot_table_shardings(self.plan, self._single)
+        self._shardings = slot_table_shardings(self.plan, self._single, cfg)
+        if self.plan.mesh is not None:
+            # place the parameters per the plan's strategy resolver: decode
+            # is weight-streaming-bound, so under strategy='model' splitting
+            # the weights over the axis (instead of replicating them per
+            # device as the slot-sharded layout does) is the whole win —
+            # each device streams 1/msz of the bytes (DESIGN.md §6)
+            self.params = jax.device_put(params, self._param_placements())
 
         def poison_scalar(dtype, use_sentinel):
             # NaN is the loudest recycling canary, but it cannot be
@@ -349,7 +423,9 @@ class ContinuousEngine:
             logits, one = self.policy.prefill_one(params, tokens, take(caches, slot))
             return logits, constrain(put(caches, one, slot))
 
-        def decode_tick(params, caches, tokens, active):
+        logits_sh = self.plan.logits_sharding()
+
+        def decode_tick(sampler, params, caches, tokens, active, rng):
             # With poisoning on, non-decoding lanes COMPUTE on the fresh
             # single-slot values, never on a retired slot's poisoned state —
             # the tick's math stays NaN-free even under jax_debug_nans.  The
@@ -374,7 +450,15 @@ class ContinuousEngine:
                 lambda old, upd: jnp.where(_mask_like(active, upd), upd.astype(old.dtype), old),
                 caches, new,
             )
-            return logits[:, 0], constrain(merged)
+            step_logits = logits[:, 0]
+            if logits_sh is not None:
+                # the vocab-sharded head leaves logits shard-local; pinning
+                # them keeps the full [slots, vocab] array from gathering —
+                # the sampler's argmax reduces over shards itself — and lets
+                # the cache-merge writes overlap that head collective
+                step_logits = jax.lax.with_sharding_constraint(step_logits, logits_sh)
+            toks = sampler(step_logits) if rng is None else sampler(step_logits, rng)
+            return toks, constrain(merged)
 
         def recycle(caches, poison_mask, reset_mask, use_sentinel):
             # ONE batched masked update replaces the old per-slot
@@ -399,9 +483,38 @@ class ContinuousEngine:
         # rebind on every call, so the update aliases the input buffer and
         # the full slot table never round-trips through the host
         self._prefill_step = jax.jit(prefill_step, donate_argnums=(1,))
-        self._decode_tick = jax.jit(decode_tick, donate_argnums=(1,))
+        self._tick_fn = decode_tick
+        # one jitted tick per sampler (the sampler runs INSIDE the jit so
+        # the argmax-over-vocab-shards merge fuses with the head); greedy is
+        # the eager default and what the benches time
+        self._tick_cache: dict = {}
         self._recycle = jax.jit(recycle, donate_argnums=(0,), static_argnums=(3,))
         self._init_table = jax.jit(init_table)
+        self._decode_tick = self._tick_for(greedy)
+
+    def _tick_for(self, sampler):
+        """The jitted (params, caches, tokens, active, rng) -> (tokens,
+        caches) decode tick with ``sampler`` fused after the head."""
+        tick = self._tick_cache.get(sampler)
+        if tick is None:
+            tick = jax.jit(functools.partial(self._tick_fn, sampler), donate_argnums=(1,))
+            self._tick_cache[sampler] = tick
+        return tick
+
+    def _param_placements(self):
+        """The plan's parameter NamedShardings, resolved from the family's
+        logical-axis specs via an abstract init (no second allocation)."""
+        cfg = self.cfg
+        init = (lambda k: s2s.init_seq2seq(k, cfg)) if cfg.family == "seq2seq" else (lambda k: tfm.init_lm(k, cfg))
+        box = {}
+
+        def params_only(k):
+            p, specs = init(k)
+            box["specs"] = specs
+            return p
+
+        shapes = jax.eval_shape(params_only, jax.random.key(0))
+        return stg.param_shardings(box["specs"], shapes, self.plan.mesh, self.plan.strategy)
 
     def _init_caches(self):
         """Build the slot table device-resident (and mesh-placed when the
@@ -483,14 +596,13 @@ class ContinuousEngine:
             # ---- decode tick: one vmapped step over the whole table -------
             active = np.array([s.phase == "decode" for s in slots])
             if active.any():
-                logits, caches = self._decode_tick(
-                    self.params, caches, jnp.asarray(cur_tok, jnp.int32), jnp.asarray(active)
-                )
+                sub = None
                 if rng is not None:
                     rng, sub = jax.random.split(rng)
-                    toks = np.asarray(sampler(logits, sub))
-                else:
-                    toks = np.asarray(sampler(logits))
+                toks, caches = self._tick_for(sampler)(
+                    self.params, caches, jnp.asarray(cur_tok, jnp.int32), jnp.asarray(active), sub
+                )
+                toks = np.asarray(toks)
                 for k, s in enumerate(slots):
                     if s.phase != "decode":
                         continue

@@ -23,9 +23,11 @@ block:
   through the model.
 
 ``run_sharded_case`` additionally reruns a case in a forced-8-device
-subprocess under a slot-sharded plan (``mesh`` over all host devices) and
-returns sharded vs single-device tokens for the parity assertions in
-``test_serve.py`` (marker ``serve_multidevice``, own CI step).
+subprocess under a sharded plan — slot-sharded (``mesh_kind='data'``),
+model-axis (``'model'``: weights/caches/head split, DESIGN.md §6) or
+hybrid (``'hybrid'``: (2, n) slot x model) — and returns sharded vs
+single-device tokens for the parity assertions in ``test_serve.py``
+(marker ``serve_multidevice``, own CI step).
 
 ``tests/test_serve.py`` drives the registry exhaustively (pytest marker
 ``serve``); invalid policy x family pairs are pinned as ValueError in the
@@ -251,38 +253,54 @@ INVARIANTS = {
 # ---------------------------------------------------------------------------
 
 
-def run_sharded_case(name: str, *, devices: int = 8) -> dict:
+def run_sharded_case(name: str, *, devices: int = 8, mesh_kind: str = "data") -> dict:
     """Serve ``name`` in a subprocess with a forced ``devices``-device CPU
     host (the main pytest process keeps its single-device view): once under
-    a slot-sharded plan (mesh over all host devices, strategy='data') and
-    once with no mesh, plus poisoned-slot recycling under sharding.  Returns
-    the subprocess' JSON record; callers assert sharded == single-device."""
+    a sharded plan and once with no mesh, plus poisoned-slot recycling under
+    sharding.  ``mesh_kind`` picks how the mesh is spent: 'data' = slot
+    table over all devices; 'model' = weights/caches/head over a model axis
+    fitted to the config; 'hybrid' = (2, fitted) slot x model split.
+    Returns the subprocess' JSON record; callers assert sharded ==
+    single-device."""
+    assert mesh_kind in ("data", "model", "hybrid"), mesh_kind
     code = textwrap.dedent(
         f"""
         import json
         import jax
         import serve_harness as sh
+        from repro.core import strategy as stg
 
         name = {name!r}
+        mesh_kind = {mesh_kind!r}
         case = sh.REGISTRY[name]
+        cfg, _ = sh.build(case.arch)
         K = jax.device_count()
-        mesh = jax.make_mesh((K,), ("data",))
+        if mesh_kind == "data":
+            mesh, strat = jax.make_mesh((K,), ("data",)), "data"
+        elif mesh_kind == "model":
+            msz = stg.fit_model_axis(cfg, case.cache_policy, K)
+            mesh, strat = jax.make_mesh((msz,), ("model",)), "model"
+        else:
+            msz = stg.fit_model_axis(cfg, case.cache_policy, max(1, K // 2))
+            mesh, strat = jax.make_mesh((2, msz), ("data", "model")), "hybrid"
         prompts = sh.prompts_for(case, seed=5)
-        sharded = sh.make_engine(case, strategy="data", mesh=mesh, max_slots=K)
+        sharded = sh.make_engine(case, strategy=strat, mesh=mesh, max_slots=K)
         plain = sh.make_engine(case, max_slots=K)
         out_s = [o.tolist() for o in sharded.run(prompts, case.max_new)]
         out_p = [o.tolist() for o in plain.run(prompts, case.max_new)]
         # poisoned-slot recycling under sharding: more requests than slots
         many = prompts * (K // len(prompts) + 2)
         poi = sh.make_engine(
-            case, strategy="data", mesh=mesh, max_slots=K,
+            case, strategy=strat, mesh=mesh, max_slots=K,
             engine_kwargs={{"poison_on_recycle": True}},
         ).run(many, case.max_new)
         ref = sh.make_engine(case, max_slots=K).run(many, case.max_new)
-        plan = sh.make_plan(case, strategy="data", mesh=mesh, max_slots=K)
+        plan = sh.make_plan(case, strategy=strat, mesh=mesh, max_slots=K)
         print(json.dumps({{
             "device_count": K,
+            "mesh_kind": mesh_kind,
             "data_shard_size": plan.data_shard_size(),
+            "model_shard_size": plan.model_shard_size(),
             "sharded": out_s, "plain": out_p,
             "poisoned_sharded": [o.tolist() for o in poi],
             "poisoned_plain": [o.tolist() for o in ref],

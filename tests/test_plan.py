@@ -113,6 +113,96 @@ def test_serve_plan_slot_sharding():
     assert sh.spec == jax.sharding.PartitionSpec(("data",), None, None)
 
 
+def test_serve_plan_model_axis():
+    """The model-axis serving seam: strategy='model' accepts a mesh with NO
+    batch axes (slots replicate; weights, kv heads and the vocab head
+    shard), ``model_shard_size`` reads the model axis, and ``validate_for``
+    rejects meshes whose model axis cannot divide the dimensions it would
+    shard — before any engine is built."""
+
+    class ModelOnlyMesh:  # shape-only: plan validation reads names + shape
+        axis_names = ("model",)
+        devices = np.zeros(8)
+
+    plan = ServePlan(strategy="model", mesh=ModelOnlyMesh(), max_slots=4)
+    assert plan.model_shard_size() == 8 and plan.data_shard_size() == 1
+    # HYBRID still demands a batch axis: only MODEL may replicate the slots
+    with pytest.raises(ValueError, match="no.*batch axes"):
+        ServePlan(strategy="hybrid", mesh=ModelOnlyMesh(), max_slots=8)
+
+    tfm_cfg = get_config("qwen3-1.7b", smoke=True)  # kv=4, vocab=512
+    s2s_cfg = get_config("seq2seq-rnn", smoke=True)  # d_model=256, vocab=512
+    # 8 does not divide the smoke config's 4 kv heads -> the kv cache
+    # cannot head-shard
+    with pytest.raises(ValueError, match="num_kv_heads"):
+        ServePlan(strategy="model", mesh=ModelOnlyMesh(), max_slots=4,
+                  cache_policy="window", window=8, prefill_chunk=8).validate_for(tfm_cfg)
+
+    class ThreeMesh:
+        axis_names = ("model",)
+        devices = np.zeros(3)
+
+    with pytest.raises(ValueError, match="vocab_size"):
+        ServePlan(strategy="model", mesh=ThreeMesh(), max_slots=4).validate_for(tfm_cfg)
+
+    class HugeMesh:  # divides the vocab (512) but not d_model (256)
+        axis_names = ("model",)
+        devices = np.zeros(512)
+
+    with pytest.raises(ValueError, match="d_model"):
+        ServePlan(strategy="model", mesh=HugeMesh(), max_slots=4,
+                  cache_policy="encdec_memory").validate_for(s2s_cfg)
+
+    # fit_model_axis picks the largest axis validate_for accepts
+    assert st.fit_model_axis(tfm_cfg, "full_kv", 8) == 4
+    assert st.fit_model_axis(s2s_cfg, "encdec_memory", 8) == 8
+    assert st.fit_model_axis(get_config("xlstm-350m", smoke=True), "recurrent", 8) == 8
+
+    class FittedMesh:
+        axis_names = ("model",)
+        devices = np.zeros(4)
+
+    fitted = ServePlan(strategy="model", mesh=FittedMesh(), max_slots=4,
+                       cache_policy="window", window=8, prefill_chunk=8)
+    fitted.validate_for(tfm_cfg)  # 4 | kv=4 and 4 | vocab=512: accepted
+    assert fitted.model_shard_size() == 4
+
+
+def test_serve_bench_trajectory_roofline_agreement():
+    """The committed mesh-sweep trajectory (experiments/bench/
+    serve_bench.json) must show the decode-tick roofline predicting the
+    measured winner at EVERY swept point, and the roofline must predict the
+    slot-vs-model crossover: on a host with cores >= devices the model-axis
+    layout beats single-device at bench scale (weights shard instead of
+    replicate), while a one-core host serializes every layout and
+    single-device wins on overhead."""
+    import dataclasses
+    import json
+    import os
+
+    from repro.configs.base import reduced
+    from repro.launch.roofline import predict_serve_winner
+
+    path = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench", "serve_bench.json")
+    with open(path) as f:
+        traj = json.load(f)
+    winners = [r for entry in traj for r in entry["records"] if r.get("kind") == "winner"]
+    assert winners, "trajectory has no winner records — rerun benchmarks/serve_bench.py --mesh"
+    for w in winners:
+        assert w["match"], f"roofline missed the measured winner at {w}"
+    # the crossover, as the roofline states it for a host that can actually
+    # run 8 concurrent device programs
+    bench_cfg = dataclasses.replace(
+        reduced(get_config("qwen3-1.7b")), d_model=1024, num_heads=16, num_kv_heads=8,
+        head_dim=64, d_ff=4096, vocab_size=16384, emb_size=1024,
+    )
+    for slots in (8, 32):
+        assert predict_serve_winner(bench_cfg, devices=8, slots=slots, cores=8,
+                                    cache_policy="window", window=64) == "model"
+        assert predict_serve_winner(bench_cfg, devices=8, slots=slots, cores=1,
+                                    cache_policy="window", window=64) == "single"
+
+
 def test_plan_stage_kernel_validation():
     """stage_kernel is a closed vocabulary; the default is the jnp math."""
     assert ExecutionPlan(strategy=st.Strategy.HYBRID).stage_kernel == "jnp"

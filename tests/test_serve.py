@@ -57,17 +57,26 @@ def test_registry_covers_policy_family_matrix():
 
 
 @pytest.mark.serve_multidevice
+@pytest.mark.parametrize("mesh_kind", ("data", "model", "hybrid"))
 @pytest.mark.parametrize("name", sh.all_names())
-def test_sharded_decode_parity(name):
-    """Slot-sharded serving on a forced 8-device host produces exactly the
+def test_sharded_decode_parity(name, mesh_kind):
+    """Sharded serving on a forced 8-device host produces exactly the
     single-device tokens — decode parity AND poisoned-slot recycling — for
-    every cache_policy x family case (the paper's data-parallel
-    attention-softmax phase reproduced at serve time)."""
-    rec = sh.run_sharded_case(name)
-    assert rec["device_count"] == 8 and rec["data_shard_size"] == 8
-    assert rec["sharded"] == rec["plain"], f"{name}: sharded tokens diverge from single-device"
+    every cache_policy x family case under every way of spending the mesh:
+    slot-sharded ('data', the paper's data-parallel attention-softmax phase
+    reproduced at serve time), model-axis ('model': kv-head-sharded cache,
+    vocab-sharded head per DESIGN.md §6) and 'hybrid' (slot x model)."""
+    rec = sh.run_sharded_case(name, mesh_kind=mesh_kind)
+    assert rec["device_count"] == 8
+    if mesh_kind == "data":
+        assert rec["data_shard_size"] == 8 and rec["model_shard_size"] == 1
+    elif mesh_kind == "model":
+        assert rec["data_shard_size"] == 1 and rec["model_shard_size"] > 1
+    else:
+        assert rec["data_shard_size"] == 2 and rec["model_shard_size"] > 1
+    assert rec["sharded"] == rec["plain"], f"{name}: {mesh_kind}-sharded tokens diverge from single-device"
     assert rec["poisoned_sharded"] == rec["poisoned_plain"], (
-        f"{name}: poisoned-slot recycling under sharding diverges"
+        f"{name}: poisoned-slot recycling under {mesh_kind} sharding diverges"
     )
 
 
@@ -83,6 +92,23 @@ def test_trivial_mesh_plumbing_in_process():
         plain = sh.make_engine(case).run(prompts, case.max_new)
         for a, b in zip(meshed, plain):
             assert a.tolist() == b.tolist()
+
+
+def test_trivial_model_mesh_plumbing_in_process():
+    """Same trivial-mesh exercise for the model-axis path: a 1-device
+    ('model',) mesh walks parameter placement, head-sharded cache specs,
+    the fused vocab-merge sampler and the decode pins without a forced
+    host; a (1, 1) hybrid mesh walks both axes at once."""
+    model_mesh = jax.make_mesh((1,), ("model",))
+    hybrid_mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for name in ("transformer-full_kv", "seq2seq-encdec_memory"):
+        case = sh.REGISTRY[name]
+        prompts = sh.prompts_for(case, seed=7)
+        plain = sh.make_engine(case).run(prompts, case.max_new)
+        meshed = sh.make_engine(case, strategy="model", mesh=model_mesh).run(prompts, case.max_new)
+        hybrid = sh.make_engine(case, strategy="hybrid", mesh=hybrid_mesh).run(prompts, case.max_new)
+        for a, b, c in zip(meshed, plain, hybrid):
+            assert a.tolist() == b.tolist() == c.tolist()
 
 
 def test_engine_rejects_unsharded_mesh_plan():
