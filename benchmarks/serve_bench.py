@@ -112,6 +112,42 @@ for K in [int(s) for s in slots_csv.split(",")]:
 """
 
 
+def paged_point():
+    """Paged vs contiguous serving throughput at skewed lengths, in-process:
+    the paged engine runs on a pool HALF the contiguous footprint
+    (num_pages * page_size = max_slots * max_len / 2) and must still admit
+    and serve the identical skewed stream.  Returns (rows, record); the
+    record (kind='paged_smoke') rides the bench trajectory next to the
+    mesh-sweep winners."""
+    from repro.configs import get_config
+    from repro.core.plan import ServePlan
+    from repro.models import transformer as tfm
+    from repro.serve import ContinuousEngine
+
+    cfg = dataclasses.replace(get_config("qwen3-1.7b", smoke=True), dtype="float32")
+    params, _ = tfm.init_lm(jax.random.key(0), cfg)
+    rng = np.random.default_rng(2)
+    reqs = _requests(rng, cfg.vocab_size, "skewed", 12)
+    prompts = [p for p, _ in reqs]
+    budgets = [g for _, g in reqs]
+    rows, stats = [], {}
+    for mode, extra in (("contiguous", {}), ("paged", dict(page_size=16, num_pages=8))):
+        plan = ServePlan.for_config(cfg, max_slots=4, max_len=64, prefill_chunk=8, **extra)
+        eng = ContinuousEngine(cfg, params, plan)
+        eng.run(prompts, budgets)  # compile
+        t0 = time.perf_counter()
+        outs = eng.run(prompts, budgets)
+        dt = time.perf_counter() - t0
+        tok = sum(len(o) for o in outs)
+        pool_note = f"{plan.pool_pages}x{plan.page_size} pool" if plan.paged else "4x64 slots"
+        stats[mode] = {"tok_per_s": round(tok / dt, 1), "tokens": tok}
+        rows.append((f"serve_paged_{mode}_skewed", f"{dt / tok * 1e6:.0f}",
+                     f"{tok / dt:.1f}", f"tok/s over 12 reqs, {pool_note}"))
+    record = {"kind": "paged_smoke", "page_size": 16, "num_pages": 8,
+              "footprint_vs_contiguous": 0.5, **{m: s for m, s in stats.items()}}
+    return rows, record
+
+
 def mesh_sweep(smoke: bool = False):
     """Decode-tick latency across serving layouts at forced host device
     counts, measured vs roofline-predicted.  Returns (rows, records); the
@@ -166,6 +202,11 @@ def mesh_sweep(smoke: bool = False):
                             "match": measured == predicted})
             rows.append((f"serve_winner_{scale}_{k}slots", "-", "-",
                          f"measured={measured} predicted={predicted} match={measured == predicted}"))
+    # paged vs contiguous at skewed lengths (in-process; kind='paged_smoke'
+    # records never collide with the winner pins in test_plan)
+    paged_rows, paged_rec = paged_point()
+    rows += paged_rows
+    records.append(paged_rec)
     if records:
         try:
             os.makedirs(os.path.dirname(TRAJECTORY), exist_ok=True)

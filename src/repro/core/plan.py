@@ -294,6 +294,14 @@ class ServePlan:
       ``continuous`` admits from the queue whenever EOS frees a slot.
     * ``stage_kernel`` — same vocabulary as the training plan: what computes
       the Luong attention head (``jnp`` math or the fused Pallas kernel).
+    * ``page_size`` — switches the slot table to PAGED state: positional
+      cache entries (KV, encdec memory) live in a fixed pool of
+      ``page_size``-token pages indexed by a per-slot page table, so a
+      request reserves ``ceil(tokens / page_size)`` pages instead of a full
+      ``max_len`` stripe; ``num_pages`` sizes the pool (default: the full
+      contiguous footprint ``max_slots * cache_capacity / page_size`` — size
+      it smaller to overcommit); ``share_prefixes`` turns on copy-on-write
+      prefix sharing between requests with a common prompt prefix.
     """
 
     strategy: stg.Strategy = stg.Strategy.SINGLE
@@ -305,6 +313,9 @@ class ServePlan:
     admission: str = "continuous"
     window: Optional[int] = None  # rolling buffer size (cache_policy="window")
     stage_kernel: str = "jnp"
+    page_size: Optional[int] = None  # tokens per KV page (None = contiguous slots)
+    num_pages: Optional[int] = None  # pool size in pages (None = full footprint)
+    share_prefixes: bool = False  # COW prompt-prefix sharing across requests
 
     def __post_init__(self):
         object.__setattr__(self, "strategy", stg.Strategy(self.strategy))
@@ -333,6 +344,39 @@ class ServePlan:
                 )
         elif self.window is not None:
             raise ValueError(f"window is only meaningful for cache_policy='window', got {self.cache_policy!r}")
+        if self.num_pages is not None and self.page_size is None:
+            raise ValueError("num_pages without page_size: set page_size to enable the paged pool")
+        if self.share_prefixes and self.page_size is None:
+            raise ValueError("share_prefixes requires a paged plan (set page_size)")
+        if self.page_size is not None:
+            if self.cache_policy == "recurrent":
+                raise ValueError(
+                    "cache_policy='recurrent' keeps O(1) state per slot — there is "
+                    "no positional cache to page; drop page_size"
+                )
+            if self.page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+            if self.page_size % self.prefill_chunk:
+                raise ValueError(
+                    f"prefill_chunk={self.prefill_chunk} must divide page_size={self.page_size} "
+                    "(every chunked-prefill write must land inside exactly one page)"
+                )
+            if self.cache_capacity % self.page_size:
+                raise ValueError(
+                    f"page_size={self.page_size} must divide the per-slot cache capacity "
+                    f"{self.cache_capacity} (the page table tiles a slot's view exactly)"
+                )
+            if self.num_pages is not None and self.num_pages < self.pages_per_slot:
+                raise ValueError(
+                    f"num_pages={self.num_pages} cannot hold even one full slot "
+                    f"({self.pages_per_slot} pages of {self.page_size} tokens)"
+                )
+            if self.share_prefixes and self.cache_policy != "full_kv":
+                raise ValueError(
+                    "share_prefixes requires cache_policy='full_kv': a rolling window "
+                    "evicts shared positions and the encdec encoder's carried LSTM "
+                    "states cannot skip a prefix"
+                )
         if self.mesh is not None:
             # an explicit mesh must never be quietly ignored: the slot table
             # (the vmapped batch axis of the decode tick) shards over the
@@ -392,7 +436,14 @@ class ServePlan:
         want = overrides.get("prefill_chunk", cls.prefill_chunk)
         if overrides.get("cache_policy") == "window" and overrides.get("window"):
             want = min(want, overrides["window"])  # a chunk must not wrap the buffer
-        overrides["prefill_chunk"] = fit_block(overrides.get("max_len", cls.max_len), want)
+        base = overrides.get("max_len", cls.max_len)
+        if overrides.get("page_size"):
+            # paged plans additionally need the chunk to tile a page exactly
+            # (one page-aligned write per prefill step)
+            import math
+
+            base = math.gcd(base, overrides["page_size"])
+        overrides["prefill_chunk"] = fit_block(base, want)
         plan = cls(**overrides)
         plan.validate_for(cfg)
         return plan
@@ -451,6 +502,24 @@ class ServePlan:
                     f"{cfg.d_model}: the encdec memory / Luong context cannot "
                     "shard — shrink the model axis"
                 )
+            # the paged pool's entries carry the SAME model dims as the
+            # contiguous slot entries (KV heads / memory hidden), so the
+            # divisibility seams above already gate them; nothing extra binds.
+        if self.paged and self.share_prefixes:
+            # prefix sharing skips the prefill of shared pages, which is only
+            # sound when EVERY cached entry is positional (an attention KV row
+            # depends on its own token + position alone).  Recurrent entries
+            # (hybrid archs interleave them) are sequential: their state at
+            # position p depends on every earlier token, so a skipped chunk
+            # would leave them wrong.
+            from repro.models import transformer as tfm  # local: avoid cycle
+
+            if any(kind != "attn" for kind in tfm.block_pattern(cfg)):
+                raise ValueError(
+                    f"share_prefixes on {cfg.name}: the arch carries sequential "
+                    "(recurrent) per-slot state that cannot skip prefill — prefix "
+                    "sharing needs an all-attention block pattern"
+                )
 
     def validate_batch(self, num_requests: int) -> None:
         """Static admission runs one batch start-to-finish: it must fit the
@@ -468,6 +537,37 @@ class ServePlan:
         """Per-slot attention-cache capacity in tokens (the rolling buffer
         size under the window policy)."""
         return self.window if self.cache_policy == "window" else self.max_len
+
+    @property
+    def paged(self) -> bool:
+        """Whether positional cache entries live in the shared page pool."""
+        return self.page_size is not None
+
+    @property
+    def pages_per_slot(self) -> int:
+        """Rows of one slot's page table (its ``cache_capacity`` in pages)."""
+        return self.cache_capacity // self.page_size
+
+    @property
+    def pool_pages(self) -> int:
+        """Usable pages in the pool.  Defaults to the full contiguous
+        footprint (``max_slots * pages_per_slot``); an explicit ``num_pages``
+        overcommits — capacity then decouples from ``max_len`` and admission
+        reserves only what each request can actually touch."""
+        return self.num_pages if self.num_pages is not None else self.max_slots * self.pages_per_slot
+
+    def page_pool_sharding(self, shape: tuple, model_dims: tuple = ()) -> Optional[NamedSharding]:
+        """NamedSharding for one page-pool leaf ``[pages, page_size, ...]``:
+        the page dim is the host-indexed allocation unit (each tick gathers an
+        arbitrary subset of rows), so it stays UNSHARDED — a page dim split
+        over the batch axes would turn every gather into a cross-device
+        shuffle.  Inner dims take the ``model`` axis exactly as the matching
+        contiguous slot entry does (KV heads / memory hidden with their
+        parameters).  None without a mesh."""
+        if self.mesh is None:
+            return None
+        spec = stg.page_pool_spec(shape, self.mesh, self.strategy, model_dims=model_dims)
+        return NamedSharding(self.mesh, spec)
 
     def slot_spec(self) -> P:
         """PartitionSpec axes for the slot (vmapped batch) dimension of the
@@ -539,4 +639,7 @@ class ServePlan:
             admission=self.admission,
             window=self.window,
             stage_kernel=self.stage_kernel,
+            page_size=self.page_size,
+            num_pages=self.num_pages,
+            share_prefixes=self.share_prefixes,
         )

@@ -383,6 +383,28 @@ def slot_entry_spec(
     return P(bax, *inner)
 
 
+def page_pool_spec(
+    shape: tuple, mesh: Mesh, strategy: Strategy = Strategy.DATA, *, model_dims: tuple = ()
+) -> P:
+    """Page-pool leaf [pages, ...] — the paged twin of ``slot_entry_spec``.
+    The page dim is the host-indexed allocation unit: every decode tick
+    gathers an arbitrary subset of rows per slot, so sharding it over the
+    batch axes would turn each gather into a cross-device shuffle — it stays
+    unsharded and the pool replicates over the data axes (pages are small;
+    the pool's footprint is bounded by ``num_pages * page_size``, the very
+    thing paging shrinks).  Inner dims take ``model`` by the same
+    ``model_dims`` divisibility gating as the contiguous slot entries, so a
+    gathered view lands pre-sharded next to its model-parallel parameters."""
+    inner = [None] * (len(shape) - 1)
+    msz = model_shard_size(strategy, mesh)
+    if msz > 1:
+        for d in model_dims:
+            if 0 < d < len(shape) and shape[d] % msz == 0 and shape[d] >= msz:
+                inner[d - 1] = "model"
+                break
+    return P(None, *inner)
+
+
 def state_entry_spec(shape: tuple, mesh: Mesh) -> P:
     """Recurrent state [G, B, ...]: batch over data axes, largest inner dim
     over model when divisible."""

@@ -170,6 +170,7 @@ class DecodeTickRoofline:
     model_shards: int
     weight_s: float = 0.0
     cache_s: float = 0.0
+    page_gather_s: float = 0.0
     compute_s: float = 0.0
     dispatch_s: float = 0.0
     collective_s: float = 0.0
@@ -192,6 +193,7 @@ def decode_tick_roofline(
     max_len: int = 64,
     window: Optional[int] = None,
     dtype_bytes: int = 4,
+    page_size: Optional[int] = None,
 ) -> DecodeTickRoofline:
     if layout not in SERVE_LAYOUTS:
         raise ValueError(f"layout must be one of {SERVE_LAYOUTS}, got {layout!r}")
@@ -212,15 +214,20 @@ def decode_tick_roofline(
     bw = streams * HOST_DEV_STREAM_BW
     r.weight_s = W * replicas / bw
     r.cache_s = slots * _slot_cache_bytes(cfg, cache_policy, max_len, window) / bw
+    # paged slot tables gather every slot's page rows into a fresh contiguous
+    # view each tick (read pool + write view): one extra pass over the cache
+    # bytes.  The page size cancels out of the first-order term — the gather
+    # touches pages_per_slot * page_size = cache_capacity rows regardless.
+    r.page_gather_s = r.cache_s if page_size else 0.0
     r.compute_s = 2.0 * cfg.active_param_count() * slots / (streams * HOST_DEV_FLOPS)
     r.dispatch_s = HOST_DISPATCH_S if devices > 1 else 0.0
     r.collective_s = HOST_COLL_PER_SLOT_S * slots if model_shards > 1 else 0.0
-    memory_s = r.weight_s + r.cache_s
+    memory_s = r.weight_s + r.cache_s + r.page_gather_s
     r.tick_s = max(memory_s, r.compute_s) + r.dispatch_s + r.collective_s
     r.tok_s = slots / r.tick_s if r.tick_s else 0.0
     terms = {
-        "weights": r.weight_s, "cache": r.cache_s, "compute": r.compute_s,
-        "dispatch": r.dispatch_s, "collective": r.collective_s,
+        "weights": r.weight_s, "cache": r.cache_s, "page_gather": r.page_gather_s,
+        "compute": r.compute_s, "dispatch": r.dispatch_s, "collective": r.collective_s,
     }
     r.bottleneck = max(terms, key=terms.get)
     return r

@@ -90,6 +90,14 @@ def main():
                     default="none",
                     help="mesh the slot table shards over ('host' = all host devices on one data axis; "
                          "'host_model' = all on the model axis; 'host_hybrid' = (2, n/2) slot x model)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="serve off a paged KV pool with this many tokens per page "
+                         "(decouples admission capacity from --max-len)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size (default: max_slots * pages_per_slot, the full footprint)")
+    ap.add_argument("--share-prefixes", action="store_true",
+                    help="copy-on-write prefix sharing: requests with a common full-page "
+                         "prompt prefix share pages and skip the shared prefill chunks")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -125,6 +133,11 @@ def main():
             slots = -(-slots // dsz) * dsz
             print(f"note: max_slots rounded up to {slots} ({dsz} slot shards)")
             overrides["max_slots"] = slots
+    if args.page_size is not None:
+        overrides.update(page_size=args.page_size, num_pages=args.num_pages,
+                         share_prefixes=args.share_prefixes)
+    elif args.num_pages is not None or args.share_prefixes:
+        raise SystemExit("--num-pages/--share-prefixes require --page-size")
     if args.cache_policy != "auto":
         overrides["cache_policy"] = args.cache_policy
     if args.window is not None:
@@ -142,6 +155,8 @@ def main():
         # precomputed embeddings the continuous queue does not carry)
         if cfg.family == "seq2seq":
             raise SystemExit("the seq2seq arch serves through the continuous engine (--engine continuous)")
+        if args.page_size is not None:
+            raise SystemExit("--page-size needs the continuous engine (--engine continuous)")
         plan = ServePlan.for_config(cfg, **overrides)
         prompts = jnp.asarray(rng.integers(3, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)
         frontend = None
@@ -166,7 +181,12 @@ def main():
     mesh_note = ""
     if plan.mesh is not None:
         mesh_note = f" | {plan.strategy.value}:{plan.data_shard_size()} slot x {plan.model_shard_size()} model shards"
-    print(f"[{cfg.name} | {plan.cache_policy} | {plan.admission}{mesh_note}] {len(outs)} requests, "
+    paged_note = ""
+    if plan.paged:
+        paged_note = f" | paged {plan.pool_pages}x{plan.page_size}"
+        if plan.share_prefixes:
+            paged_note += f" share({engine.shared_prefix_tokens} tok skipped, {engine.cow_copies} cow)"
+    print(f"[{cfg.name} | {plan.cache_policy} | {plan.admission}{mesh_note}{paged_note}] {len(outs)} requests, "
           f"{tok} tokens in {dt:.2f}s ({tok / dt:.1f} tok/s)")
     for o in outs[:2]:
         print(o.tolist())

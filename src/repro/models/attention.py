@@ -327,6 +327,33 @@ def cache_update(cache_k, cache_v, k_new, v_new, length, rolling: bool):
     return ck, cv
 
 
+def gather_kv_pages(pool: jax.Array, rows: jax.Array) -> jax.Array:
+    """Assemble one slot's contiguous KV view from its page-table rows.
+
+    pool [P, G, page, KV, D] (P physical pages, shared across the slot
+    table), rows [n] int32 page ids (NULL rows gather the permanently-zero
+    page 0).  Returns [G, 1, n*page, KV, D] — the SAME shape as the slot's
+    contiguous cache entry, so :func:`decode_attention` /
+    :func:`decode_attention_concat` run on it unchanged; positions past the
+    slot's length are zeros and masked out exactly as an unpaged cache's
+    unwritten tail is.
+    """
+    n = rows.shape[0]
+    _, G, page, KV, D = pool.shape
+    v = jnp.take(pool, rows, axis=0)  # [n, G, page, KV, D]
+    return v.transpose(1, 0, 2, 3, 4).reshape(G, 1, n * page, KV, D)
+
+
+def extract_kv_page(view: jax.Array, wp: jax.Array, page: int) -> jax.Array:
+    """The one page a chunk-aligned write touched, cut back out of the
+    written view [G, 1, C, KV, D] at slot-local page index ``wp`` — the
+    engine scatters it into the pool (writes are page-aligned by
+    construction: prefill chunks divide the page size and the ragged tail
+    is single-token)."""
+    sl = jax.lax.dynamic_slice_in_dim(view, wp * page, page, axis=2)
+    return sl[:, 0]  # [G, page, KV, D]
+
+
 def decode_attention(
     q: jax.Array,
     cache_k: jax.Array,

@@ -238,6 +238,41 @@ def encode_extend(params, cfg: ModelConfig, src_chunk: jax.Array, cache: Seq2Seq
     )
 
 
+def init_memory_pools(cfg: ModelConfig, phys_pages: int, page_size: int):
+    """Paged encdec memory: a pool of encoder-state pages plus the matching
+    src_mask pages — [phys_pages, page_size, h] / [phys_pages, page_size].
+    A source sentence reserves ``ceil(src_len / page_size)`` pages instead of
+    a full ``max_len`` memory stripe (decode never writes the memory, so the
+    reservation is exactly the prompt's length)."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return (
+        jnp.zeros((phys_pages, page_size, cfg.d_model), dt),
+        jnp.zeros((phys_pages, page_size), bool),
+    )
+
+
+def paged_seq2seq_view(one: Seq2SeqCache, pools, rows: jax.Array) -> Seq2SeqCache:
+    """One slot's decodable cache: gather its page rows into the contiguous
+    [1, n*page, h] memory (+mask) view ``decode_step``/``encode_extend``
+    already consume; ``one`` carries the per-slot LSTM states, carry and
+    length with zero-capacity memory placeholders."""
+    mem_pool, msk_pool = pools
+    n, page = rows.shape[0], mem_pool.shape[1]
+    mem = jnp.take(mem_pool, rows, axis=0).reshape(1, n * page, mem_pool.shape[2])
+    msk = jnp.take(msk_pool, rows, axis=0).reshape(1, n * page)
+    return one._replace(memory=mem, src_mask=msk)
+
+
+def split_paged_seq2seq(new_cache: Seq2SeqCache, one: Seq2SeqCache, wp: jax.Array, page_size: int):
+    """Undo :func:`paged_seq2seq_view` after an encode chunk: per-slot state
+    keeps the updated LSTM carries with the zero-capacity memory placeholders
+    restored, and the single written page (slot-local index ``wp``) comes out
+    for the engine's scatter into the pools."""
+    mem = jax.lax.dynamic_slice_in_dim(new_cache.memory, wp * page_size, page_size, axis=1)[0]
+    msk = jax.lax.dynamic_slice_in_dim(new_cache.src_mask, wp * page_size, page_size, axis=1)[0]
+    return new_cache._replace(memory=one.memory, src_mask=one.src_mask), (mem, msk)
+
+
 def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Seq2SeqCache, *, stage_kernel: str = "jnp", pin=None):
     """One serving decode step: embed ``token`` [B], advance the decoder
     LSTM cells, run the attention-softmax head against the cached memory.

@@ -311,6 +311,63 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int, window: Optional[int
 
 
 # ---------------------------------------------------------------------------
+# paged KV: pool init + assemble/split around the unchanged decode step
+# ---------------------------------------------------------------------------
+
+
+def init_kv_pools(cfg: ModelConfig, phys_pages: int, page_size: int):
+    """Fixed KV page pools, one (k, v) pair per 'attn' position-in-group —
+    each [phys_pages, G, page_size, KV, D] — and ``()`` for recurrent
+    positions (their O(1) state stays per-slot).  One logical page id names
+    the same row of EVERY pool (layers share the page table, so the
+    host-side allocator tracks one table, not one per entry)."""
+    G = cfg.num_layers // cfg.layer_group
+    pools = []
+    for kind in block_pattern(cfg):
+        if kind == "attn":
+            z = jnp.zeros((phys_pages, G, page_size, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16)
+            pools.append((z, z))
+        else:
+            pools.append(())
+    return tuple(pools)
+
+
+def paged_cache_view(cfg: ModelConfig, one: LMCache, pools, rows: jax.Array) -> LMCache:
+    """One slot's decodable cache: gather its page-table ``rows`` from each
+    KV pool into the contiguous [G, 1, C, KV, D] view the decode step already
+    consumes (``one`` carries the slot's recurrent entries and length; its
+    attention entries are zero-capacity placeholders)."""
+    kinds = block_pattern(cfg)
+    entries = []
+    for kind, e, pool in zip(kinds, one.entries, pools):
+        if kind == "attn":
+            pk, pv = pool
+            entries.append((attn.gather_kv_pages(pk, rows), attn.gather_kv_pages(pv, rows)))
+        else:
+            entries.append(e)
+    return LMCache(entries=tuple(entries), length=one.length)
+
+
+def split_paged_cache(cfg: ModelConfig, new_cache: LMCache, one: LMCache, wp: jax.Array, page_size: int):
+    """Undo :func:`paged_cache_view` after a step: the per-slot state keeps
+    the (updated) recurrent entries + length with the zero-capacity attention
+    placeholders restored from ``one``, and the single page the step wrote
+    (slot-local page index ``wp``) is extracted per entry for the engine's
+    scatter back into the pools."""
+    kinds = block_pattern(cfg)
+    entries, pages = [], []
+    for kind, ne, oe in zip(kinds, new_cache.entries, one.entries):
+        if kind == "attn":
+            nk, nv = ne
+            pages.append((attn.extract_kv_page(nk, wp, page_size), attn.extract_kv_page(nv, wp, page_size)))
+            entries.append(oe)
+        else:
+            entries.append(ne)
+            pages.append(())
+    return LMCache(entries=tuple(entries), length=new_cache.length), tuple(pages)
+
+
+# ---------------------------------------------------------------------------
 # trunk
 # ---------------------------------------------------------------------------
 

@@ -1,5 +1,5 @@
 """Serving substrate: batched prefill/decode with KV caches & SSM states,
 plus the plan-driven continuous-batching engine (ServePlan)."""
 from repro.core.plan import ServePlan  # noqa: F401  (re-export: the serving vocabulary)
-from repro.serve.engine import ContinuousEngine, ServeEngine, serve_step_fn  # noqa: F401
+from repro.serve.engine import ContinuousEngine, RequestError, ServeEngine, serve_step_fn  # noqa: F401
 from repro.serve.sampling import greedy, make_sampler, temperature_sample  # noqa: F401

@@ -157,21 +157,28 @@ class ServeEngine:
     replace the loose kwargs (``ContinuousEngine`` is the fully plan-driven
     scheduler; this engine remains the static-batch prefill+decode loop)."""
 
-    def __init__(self, cfg: ModelConfig, params, *, plan: Optional[ServePlan] = None, mesh=None, strat=stg.Strategy.SINGLE, window=None, max_len=512):
+    def __init__(self, cfg: ModelConfig, params, *, plan: Optional[ServePlan] = None, mesh=None, strat=stg.Strategy.SINGLE, window=None, max_len=512, pad_to: int = 32):
         if plan is not None:
             plan.validate_for(cfg)
             mesh, strat = plan.mesh, plan.strategy
             window, max_len = plan.window, plan.max_len
+            pad_to = plan.prefill_chunk
         self.cfg, self.params = cfg, params
         self.window = window
         self.max_len = max_len
+        self.pad_to = max(1, pad_to)
         self._prefill = prefill_fn(cfg, strat=strat, mesh=mesh, window=window)
         self._step = serve_step_fn(cfg, strat=strat, mesh=mesh, window=window)
 
     def generate(self, prompt_tokens: jax.Array, steps: int, *, frontend=None, sampler=greedy, rng=None):
         """prompt_tokens [B, S] -> generated [B, steps]."""
         logits, cache, memory = self._prefill(self.params, prompt_tokens, frontend)
-        cache = pad_cache(self.cfg, cache, min(self.max_len, prompt_tokens.shape[1] + steps))
+        # round the padded capacity up to a pad_to (prefill_chunk) multiple:
+        # the decode step then compiles once per capacity BUCKET instead of
+        # once per distinct prompt+steps total (the extra tail positions are
+        # masked by the cache length, so generation is unchanged)
+        need = prompt_tokens.shape[1] + steps
+        cache = pad_cache(self.cfg, cache, min(self.max_len, -(-need // self.pad_to) * self.pad_to))
         if rng is not None:
             rng, sub = jax.random.split(rng)
             tok = sampler(logits, sub)
@@ -187,6 +194,17 @@ class ServeEngine:
             tok = sampler(logits) if sub is None else sampler(logits, sub)
             out.append(tok)
         return jnp.stack(out, axis=1)
+
+
+class RequestError(Exception):
+    """Per-request serving failure, returned IN the engine's output list
+    (never raised mid-loop): one malformed or over-capacity request must not
+    kill the serve loop and every in-flight slot with it.  ``reason`` says
+    why the request was rejected."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
 
 
 # ---------------------------------------------------------------------------
@@ -231,6 +249,46 @@ class _LMPolicy:
                 f"request needs {prompt_len + max_new} cache slots, full_kv capacity is {self.plan.max_len}"
             )
 
+    # -- paged state: positional KV in the page pool, recurrent per-slot ----
+
+    writes_pages_on_decode = True  # each decoded token appends one KV row
+
+    def cache_tokens_needed(self, prompt_len: int, max_new: int) -> int:
+        """Positional cache rows this request can ever touch (the paged
+        reservation): prompt + generation, capped at the slot view (a rolling
+        window reuses its buffer, so it never needs more than ``window``)."""
+        return min(prompt_len + max_new, self.plan.cache_capacity)
+
+    def paged_slot_state(self):
+        # zero-capacity attention entries: the positional KV lives in the
+        # pools; recurrent entries and the length counter stay per-slot
+        return tfm.init_cache(self.cfg, 1, 0, self._window)
+
+    def init_pools(self, phys_pages: int):
+        return tfm.init_kv_pools(self.cfg, phys_pages, self.plan.page_size)
+
+    def assemble(self, one, pools, rows):
+        return tfm.paged_cache_view(self.cfg, one, pools, rows)
+
+    def split_paged(self, new_cache, one, wp):
+        return tfm.split_paged_cache(self.cfg, new_cache, one, wp, self.plan.page_size)
+
+    def write_page(self, pos: int) -> int:
+        """Slot-local page index position ``pos``'s KV row lands in."""
+        if self._window is not None:
+            return (pos % self._window) // self.plan.page_size
+        return pos // self.plan.page_size
+
+    def pool_shardings(self, pools):
+        if self.plan.mesh is None:
+            return None
+        # KV pool rows [P, G, page, KV, D]: KV heads (dim 3) on the model
+        # axis with their parameters, page dim host-indexed/unsharded
+        return jax.tree.map(
+            lambda a: self.plan.page_pool_sharding(a.shape, model_dims=(3,) if a.ndim == 5 else ()),
+            pools,
+        )
+
 
 class _EncDecPolicy:
     """encdec_memory: the paper's seq2seq through the same engine — prefill
@@ -259,11 +317,197 @@ class _EncDecPolicy:
         if prompt_len > self.plan.max_len:
             raise ValueError(f"source length {prompt_len} exceeds memory capacity {self.plan.max_len}")
 
+    # -- paged state: the encoder memory in the page pool -------------------
+
+    writes_pages_on_decode = False  # decode reads the memory, never writes it
+
+    def cache_tokens_needed(self, prompt_len: int, max_new: int) -> int:
+        # only encode writes memory rows: the reservation is the source
+        # length — generation length costs no pages at all
+        return prompt_len
+
+    def paged_slot_state(self):
+        return s2s.init_seq2seq_cache(self.cfg, 1, 0)
+
+    def init_pools(self, phys_pages: int):
+        return s2s.init_memory_pools(self.cfg, phys_pages, self.plan.page_size)
+
+    def assemble(self, one, pools, rows):
+        return s2s.paged_seq2seq_view(one, pools, rows)
+
+    def split_paged(self, new_cache, one, wp):
+        return s2s.split_paged_seq2seq(new_cache, one, wp, self.plan.page_size)
+
+    def write_page(self, pos: int) -> int:
+        return pos // self.plan.page_size
+
+    def pool_shardings(self, pools):
+        if self.plan.mesh is None:
+            return None
+        # memory pool [P, page, h]: hidden (dim 2) on model with the Luong
+        # head's parameters; the bool mask pool stays fully replicated
+        return jax.tree.map(
+            lambda a: self.plan.page_pool_sharding(a.shape, model_dims=(2,) if a.ndim == 3 else ()),
+            pools,
+        )
+
 
 def _make_policy(cfg: ModelConfig, plan: ServePlan):
     if plan.cache_policy == "encdec_memory":
         return _EncDecPolicy(cfg, plan)
     return _LMPolicy(cfg, plan)
+
+
+# ---------------------------------------------------------------------------
+# page-pool allocator (host side)
+# ---------------------------------------------------------------------------
+
+
+class _PagePool:
+    """Host-side page-table allocator for the paged slot table (DESIGN.md §7).
+
+    Physical page ids: ``NULL`` (0) is permanently zero — unallocated table
+    rows gather it, so a slot's view past its reservation reads zeros exactly
+    like an unpaged cache's unwritten tail; ``TRASH`` (1) is the scatter
+    target for tick lanes with nothing to write (prefilling/free slots) and
+    is never gathered; ids >= ``RESERVED`` are the allocatable pool.  One
+    logical page id names the same row of EVERY entry pool.
+
+    Allocation happens entirely at admission: ``admit`` reserves (and the
+    engine zeroes) every page the request can touch, so freed pages — the
+    only ones that may hold recycle poison — are never gathered by anyone.
+    With ``share_prefixes`` on, full prompt pages are registered as refcounted
+    prefix chains at the writer's prefill COMPLETION; a later request whose
+    prompt extends a registered chain takes a reference instead of new pages
+    and skips prefilling the shared tokens.  ``prepare_write`` is the
+    copy-on-write seam: a write into a page with refs > 1 first moves the
+    writer onto a private copy.
+    """
+
+    NULL, TRASH, RESERVED = 0, 1, 2
+
+    def __init__(self, num_pages: int, page_size: int, pages_per_slot: int, max_slots: int, share_prefixes: bool = False):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.pages_per_slot = pages_per_slot
+        self.share = share_prefixes
+        self.table = np.zeros((max_slots, pages_per_slot), np.int32)  # NULL
+        self.refs = np.zeros(self.RESERVED + num_pages, np.int32)
+        self.free = list(range(self.RESERVED, self.RESERVED + num_pages))
+        self.chains: dict = {}  # full-page prompt-prefix key -> page id (one ref each)
+        self.chain_order: list = []  # FIFO eviction under allocation pressure
+
+    def _prefix_keys(self, prompt) -> list:
+        toks = np.asarray(prompt, np.int64)
+        return [
+            toks[: (i + 1) * self.page_size].tobytes()
+            for i in range(len(toks) // self.page_size)
+        ]
+
+    def _decref(self, page: int, freed: list):
+        self.refs[page] -= 1
+        if self.refs[page] == 0:
+            self.free.append(page)
+            freed.append(page)
+
+    def _evict_one_chain(self, freed: list) -> bool:
+        if not self.chain_order:
+            return False
+        key = self.chain_order.pop(0)
+        self._decref(self.chains.pop(key), freed)
+        return True
+
+    def admit(self, slot: int, prompt, need_tokens: int):
+        """Reserve slot ``slot``'s pages for a request that can touch
+        ``need_tokens`` positional rows.  Returns ``((skip_tokens, fresh),
+        freed)`` — ``skip_tokens`` prompt tokens are already cached in shared
+        pages, ``fresh`` pages must be zeroed before any gather — or
+        ``(None, freed)`` when the pool is momentarily out of pages (the
+        request waits at the queue head).  Raises ValueError when the request
+        can NEVER fit.  ``freed`` collects chain-eviction casualties for the
+        caller's poison mask."""
+        need = max(1, -(-need_tokens // self.page_size))
+        if need > self.pages_per_slot or need > self.num_pages:
+            raise ValueError(
+                f"request needs {need} pages ({need_tokens} tokens at page_size="
+                f"{self.page_size}); the pool holds {self.num_pages} and a slot's "
+                f"table {self.pages_per_slot}"
+            )
+        shared: list = []
+        if self.share:
+            for key in self._prefix_keys(prompt):
+                page = self.chains.get(key)
+                if page is None or len(shared) >= need:
+                    break
+                shared.append(page)
+        # take the shared refs BEFORE relieving pressure: chain eviction then
+        # cannot free a page this request just matched
+        for p in shared:
+            self.refs[p] += 1
+        freed: list = []
+        fresh_needed = need - len(shared)
+        while len(self.free) < fresh_needed and self._evict_one_chain(freed):
+            pass
+        if len(self.free) < fresh_needed:
+            for p in shared:
+                self._decref(p, freed)
+            return None, freed
+        fresh = [self.free.pop(0) for _ in range(fresh_needed)]
+        for p in fresh:
+            self.refs[p] = 1
+        row = shared + fresh
+        self.table[slot, : len(row)] = row
+        self.table[slot, len(row):] = self.NULL
+        return (len(shared) * self.page_size, fresh), freed
+
+    def complete_prefill(self, slot: int, prompt):
+        """The writer finished prefilling: its full prompt pages now hold
+        exactly that prefix's KV, so register them as shareable chains (a
+        chain holds one ref; matching is only ever against COMPLETE
+        prefixes — a request admitted while its twin still prefills simply
+        shares nothing)."""
+        if not self.share:
+            return
+        for i, key in enumerate(self._prefix_keys(prompt)):
+            if i >= self.pages_per_slot or key in self.chains:
+                continue
+            page = int(self.table[slot, i])
+            if page == self.NULL:
+                break
+            self.chains[key] = page
+            self.chain_order.append(key)
+            self.refs[page] += 1
+
+    def prepare_write(self, slot: int, wp: int, freed: list):
+        """Copy-on-write preflight: the slot is about to write into its page
+        ``wp``.  Returns ``(src, dst)`` when that page is shared (refs > 1) —
+        the engine copies src -> dst in the pools before the write — else
+        None.  The table is retargeted to the private copy here."""
+        page = int(self.table[slot, wp])
+        if page == self.NULL:
+            raise RuntimeError(f"slot {slot} writes page {wp} outside its reservation")
+        if self.refs[page] <= 1:
+            return None
+        while not self.free and self._evict_one_chain(freed):
+            pass
+        if not self.free:
+            # cannot happen under reserve-at-admission (every writable page
+            # was counted in some slot's reservation), but fail loudly
+            raise RuntimeError("page pool exhausted during copy-on-write")
+        dst = self.free.pop(0)
+        self.refs[dst] = 1
+        self._decref(page, freed)
+        self.table[slot, wp] = dst
+        return page, dst
+
+    def retire(self, slot: int, freed: list):
+        """Drop the slot's references; pages nobody else holds return to the
+        free list (and to ``freed`` — refcounts hit zero exactly here)."""
+        for i in range(self.pages_per_slot):
+            page = int(self.table[slot, i])
+            if page != self.NULL:
+                self._decref(page, freed)
+        self.table[slot, :] = self.NULL
 
 
 # ---------------------------------------------------------------------------
@@ -375,8 +619,23 @@ class ContinuousEngine:
         self.policy = _make_policy(cfg, self.plan)
         K, C = self.plan.max_slots, self.plan.prefill_chunk
         self._K, self._C = K, C
-        self._single = self.policy.single_cache()
+        self._paged = self.plan.paged
+        if self._paged:
+            # positional state moves into fixed page pools; the per-slot
+            # state keeps recurrent entries + the length counter with
+            # zero-capacity positional placeholders (structure-stable, so
+            # every existing take/put/recycle path runs unchanged on it)
+            self._single = self.policy.paged_slot_state()
+            self._phys_pages = _PagePool.RESERVED + self.plan.pool_pages
+            self._pool_template = self.policy.init_pools(self._phys_pages)
+            self._pool_shardings = self.policy.pool_shardings(self._pool_template)
+        else:
+            self._single = self.policy.single_cache()
         self._shardings = slot_table_shardings(self.plan, self._single, cfg)
+        # per-run scheduling counters (reset by run(); pinned by tests)
+        self.prefill_steps = 0
+        self.cow_copies = 0
+        self.shared_prefix_tokens = 0
         if self.plan.mesh is not None:
             # place the parameters per the plan's strategy resolver: decode
             # is weight-streaming-bound, so under strategy='model' splitting
@@ -479,6 +738,100 @@ class ContinuousEngine:
                 jax.tree.map(lambda a: jnp.broadcast_to(a[None], (K,) + a.shape), single)
             )
 
+        # ---- paged variants: gather-on-read, scatter-on-write -------------
+
+        def pool_constrain(pools):
+            if getattr(self, "_pool_shardings", None) is None:
+                return pools
+            return jax.tree.map(jax.lax.with_sharding_constraint, pools, self._pool_shardings)
+
+        def scatter_pages(pools, pages, dst):
+            # dst: scalar page id (prefill) or [K] ids (tick; TRASH for lanes
+            # with nothing to write — reserved, never gathered, so duplicate
+            # TRASH writes are harmless)
+            return jax.tree.map(
+                lambda pool, page: pool.at[dst].set(page.astype(pool.dtype)), pools, pages
+            )
+
+        def paged_prefill_step(params, caches, pools, slot, tokens, rows, wp, dst):
+            one = take(caches, slot)
+            logits, new_cache = self.policy.prefill_one(
+                params, tokens, self.policy.assemble(one, pools, rows)
+            )
+            new_one, pages = self.policy.split_paged(new_cache, one, wp)
+            return (
+                logits,
+                constrain(put(caches, new_one, slot)),
+                pool_constrain(scatter_pages(pools, pages, dst)),
+            )
+
+        def paged_decode_tick(sampler, params, caches, pools, tokens, active, rows, wps, dsts, rng):
+            # same poison discipline as the contiguous tick: non-decoding
+            # lanes COMPUTE on fresh per-slot values.  Their page-table rows
+            # are either live allocations (a slot mid-prefill: real, finite
+            # data) or NULL — the permanently-zero page — so gathers never
+            # touch a freed page's poison.
+            if self.poison_on_recycle:
+                safe = jax.tree.map(
+                    lambda full, f: jnp.where(_mask_like(active, full), full, f),
+                    caches, fresh_table(caches),
+                )
+            else:
+                safe = caches
+
+            def lane(tok, one, rows_k, wp_k):
+                view = self.policy.assemble(one, pools, rows_k)
+                logits, new_cache = self.policy.decode_one(params, tok, view)
+                new_one, pages = self.policy.split_paged(new_cache, one, wp_k)
+                return logits, new_one, pages
+
+            # pools enter the lanes as a closed-over (unbatched) value: reads
+            # gather per-lane rows, and the ONE write per lane is extracted
+            # inside the vmap and scattered once outside it — the pool never
+            # acquires a batch dim
+            logits, new, pages = jax.vmap(lane)(tokens[:, None], safe, rows, wps)
+            merged = jax.tree.map(
+                lambda old, upd: jnp.where(_mask_like(active, upd), upd.astype(old.dtype), old),
+                caches, new,
+            )
+            if self.policy.writes_pages_on_decode:
+                pools = scatter_pages(pools, pages, dsts)
+            step_logits = logits[:, 0]
+            if logits_sh is not None:
+                step_logits = jax.lax.with_sharding_constraint(step_logits, logits_sh)
+            toks = sampler(step_logits) if rng is None else sampler(step_logits, rng)
+            return toks, constrain(merged), pool_constrain(pools)
+
+        def paged_recycle(caches, pools, poison_mask, reset_mask, page_poison, page_reset, admit_lengths, use_sentinel):
+            # the contiguous recycle on the per-slot state, extended with (a)
+            # page-level masks over the pools — freed pages take the poison,
+            # admission-reserved pages are zeroed (reset wins where a page is
+            # freed and reallocated in the same update) — and (b) admitted
+            # lengths: a shared-prefix admission starts mid-prompt, so its
+            # length counter seeds at the skipped token count, not zero
+            fresh = fresh_table(caches)
+
+            def slot_leaf(full, f):
+                bad = jnp.full(full.shape, poison_scalar(full.dtype, use_sentinel), full.dtype)
+                out = jnp.where(_mask_like(poison_mask, full), bad, full)
+                return jnp.where(_mask_like(reset_mask, full), f, out)
+
+            caches = jax.tree.map(slot_leaf, caches, fresh)
+            caches = caches._replace(
+                length=jnp.where(reset_mask, admit_lengths.astype(caches.length.dtype), caches.length)
+            )
+
+            def pool_leaf(pool):
+                bad = jnp.full(pool.shape, poison_scalar(pool.dtype, use_sentinel), pool.dtype)
+                out = jnp.where(_mask_like(page_poison, pool), bad, pool)
+                return jnp.where(_mask_like(page_reset, pool), jnp.zeros_like(pool), out)
+
+            return constrain(caches), pool_constrain(jax.tree.map(pool_leaf, pools))
+
+        def copy_page(pools, src, dst):
+            # the COW page move: one physical row per entry pool
+            return pool_constrain(jax.tree.map(lambda pool: pool.at[dst].set(pool[src]), pools))
+
         # the table argument is donated everywhere it is updated: callers
         # rebind on every call, so the update aliases the input buffer and
         # the full slot table never round-trips through the host
@@ -491,6 +844,13 @@ class ContinuousEngine:
         self._recycle = jax.jit(recycle, donate_argnums=(0,), static_argnums=(3,))
         self._init_table = jax.jit(init_table)
         self._decode_tick = self._tick_for(greedy)
+        if self._paged:
+            self._paged_prefill = jax.jit(paged_prefill_step, donate_argnums=(1, 2))
+            self._paged_tick_fn = paged_decode_tick
+            self._paged_tick_cache: dict = {}
+            self._paged_recycle = jax.jit(paged_recycle, donate_argnums=(0, 1), static_argnums=(7,))
+            self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
+            self._init_pools = jax.jit(pool_constrain)
 
     def _tick_for(self, sampler):
         """The jitted (params, caches, tokens, active, rng) -> (tokens,
@@ -499,6 +859,15 @@ class ContinuousEngine:
         if tick is None:
             tick = jax.jit(functools.partial(self._tick_fn, sampler), donate_argnums=(1,))
             self._tick_cache[sampler] = tick
+        return tick
+
+    def _paged_tick_for(self, sampler):
+        """Paged twin of :meth:`_tick_for`: (params, caches, pools, tokens,
+        active, rows, wps, dsts, rng) -> (tokens, caches, pools)."""
+        tick = self._paged_tick_cache.get(sampler)
+        if tick is None:
+            tick = jax.jit(functools.partial(self._paged_tick_fn, sampler), donate_argnums=(1, 2))
+            self._paged_tick_cache[sampler] = tick
         return tick
 
     def _param_placements(self):
@@ -531,24 +900,53 @@ class ContinuousEngine:
         prompts = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
         max_news = [int(max_new)] * n if np.ndim(max_new) == 0 else [int(m) for m in max_new]
         self.plan.validate_batch(n)
-        for p, m in zip(prompts, max_news):
-            if len(p) < 1 or m < 1:
-                raise ValueError("each request needs a non-empty prompt and max_new >= 1")
-            self.policy.check_request(len(p), m)
+        outputs: List[Any] = [None] * n
+        queue: deque = deque()
+        for i, (p, m) in enumerate(zip(prompts, max_news)):
+            # a bad request is ITS OWN failure: it gets a RequestError in its
+            # output position and every other request keeps serving (raising
+            # here used to kill the whole loop, in-flight slots included)
+            try:
+                if len(p) < 1 or m < 1:
+                    raise ValueError("each request needs a non-empty prompt and max_new >= 1")
+                self.policy.check_request(len(p), m)
+            except ValueError as e:
+                outputs[i] = RequestError(str(e))
+                continue
+            queue.append(i)
 
+        self.prefill_steps = 0
+        self.cow_copies = 0
+        self.shared_prefix_tokens = 0
         caches = self._init_caches()
+        pools = self._init_pools(self._pool_template) if self._paged else None
+        pool = (
+            _PagePool(self.plan.pool_pages, self.plan.page_size, self.plan.pages_per_slot,
+                      self._K, self.plan.share_prefixes)
+            if self._paged else None
+        )
         slots = [_Slot() for _ in range(self._K)]
-        queue = deque(range(n))
-        outputs: List[Optional[np.ndarray]] = [None] * n
         cur_tok = np.zeros(self._K, np.int64)
         # retire/admit masks accumulate host-side and apply as ONE batched
-        # masked recycle update at the top of the next tick
+        # masked recycle update before the next step that consumes the table
         poison_pending = np.zeros(self._K, bool)
         admit_pending = np.zeros(self._K, bool)
+        admit_lengths = np.zeros(self._K, np.int32)
+        page_poison = np.zeros(self._phys_pages if self._paged else 0, bool)
+        page_reset = np.zeros(self._phys_pages if self._paged else 0, bool)
+
+        def note_freed(freed):
+            if self.poison_on_recycle:
+                for p in freed:
+                    page_poison[p] = True
 
         def retire(s: _Slot, k: int):
             outputs[s.req] = np.asarray(s.generated, np.int64)
             s.req, s.phase, s.generated = -1, "free", []
+            if pool is not None:
+                freed: list = []
+                pool.retire(k, freed)
+                note_freed(freed)
             if self.poison_on_recycle:
                 poison_pending[k] = True
 
@@ -568,47 +966,147 @@ class ContinuousEngine:
             s.phase = "decode"
             return rng
 
-        while queue or any(s.phase != "free" for s in slots):
-            # ---- admission (continuous: whenever a slot is free) ----------
+        def admit_free_slots():
             for k, s in enumerate(slots):
-                if s.phase == "free" and queue:
-                    s.req, s.pos, s.phase, s.generated = queue.popleft(), 0, "prefill", []
+                while s.phase == "free" and queue:
+                    i = queue[0]
+                    skip = 0
+                    if pool is not None:
+                        try:
+                            res, freed = pool.admit(
+                                k, prompts[i],
+                                self.policy.cache_tokens_needed(len(prompts[i]), max_news[i]),
+                            )
+                        except ValueError as e:
+                            note_freed([])
+                            outputs[i] = RequestError(str(e))
+                            queue.popleft()
+                            continue  # this slot is still free for the next request
+                        note_freed(freed)
+                        if res is None:
+                            return  # pool momentarily full: the head waits (FIFO)
+                        skip_tokens, fresh = res
+                        for p in fresh:
+                            page_reset[p] = True
+                        if self.policy.prompt_primes_logits:
+                            # always prefill >= 1 prompt token: the last one's
+                            # logits seed the first sampled token
+                            skip = min(skip_tokens, len(prompts[i]) - 1)
+                        else:
+                            skip = skip_tokens
+                        self.shared_prefix_tokens += skip
+                    s.req, s.pos, s.phase, s.generated = i, skip, "prefill", []
+                    queue.popleft()
                     admit_pending[k] = True
-            # ---- retire + admit: one batched masked update ----------------
-            if poison_pending.any() or admit_pending.any():
-                caches = self._recycle(
-                    caches, jnp.asarray(poison_pending), jnp.asarray(admit_pending),
-                    bool(getattr(jax.config, "jax_debug_nans", False)),
+                    admit_lengths[k] = skip
+                    break
+
+        def apply_recycle():
+            if not (poison_pending.any() or admit_pending.any()
+                    or page_poison.any() or page_reset.any()):
+                return
+            nonlocal caches, pools
+            use_sentinel = bool(getattr(jax.config, "jax_debug_nans", False))
+            if self._paged:
+                caches, pools = self._paged_recycle(
+                    caches, pools, jnp.asarray(poison_pending), jnp.asarray(admit_pending),
+                    jnp.asarray(page_poison), jnp.asarray(page_reset),
+                    jnp.asarray(admit_lengths), use_sentinel,
                 )
-                poison_pending[:] = False
-                admit_pending[:] = False
+                page_poison[:] = False
+                page_reset[:] = False
+            else:
+                caches = self._recycle(
+                    caches, jnp.asarray(poison_pending), jnp.asarray(admit_pending), use_sentinel
+                )
+            poison_pending[:] = False
+            admit_pending[:] = False
+
+        def cow_preflight(k: int, wp: int):
+            """Move slot k onto a private copy of its write page when shared."""
+            nonlocal pools
+            freed: list = []
+            cw = pool.prepare_write(k, wp, freed)
+            note_freed(freed)
+            if cw is not None:
+                pools = self._copy_page(pools, jnp.int32(cw[0]), jnp.int32(cw[1]))
+                self.cow_copies += 1
+
+        while queue or any(s.phase != "free" for s in slots):
+            progress = False
+            # ---- admission (continuous: whenever a slot is free), then the
+            # ---- batched retire+admit recycle BEFORE anything consumes it --
+            admit_free_slots()
+            apply_recycle()
             # ---- chunked prefill: one chunk per prefilling slot per tick --
             for k, s in enumerate(slots):
                 if s.phase != "prefill":
                     continue
+                progress = True
                 prompt = prompts[s.req]
                 step = self._C if len(prompt) - s.pos >= self._C else 1
                 chunk = jnp.asarray(prompt[s.pos : s.pos + step][None])
-                logits, caches = self._prefill_step(self.params, caches, jnp.int32(k), chunk)
+                if self._paged:
+                    wp = self.policy.write_page(s.pos)
+                    cow_preflight(k, wp)
+                    logits, caches, pools = self._paged_prefill(
+                        self.params, caches, pools, jnp.int32(k), chunk,
+                        jnp.asarray(pool.table[k]), jnp.int32(wp),
+                        jnp.int32(int(pool.table[k, wp])),
+                    )
+                else:
+                    logits, caches = self._prefill_step(self.params, caches, jnp.int32(k), chunk)
+                self.prefill_steps += 1
                 s.pos += step
                 if s.pos == len(prompt):
+                    if pool is not None:
+                        pool.complete_prefill(k, prompt)
                     rng = begin_decode(s, k, logits, rng)
+            # ---- slots retired during prefill (budget/EOS at begin_decode)
+            # ---- readmit NOW, and the recycle applies before the tick that
+            # ---- consumes the table — never one tick late ------------------
+            admit_free_slots()
+            apply_recycle()
             # ---- decode tick: one vmapped step over the whole table -------
             active = np.array([s.phase == "decode" for s in slots])
             if active.any():
+                progress = True
                 sub = None
                 if rng is not None:
                     rng, sub = jax.random.split(rng)
-                toks, caches = self._tick_for(sampler)(
-                    self.params, caches, jnp.asarray(cur_tok, jnp.int32), jnp.asarray(active), sub
-                )
+                if self._paged:
+                    wps = np.zeros(self._K, np.int32)
+                    dsts = np.full(self._K, _PagePool.TRASH, np.int32)
+                    for k, s in enumerate(slots):
+                        if s.phase != "decode":
+                            continue
+                        wp = self.policy.write_page(s.pos)
+                        wps[k] = wp
+                        if self.policy.writes_pages_on_decode:
+                            cow_preflight(k, wp)
+                            dsts[k] = int(pool.table[k, wp])
+                    toks, caches, pools = self._paged_tick_for(sampler)(
+                        self.params, caches, pools, jnp.asarray(cur_tok, jnp.int32),
+                        jnp.asarray(active), jnp.asarray(pool.table),
+                        jnp.asarray(wps), jnp.asarray(dsts), sub,
+                    )
+                else:
+                    toks, caches = self._tick_for(sampler)(
+                        self.params, caches, jnp.asarray(cur_tok, jnp.int32), jnp.asarray(active), sub
+                    )
                 toks = np.asarray(toks)
                 for k, s in enumerate(slots):
                     if s.phase != "decode":
                         continue
+                    s.pos += 1  # the tick wrote its input token's state
                     tok = int(toks[k])
                     s.generated.append(tok)
                     cur_tok[k] = tok
                     if (self.eos is not None and tok == self.eos) or len(s.generated) >= max_news[s.req]:
                         retire(s, k)
+            if not progress and not any(s.phase != "free" for s in slots) and queue:
+                # reserve-at-admission guarantees an all-free table can admit
+                # any request that passed the size check; reaching here means
+                # the allocator broke an invariant — fail loudly, not forever
+                raise RuntimeError("serve loop stalled: free slot table but the head request cannot admit")
         return outputs

@@ -249,19 +249,49 @@ INVARIANTS = {
 
 
 # ---------------------------------------------------------------------------
+# paged slot tables (marker ``serve_paged``; driven by tests/test_paged.py)
+# ---------------------------------------------------------------------------
+
+PAGE_SIZE = 4  # harness page size: multiple of prefill_chunk=4, divides window=8
+
+
+def assert_paged_parity(name: str) -> None:
+    """Paged engine == contiguous engine, token for token, with poisoned
+    recycling and more requests than slots — at the full pool AND at a pool
+    HALF the contiguous footprint (requests then wait on pages, not just on
+    slots, so the free-list recycle path is exercised)."""
+    case = REGISTRY[name]
+    prompts = prompts_for(case, seed=8) * 2  # > max_slots -> recycling
+    plain = make_engine(case).run(prompts, case.max_new)
+    full_pages = make_plan(case).max_slots * (make_plan(case).cache_capacity // PAGE_SIZE)
+    for num_pages in (None, max(make_plan(case).cache_capacity // PAGE_SIZE, full_pages // 2)):
+        eng = make_engine(
+            case, page_size=PAGE_SIZE, num_pages=num_pages,
+            engine_kwargs={"poison_on_recycle": True},
+        )
+        outs = eng.run(prompts, case.max_new)
+        for i, (a, b) in enumerate(zip(outs, plain)):
+            assert a.tolist() == b.tolist(), (
+                f"{name} req{i} paged(num_pages={num_pages}) {a.tolist()} != contiguous {b.tolist()}"
+            )
+
+
+# ---------------------------------------------------------------------------
 # sharded serving: forced multi-device subprocess battery
 # ---------------------------------------------------------------------------
 
 
-def run_sharded_case(name: str, *, devices: int = 8, mesh_kind: str = "data") -> dict:
+def run_sharded_case(name: str, *, devices: int = 8, mesh_kind: str = "data", paged: bool = False) -> dict:
     """Serve ``name`` in a subprocess with a forced ``devices``-device CPU
     host (the main pytest process keeps its single-device view): once under
     a sharded plan and once with no mesh, plus poisoned-slot recycling under
     sharding.  ``mesh_kind`` picks how the mesh is spent: 'data' = slot
     table over all devices; 'model' = weights/caches/head over a model axis
     fitted to the config; 'hybrid' = (2, fitted) slot x model split.
-    Returns the subprocess' JSON record; callers assert sharded ==
-    single-device."""
+    ``paged`` serves the SHARDED engine off the page pool while the plain
+    reference stays contiguous — sharded-paged vs single-contiguous parity
+    in one shot.  Returns the subprocess' JSON record; callers assert
+    sharded == single-device."""
     assert mesh_kind in ("data", "model", "hybrid"), mesh_kind
     code = textwrap.dedent(
         f"""
@@ -283,15 +313,16 @@ def run_sharded_case(name: str, *, devices: int = 8, mesh_kind: str = "data") ->
         else:
             msz = stg.fit_model_axis(cfg, case.cache_policy, max(1, K // 2))
             mesh, strat = jax.make_mesh((2, msz), ("data", "model")), "hybrid"
+        pk = dict(page_size=sh.PAGE_SIZE) if {paged!r} else dict()
         prompts = sh.prompts_for(case, seed=5)
-        sharded = sh.make_engine(case, strategy=strat, mesh=mesh, max_slots=K)
+        sharded = sh.make_engine(case, strategy=strat, mesh=mesh, max_slots=K, **pk)
         plain = sh.make_engine(case, max_slots=K)
         out_s = [o.tolist() for o in sharded.run(prompts, case.max_new)]
         out_p = [o.tolist() for o in plain.run(prompts, case.max_new)]
         # poisoned-slot recycling under sharding: more requests than slots
         many = prompts * (K // len(prompts) + 2)
         poi = sh.make_engine(
-            case, strategy=strat, mesh=mesh, max_slots=K,
+            case, strategy=strat, mesh=mesh, max_slots=K, **pk,
             engine_kwargs={{"poison_on_recycle": True}},
         ).run(many, case.max_new)
         ref = sh.make_engine(case, max_slots=K).run(many, case.max_new)
@@ -365,3 +396,6 @@ register(
         engine_kwargs=dict(bos=1, eos=None),
     )
 )
+
+# every positional policy serves paged; 'recurrent' has no pages to manage
+PAGED_CASES = tuple(n for n in all_names() if REGISTRY[n].cache_policy != "recurrent")

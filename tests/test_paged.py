@@ -1,0 +1,126 @@
+"""Paged KV slot tables (``ServePlan.page_size``): greedy parity against
+the contiguous engine for every positional cache policy, the 50%-footprint
+admission acceptance case, copy-on-write prefix sharing (skipped prefill
+chunks pinned by step count), and the forced-8-device sharded-paged battery.
+Everything here is marked ``serve_paged`` and runs in its own CI step."""
+import numpy as np
+import pytest
+
+import serve_harness as sh
+
+pytestmark = pytest.mark.serve_paged
+
+
+def _rng_prompt(rng, vocab, n):
+    return rng.integers(3, vocab, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# parity battery: every positional cache_policy x family case
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sh.PAGED_CASES)
+def test_paged_decode_parity(name):
+    """Paged == contiguous, token for token, at the full pool and at a pool
+    half the contiguous footprint, with poisoned page recycling."""
+    sh.assert_paged_parity(name)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: half-footprint pool admits the same skewed stream
+# ---------------------------------------------------------------------------
+
+
+def test_half_footprint_pool_serves_skewed_stream():
+    """page_size=16 and num_pages=4 give the paged engine a 64-token pool —
+    exactly 50% of the contiguous engine's max_slots*max_len = 128-token
+    footprint — yet a skewed-length stream (a few long prompts among many
+    short ones) is admitted and served with full greedy parity: admission
+    capacity is paid per page actually needed, not per ``max_len``."""
+    case = sh.REGISTRY["transformer-full_kv"]
+    cfg, _ = sh.build(case.arch)
+    rng = np.random.default_rng(16)
+    lens = [20, 5, 5, 5, 24, 6, 6, 6]
+    prompts = [_rng_prompt(rng, cfg.vocab_size, n) for n in lens]
+    paged = sh.make_engine(
+        case, max_slots=4, page_size=16, num_pages=4,
+        engine_kwargs={"poison_on_recycle": True},
+    )
+    assert paged.plan.pool_pages * 16 == (4 * 32) // 2  # half the footprint
+    outs = paged.run(prompts, 4)
+    plain = sh.make_engine(case, max_slots=4).run(prompts, 4)
+    for i, (a, b) in enumerate(zip(outs, plain)):
+        assert a.tolist() == b.tolist(), f"req{i} (len {lens[i]}) diverged at half footprint"
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write prefix sharing
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_sharing_skips_shared_prefill_chunks():
+    """Two requests sharing a 2-page (8-token) prompt prefix: the second is
+    admitted after the first finished prefill (a small filler request spaces
+    them out), matches the registered prefix chain, and skips the shared
+    full pages — pinned by the engine's prefill-step counter, two chunk
+    steps cheaper than the same schedule without sharing — while decoding
+    the exact contiguous-engine tokens."""
+    case = sh.REGISTRY["transformer-full_kv"]
+    cfg, _ = sh.build(case.arch)
+    rng = np.random.default_rng(88)
+    prefix = _rng_prompt(rng, cfg.vocab_size, 8)  # 2 full pages at ps=4
+    a = np.concatenate([prefix, _rng_prompt(rng, cfg.vocab_size, 4)])
+    filler = _rng_prompt(rng, cfg.vocab_size, 2)
+    b = np.concatenate([prefix, _rng_prompt(rng, cfg.vocab_size, 3)])
+    prompts, budgets = [a, filler, b], [8, 3, 4]
+
+    plain = sh.make_engine(case).run(prompts, budgets)
+    base = sh.make_engine(case, page_size=4)
+    base_outs = base.run(prompts, budgets)
+    eng = sh.make_engine(case, page_size=4, share_prefixes=True)
+    outs = eng.run(prompts, budgets)
+
+    for i, (p, n, s) in enumerate(zip(plain, base_outs, outs)):
+        assert p.tolist() == n.tolist() == s.tolist(), f"req{i}: prefix sharing changed tokens"
+    assert eng.shared_prefix_tokens >= 8, eng.shared_prefix_tokens
+    assert eng.prefill_steps <= base.prefill_steps - 2, (
+        f"sharing saved no prefill work: {eng.prefill_steps} vs {base.prefill_steps}"
+    )
+
+
+def test_identical_prompts_trigger_copy_on_write():
+    """An identical repeated prompt shares every full page but must keep at
+    least one token to prefill (the logits seed), so its resume step writes
+    into a still-shared page — the engine must copy that page before the
+    write (cow_copies pinned) and still emit the contiguous tokens."""
+    case = sh.REGISTRY["transformer-full_kv"]
+    cfg, _ = sh.build(case.arch)
+    p = _rng_prompt(np.random.default_rng(9), cfg.vocab_size, 8)
+    prompts = [p, p.copy()]
+    eng = sh.make_engine(case, max_slots=1, page_size=4, share_prefixes=True)
+    outs = eng.run(prompts, 4)
+    plain = sh.make_engine(case, max_slots=1).run(prompts, 4)
+    for a, b in zip(outs, plain):
+        assert a.tolist() == b.tolist()
+    assert eng.cow_copies >= 1, "shared-page write never copied"
+    assert eng.shared_prefix_tokens >= 7
+
+
+# ---------------------------------------------------------------------------
+# forced-8-device sharded paged serving
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mesh_kind", ("data", "model", "hybrid"))
+def test_sharded_paged_decode_parity(mesh_kind):
+    """The paged engine under a forced 8-device mesh — slot-sharded, model
+    axis (KV-head-sharded pools), and hybrid — produces exactly the tokens
+    of the single-device CONTIGUOUS engine, including poisoned page
+    recycling under sharding."""
+    rec = sh.run_sharded_case("transformer-full_kv", mesh_kind=mesh_kind, paged=True)
+    assert rec["device_count"] == 8
+    assert rec["sharded"] == rec["plain"], f"{mesh_kind}: sharded-paged tokens diverge"
+    assert rec["poisoned_sharded"] == rec["poisoned_plain"], (
+        f"{mesh_kind}: poisoned paged recycling under sharding diverges"
+    )

@@ -237,6 +237,150 @@ def test_pipeline_schedule_1f1b_depth_gate(S, NS, k):
     assert ob.total_ticks <= gp.total_ticks
 
 
+# ---------------------------------------------------------------------------
+# _PagePool invariants: the host-side page allocator behind paged serving.
+# Pure numpy bookkeeping — no jax arrays — so these run dense and fast.
+# ---------------------------------------------------------------------------
+
+
+def _check_page_pool(pool, share):
+    """Global conservation: refs == table references + chain references;
+    a page is on the free list iff its refcount is 0; NULL/TRASH are never
+    referenced or allocated; without sharing no page belongs to two slots."""
+    assert pool.refs[pool.NULL] == 0 and pool.refs[pool.TRASH] == 0
+    counts = np.zeros_like(pool.refs)
+    owners: dict = {}
+    for k, row in enumerate(pool.table):
+        for p in map(int, row):
+            if p == pool.NULL:
+                continue
+            assert p >= pool.RESERVED
+            counts[p] += 1
+            owners.setdefault(p, set()).add(k)
+    for page in pool.chains.values():
+        counts[page] += 1
+    np.testing.assert_array_equal(pool.refs, counts)
+    assert len(pool.chains) == len(pool.chain_order) == len(set(pool.chain_order))
+    assert len(set(pool.free)) == len(pool.free)
+    for p in range(pool.RESERVED, pool.RESERVED + pool.num_pages):
+        assert (pool.refs[p] == 0) == (p in pool.free)
+    if not share:
+        for p, ks in owners.items():
+            assert len(ks) == 1, f"page {p} owned by non-sharing slots {sorted(ks)}"
+
+
+@pytest.mark.serve_paged
+@SET
+@given(hst.integers(0, 2**31 - 1), hst.booleans())
+def test_page_pool_lifecycle_invariants(seed, share):
+    """Random admit / write / retire interleavings hold the conservation
+    invariants at every step; copy-on-write always leaves the writer with a
+    private (refs == 1) page; impossible requests raise instead of
+    corrupting state; draining everything returns every allocatable page."""
+    from repro.serve.engine import _PagePool
+
+    rng = np.random.default_rng(seed)
+    ps, pps, K = 2, 3, 2
+    num_pages = int(rng.integers(pps, 11))
+    pool = _PagePool(num_pages, ps, pps, K, share_prefixes=share)
+    live: dict = {}
+    for _ in range(50):
+        _check_page_pool(pool, share)
+        free_slots = [k for k in range(K) if k not in live]
+        op = int(rng.integers(0, 3))
+        if op == 0 and free_slots:
+            k = free_slots[0]
+            plen = int(rng.integers(1, pps * ps + 1))
+            prompt = rng.integers(0, 2, size=plen)
+            if rng.integers(0, 8) == 0:  # can-never-fit request
+                with pytest.raises(ValueError):
+                    pool.admit(k, prompt, 2 * pps * ps)
+                continue
+            need = min(max(1, plen + int(rng.integers(0, 3))), pps * ps)
+            res, freed = pool.admit(k, prompt, need)
+            for p in freed:
+                assert pool.RESERVED <= p < pool.RESERVED + num_pages
+            if res is None:
+                continue  # pool momentarily full; request would wait
+            skip, fresh = res
+            pages = max(1, -(-need // ps))
+            assert skip % ps == 0 and skip <= plen
+            assert len(fresh) == pages - skip // ps
+            assert (pool.table[k, :pages] != pool.NULL).all()
+            assert (pool.table[k, pages:] == pool.NULL).all()
+            prompt_pages = -(-plen // ps)
+            st = {"prompt": prompt, "pages": pages, "wp": skip // ps, "done": False}
+            if st["wp"] >= prompt_pages:  # fully shared prompt: nothing to prefill
+                pool.complete_prefill(k, prompt)
+                st["done"] = True
+            live[k] = st
+        elif op == 1 and live:
+            k = sorted(live)[int(rng.integers(0, len(live)))]
+            st = live[k]
+            if st["wp"] >= st["pages"]:
+                continue
+            freed: list = []
+            before = int(pool.table[k, st["wp"]])
+            res = pool.prepare_write(k, st["wp"], freed)
+            after = int(pool.table[k, st["wp"]])
+            if res is None:
+                assert after == before
+            else:
+                src, dst = res
+                assert src == before and dst == after and dst != src
+            assert pool.refs[after] == 1  # the writer owns its page privately
+            st["wp"] += 1
+            if not st["done"] and st["wp"] >= -(-len(st["prompt"]) // ps):
+                pool.complete_prefill(k, st["prompt"])
+                st["done"] = True
+        elif op == 2 and live:
+            k = sorted(live)[int(rng.integers(0, len(live)))]
+            freed = []
+            pool.retire(k, freed)
+            assert (pool.table[k] == pool.NULL).all()
+            del live[k]
+    for k in list(live):
+        pool.retire(k, [])
+    while pool.chain_order:
+        pool._evict_one_chain([])
+    _check_page_pool(pool, share)
+    assert sorted(pool.free) == list(range(pool.RESERVED, pool.RESERVED + num_pages))
+    assert (pool.refs == 0).all()
+
+
+@pytest.mark.serve_paged
+@SET
+@given(hst.lists(hst.integers(0, 1), min_size=2, max_size=12), hst.integers(0, 2**31 - 1))
+def test_page_pool_prefix_sharing_full_pages_only(bits, seed):
+    """A twin admitted after the writer completed shares exactly the FULL
+    prompt pages (never a partial page), a divergent write into a shared
+    page copies before writing, and draining frees every page."""
+    from repro.serve.engine import _PagePool
+
+    ps, pps, total = 2, 6, 16
+    pool = _PagePool(total, ps, pps, 2, share_prefixes=True)
+    prompt = np.asarray(bits, np.int64)
+    (skip, _), _ = pool.admit(0, prompt, len(prompt))
+    assert skip == 0  # no chains registered yet
+    pool.complete_prefill(0, prompt)
+    (skip2, _), _ = pool.admit(1, prompt, len(prompt))
+    full = (len(prompt) // ps) * ps
+    assert skip2 == full
+    np.testing.assert_array_equal(pool.table[1, : full // ps], pool.table[0, : full // ps])
+    if full:
+        res = pool.prepare_write(1, 0, [])
+        assert res is not None, "write into a shared page must copy"
+        _, dst = res
+        assert int(pool.table[1, 0]) == dst != int(pool.table[0, 0])
+        assert pool.refs[dst] == 1
+    pool.retire(0, [])
+    pool.retire(1, [])
+    while pool.chain_order:
+        pool._evict_one_chain([])
+    assert sorted(pool.free) == list(range(pool.RESERVED, pool.RESERVED + total))
+    assert (pool.refs == 0).all()
+
+
 @SET
 @given(hst.integers(0, 2**31 - 1), hst.integers(1, 4))
 def test_hlo_shape_bytes_parser(seed, n):

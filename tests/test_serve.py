@@ -160,6 +160,71 @@ def test_early_eos_recycles_slot():
 
 
 # ---------------------------------------------------------------------------
+# serve-path regressions: per-request rejection, compile buckets, same-tick
+# retire+readmit
+# ---------------------------------------------------------------------------
+
+
+def test_oversized_request_fails_alone():
+    """One over-capacity request must NOT kill the serve loop: it comes back
+    as a RequestError IN the output list while every other request decodes
+    exactly as if the bad one were never submitted (the old behavior raised
+    ValueError mid-loop, dropping all in-flight slots)."""
+    from repro.serve.engine import RequestError
+
+    case = sh.REGISTRY["transformer-full_kv"]
+    good = sh.prompts_for(case, seed=11)
+    too_big = np.arange(3, 43, dtype=np.int32)  # 40 + max_new > max_len=32
+    outs = sh.make_engine(case).run([good[0], too_big, good[1]], 4)
+    ref = sh.make_engine(case).run(good, 4)
+    assert isinstance(outs[1], RequestError) and "cache" in outs[1].reason
+    assert outs[0].tolist() == ref[0].tolist()
+    assert outs[2].tolist() == ref[1].tolist()
+
+
+def test_static_engine_compiles_per_bucket_not_per_length():
+    """ServeEngine rounds the decode cache capacity up to a prefill_chunk
+    multiple, so requests with distinct prompt+steps totals that land in the
+    same bucket share ONE decode-step compilation (the old exact-fit padding
+    recompiled for every distinct total)."""
+    from repro.serve.engine import ServeEngine
+
+    cfg, params = sh.build("qwen3-1.7b")
+    plan = ServePlan(cache_policy="full_kv", max_len=64, prefill_chunk=8)
+    plan.validate_for(cfg)
+    eng = ServeEngine(cfg, params, plan=plan)
+    if not hasattr(eng._step, "_cache_size"):
+        pytest.skip("jit cache-size introspection unavailable on this jax")
+    rng = np.random.default_rng(13)
+    outs = []
+    for s, steps in ((5, 2), (6, 2), (3, 4)):  # totals 7, 8, 7 -> one 8-bucket
+        toks = jnp.asarray(rng.integers(3, cfg.vocab_size, size=(2, s)), jnp.int32)
+        outs.append(eng.generate(toks, steps))
+    assert eng._step._cache_size() == 1, (
+        f"decode step compiled {eng._step._cache_size()} times for one capacity bucket"
+    )
+    assert all(o.shape[0] == 2 for o in outs)
+
+
+def test_same_tick_retire_and_readmit_parity():
+    """A slot retired by one tick is recycled and readmitted before the NEXT
+    tick consumes it: alternating 1-token and 4-token budgets over 3x the
+    slot count forces retire+readmit on the same loop iteration, and every
+    output must still match serving that request alone (the old one-tick-late
+    recycle leaked the retired slot's state into the readmitted request)."""
+    case = sh.REGISTRY["transformer-full_kv"]
+    prompts = sh.prompts_for(case, seed=12) * 3  # 6 requests, max_slots=2
+    budgets = [1, 4] * 3
+    eng = sh.make_engine(case, engine_kwargs={"poison_on_recycle": True})
+    outs = eng.run(prompts, budgets)
+    for i, p in enumerate(prompts):
+        alone = sh.make_engine(case).run([p], budgets[i])[0]
+        assert outs[i].tolist() == alone.tolist(), (
+            f"req{i}: same-tick retire+readmit diverged from serving alone"
+        )
+
+
+# ---------------------------------------------------------------------------
 # sampling (serve/sampling.py)
 # ---------------------------------------------------------------------------
 
