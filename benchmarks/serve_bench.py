@@ -93,11 +93,11 @@ for K in [int(s) for s in slots_csv.split(",")]:
     caches = eng._init_caches()
     toks = jnp.ones((K,), jnp.int32)
     active = jnp.ones((K,), bool)
-    toks, caches = eng._decode_tick(eng.params, caches, toks, active, None)
+    toks, caches = eng._decode_tick(eng.params, caches, toks, active, None, jnp.int32(0))
     jax.block_until_ready(toks)  # compile + first tick
     t0 = time.perf_counter()
-    for _ in range(reps):
-        toks, caches = eng._decode_tick(eng.params, caches, jnp.asarray(toks, jnp.int32), active, None)
+    for i in range(reps):
+        toks, caches = eng._decode_tick(eng.params, caches, jnp.asarray(toks, jnp.int32), active, None, jnp.int32(i))
     jax.block_until_ready(toks)
     tick = (time.perf_counter() - t0) / reps
     pred = decode_tick_roofline(cfg, layout=layout, devices=devices, slots=K,
@@ -145,6 +145,71 @@ def paged_point():
                      f"{tok / dt:.1f}", f"tok/s over 12 reqs, {pool_note}"))
     record = {"kind": "paged_smoke", "page_size": 16, "num_pages": 8,
               "footprint_vs_contiguous": 0.5, **{m: s for m, s in stats.items()}}
+    return rows, record
+
+
+def spec_point(smoke: bool = True):
+    """Speculative vs plain greedy serving at skewed lengths, in-process.
+    The draft SHARES the target's parameters (a recurrent target drafting
+    for itself), so every draft token verifies and the accepted-tokens/step
+    counter hits its ceiling of draft_len+1 — the record pins that the
+    draft/verify machinery actually amortizes ticks, independent of how
+    well a separately-trained draft would guess.  Returns (rows, record);
+    the record (kind='spec_smoke') rides the bench trajectory."""
+    from repro.configs import get_config
+    from repro.core.plan import ServePlan
+    from repro.models import transformer as tfm
+    from repro.serve import ContinuousEngine
+
+    cfg = dataclasses.replace(get_config("xlstm-350m", smoke=True), dtype="float32")
+    params, _ = tfm.init_lm(jax.random.key(0), cfg)
+    rng = np.random.default_rng(3)
+    reqs = _requests(rng, cfg.vocab_size, "skewed", 8 if smoke else 16)
+    prompts = [p for p, _ in reqs]
+    budgets = [g for _, g in reqs]
+    draft_len = 3
+    rows, stats = [], {}
+    for mode, extra, ekw in (
+        ("plain", {}, {}),
+        ("spec", dict(draft_arch="xlstm-350m", draft_len=draft_len), dict(draft_params=params)),
+    ):
+        plan = ServePlan.for_config(cfg, max_slots=4, max_len=64, prefill_chunk=8, **extra)
+        eng = ContinuousEngine(cfg, params, plan, **ekw)
+        outs = eng.run(prompts, budgets)  # compile
+        t0 = time.perf_counter()
+        outs = eng.run(prompts, budgets)
+        dt = time.perf_counter() - t0
+        tok = sum(len(o) for o in outs)
+        acc = eng.spec_accepted / eng.spec_lane_rounds if eng.spec_lane_rounds else 1.0
+        stats[mode] = {"tok_per_s": round(tok / dt, 1), "tokens": tok,
+                       "accepted_per_step": round(acc, 2)}
+        note = f"accepted/step {acc:.2f}" if mode == "spec" else "plain greedy baseline"
+        rows.append((f"serve_spec_{mode}_skewed", f"{dt / tok * 1e6:.0f}",
+                     f"{tok / dt:.1f}", note))
+    record = {"kind": "spec_smoke", "draft_arch": "xlstm-350m", "draft_len": draft_len,
+              "accepted_per_step": stats["spec"]["accepted_per_step"],
+              **{m: s for m, s in stats.items()}}
+    return rows, record
+
+
+def spec_sweep(smoke: bool = True):
+    """Run spec_point and append its record to the bench trajectory (the
+    --spec CLI path; run() and the CI bench-smoke step both call this)."""
+    rows, record = spec_point(smoke=smoke)
+    try:
+        os.makedirs(os.path.dirname(TRAJECTORY), exist_ok=True)
+        traj = []
+        if os.path.exists(TRAJECTORY):
+            try:
+                with open(TRAJECTORY) as f:
+                    traj = json.load(f)
+            except ValueError:
+                traj = []
+        traj.append({"time": time.strftime("%Y-%m-%dT%H:%M:%S"), "records": [record]})
+        with open(TRAJECTORY, "w") as f:
+            json.dump(traj, f, indent=1)
+    except OSError:
+        pass  # read-only checkout: the CSV rows still report the point
     return rows, record
 
 
@@ -267,6 +332,7 @@ def run():
                 )
             )
     rows += mesh_sweep()[0]
+    rows += spec_sweep(smoke=False)[0]
     return rows
 
 
@@ -275,7 +341,14 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", action="store_true", help="run only the layout x slots decode-tick sweep")
+    ap.add_argument("--spec", action="store_true", help="run only the speculative-vs-plain point")
     ap.add_argument("--smoke", action="store_true", help="CI subset: smoke scale, 2 layouts, 1 slot count")
     args = ap.parse_args()
-    for row in (mesh_sweep(smoke=args.smoke)[0] if args.mesh else run()):
+    if args.mesh:
+        rows = mesh_sweep(smoke=args.smoke)[0]
+    elif args.spec:
+        rows = spec_sweep(smoke=args.smoke)[0]
+    else:
+        rows = run()
+    for row in rows:
         print(",".join(str(c) for c in row))

@@ -268,6 +268,7 @@ class ExecutionPlan:
 
 CACHE_POLICIES = ("full_kv", "window", "recurrent", "encdec_memory")
 ADMISSIONS = ("static", "continuous")
+ACCEPTANCES = ("greedy",)
 
 
 @dataclass(frozen=True)
@@ -316,6 +317,9 @@ class ServePlan:
     page_size: Optional[int] = None  # tokens per KV page (None = contiguous slots)
     num_pages: Optional[int] = None  # pool size in pages (None = full footprint)
     share_prefixes: bool = False  # COW prompt-prefix sharing across requests
+    draft_arch: Optional[str] = None  # speculative-decoding draft model (None = off)
+    draft_len: int = 0  # tokens drafted per speculative round
+    acceptance: str = "greedy"  # draft-acceptance rule
 
     def __post_init__(self):
         object.__setattr__(self, "strategy", stg.Strategy(self.strategy))
@@ -377,6 +381,38 @@ class ServePlan:
                     "evicts shared positions and the encdec encoder's carried LSTM "
                     "states cannot skip a prefix"
                 )
+        if self.acceptance not in ACCEPTANCES:
+            raise ValueError(f"acceptance must be one of {ACCEPTANCES}, got {self.acceptance!r}")
+        if self.draft_arch is None:
+            if self.draft_len:
+                raise ValueError("draft_len without draft_arch: set draft_arch to enable speculation")
+        else:
+            if self.draft_len < 1:
+                raise ValueError(f"draft_arch={self.draft_arch!r} needs draft_len >= 1, got {self.draft_len}")
+            if self.draft_len >= self.prefill_chunk:
+                # the verify pass IS the chunked extend step: one [B, draft_len+1]
+                # chunk (cur token + drafts) must ride the existing prefill-chunk
+                # machinery — in particular a paged verify span may straddle at
+                # most two pages, which draft_len+1 <= prefill_chunk <= page_size
+                # guarantees
+                raise ValueError(
+                    f"draft_len={self.draft_len} must be < prefill_chunk={self.prefill_chunk} "
+                    "(the verify chunk of draft_len+1 tokens rides the prefill-chunk step)"
+                )
+            if self.cache_policy == "encdec_memory":
+                raise ValueError(
+                    "speculative decoding does not serve cache_policy='encdec_memory': "
+                    "the Luong decode consumes exactly one token per step, so there is "
+                    "no chunked extend to verify drafts against"
+                )
+            if self.share_prefixes:
+                raise ValueError(
+                    "draft_arch with share_prefixes: speculative rollback retracts page "
+                    "reservations mid-request, which COW prefix chains cannot express — "
+                    "pick one"
+                )
+            if self.admission != "continuous":
+                raise ValueError("speculative decoding rides the continuous engine; admission='static' has no draft path")
         if self.mesh is not None:
             # an explicit mesh must never be quietly ignored: the slot table
             # (the vmapped batch axis of the decode tick) shards over the
@@ -456,6 +492,19 @@ class ServePlan:
 
         return "attn" in tfm.block_pattern(cfg)
 
+    def draft_config(self, cfg):
+        """The draft model's ModelConfig, resolved at the target's scale: the
+        smoke-reduced variant iff the target is smoke-reduced, compute dtype
+        matched so draft logits argmax in the target's precision."""
+        if self.draft_arch is None:
+            return None
+        import dataclasses
+
+        from repro.configs import get_config
+
+        d = get_config(self.draft_arch, smoke=cfg.name.endswith("-smoke"))
+        return dataclasses.replace(d, dtype=cfg.dtype, dropout=0.0)
+
     # -- validation ---------------------------------------------------------
 
     def validate_for(self, cfg) -> None:
@@ -519,6 +568,22 @@ class ServePlan:
                     f"share_prefixes on {cfg.name}: the arch carries sequential "
                     "(recurrent) per-slot state that cannot skip prefill — prefix "
                     "sharing needs an all-attention block pattern"
+                )
+        if self.draft_arch is not None:
+            from repro.models import transformer as tfm  # local: avoid cycle
+
+            dcfg = self.draft_config(cfg)
+            if dcfg.family == "seq2seq" or "attn" in tfm.block_pattern(dcfg):
+                raise ValueError(
+                    f"draft_arch={self.draft_arch!r} is not a recurrent-cache arch: "
+                    "the draft must tick in O(1) state (no attention KV, no encdec "
+                    "memory) or drafting costs as much as decoding"
+                )
+            if dcfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {dcfg.vocab_size} != target vocab {cfg.vocab_size}: "
+                    "draft tokens must be target tokens for the verify chunk to mean "
+                    "anything"
                 )
 
     def validate_batch(self, num_requests: int) -> None:
@@ -642,4 +707,7 @@ class ServePlan:
             page_size=self.page_size,
             num_pages=self.num_pages,
             share_prefixes=self.share_prefixes,
+            draft_arch=self.draft_arch,
+            draft_len=self.draft_len,
+            acceptance=self.acceptance,
         )

@@ -212,6 +212,17 @@ def param_shardings(specs: Any, shapes: Any, mesh: Optional[Mesh], strategy: Str
     return out
 
 
+def replicated_shardings(tree: Any, mesh: Optional[Mesh]) -> Any:
+    """Every-leaf-replicated NamedShardings (None without a mesh).  This is
+    the placement for a speculative DRAFT model's parameters: the draft
+    exists to be cheap per device program, so it never rides the ``model``
+    axis — each device keeps a full copy and drafts its own slot shard
+    without collectives, whatever the target's strategy does."""
+    if mesh is None:
+        return jax.tree.map(lambda _: None, tree)
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
 # ---------------------------------------------------------------------------
 # the paper's phase boundary
 # ---------------------------------------------------------------------------

@@ -168,9 +168,12 @@ class DecodeTickRoofline:
     weight_bytes: float
     replicas: int
     model_shards: int
+    accepted_per_tick: float = 1.0
+    draft_weight_bytes: float = 0.0
     weight_s: float = 0.0
     cache_s: float = 0.0
     page_gather_s: float = 0.0
+    draft_s: float = 0.0
     compute_s: float = 0.0
     dispatch_s: float = 0.0
     collective_s: float = 0.0
@@ -194,6 +197,8 @@ def decode_tick_roofline(
     window: Optional[int] = None,
     dtype_bytes: int = 4,
     page_size: Optional[int] = None,
+    accepted_per_tick: float = 1.0,
+    draft_weight_bytes: float = 0.0,
 ) -> DecodeTickRoofline:
     if layout not in SERVE_LAYOUTS:
         raise ValueError(f"layout must be one of {SERVE_LAYOUTS}, got {layout!r}")
@@ -208,7 +213,8 @@ def decode_tick_roofline(
     r = DecodeTickRoofline(
         arch=cfg.name, layout=layout, devices=devices, cores=cores, slots=slots,
         cache_policy=cache_policy, weight_bytes=W, replicas=replicas,
-        model_shards=model_shards,
+        model_shards=model_shards, accepted_per_tick=accepted_per_tick,
+        draft_weight_bytes=draft_weight_bytes,
     )
     streams = min(devices, cores)
     bw = streams * HOST_DEV_STREAM_BW
@@ -219,15 +225,24 @@ def decode_tick_roofline(
     # bytes.  The page size cancels out of the first-order term — the gather
     # touches pages_per_slot * page_size = cache_capacity rows regardless.
     r.page_gather_s = r.cache_s if page_size else 0.0
+    # speculative decoding: one tick is one draft/verify ROUND — the draft
+    # streams its (replicated) weights once per drafted token, the target
+    # still streams once (the verify chunk amortizes the target's weights
+    # over draft_len+1 positions), and the round commits accepted_per_tick
+    # tokens per slot.  Defaults (1.0 accepted, 0 draft bytes) reduce every
+    # term to the plain-tick model, so predict_serve_winner and the pinned
+    # bench trajectory are untouched by spec-aware calls elsewhere.
+    r.draft_s = draft_weight_bytes * accepted_per_tick / bw if draft_weight_bytes else 0.0
     r.compute_s = 2.0 * cfg.active_param_count() * slots / (streams * HOST_DEV_FLOPS)
     r.dispatch_s = HOST_DISPATCH_S if devices > 1 else 0.0
     r.collective_s = HOST_COLL_PER_SLOT_S * slots if model_shards > 1 else 0.0
-    memory_s = r.weight_s + r.cache_s + r.page_gather_s
+    memory_s = r.weight_s + r.cache_s + r.page_gather_s + r.draft_s
     r.tick_s = max(memory_s, r.compute_s) + r.dispatch_s + r.collective_s
-    r.tok_s = slots / r.tick_s if r.tick_s else 0.0
+    r.tok_s = slots * accepted_per_tick / r.tick_s if r.tick_s else 0.0
     terms = {
         "weights": r.weight_s, "cache": r.cache_s, "page_gather": r.page_gather_s,
-        "compute": r.compute_s, "dispatch": r.dispatch_s, "collective": r.collective_s,
+        "draft": r.draft_s, "compute": r.compute_s, "dispatch": r.dispatch_s,
+        "collective": r.collective_s,
     }
     r.bottleneck = max(terms, key=terms.get)
     return r

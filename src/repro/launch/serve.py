@@ -98,6 +98,13 @@ def main():
     ap.add_argument("--share-prefixes", action="store_true",
                     help="copy-on-write prefix sharing: requests with a common full-page "
                          "prompt prefix share pages and skip the shared prefill chunks")
+    ap.add_argument("--draft-arch", choices=ARCH_IDS, default=None,
+                    help="speculative decoding: recurrent-cache draft architecture "
+                         "(drafts --draft-len tokens per round; the target verifies "
+                         "them in one chunked extend step)")
+    ap.add_argument("--draft-len", type=int, default=None,
+                    help="draft tokens per speculative round (requires --draft-arch; "
+                         "must be < the fitted prefill chunk)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -138,6 +145,13 @@ def main():
                          share_prefixes=args.share_prefixes)
     elif args.num_pages is not None or args.share_prefixes:
         raise SystemExit("--num-pages/--share-prefixes require --page-size")
+    if args.draft_arch is not None:
+        if args.temperature > 0:
+            raise SystemExit("--draft-arch verifies greedy acceptance; drop --temperature")
+        overrides.update(draft_arch=args.draft_arch,
+                         draft_len=args.draft_len if args.draft_len is not None else 3)
+    elif args.draft_len is not None:
+        raise SystemExit("--draft-len requires --draft-arch")
     if args.cache_policy != "auto":
         overrides["cache_policy"] = args.cache_policy
     if args.window is not None:
@@ -186,7 +200,12 @@ def main():
         paged_note = f" | paged {plan.pool_pages}x{plan.page_size}"
         if plan.share_prefixes:
             paged_note += f" share({engine.shared_prefix_tokens} tok skipped, {engine.cow_copies} cow)"
-    print(f"[{cfg.name} | {plan.cache_policy} | {plan.admission}{mesh_note}{paged_note}] {len(outs)} requests, "
+    spec_note = ""
+    if plan.draft_arch is not None:
+        acc = engine.spec_accepted / max(1, engine.spec_lane_rounds)
+        spec_note = (f" | spec {plan.draft_arch} L={plan.draft_len} "
+                     f"({acc:.2f} accepted tok/step, {engine.spec_fallback_ticks} fallback)")
+    print(f"[{cfg.name} | {plan.cache_policy} | {plan.admission}{mesh_note}{paged_note}{spec_note}] {len(outs)} requests, "
           f"{tok} tokens in {dt:.2f}s ({tok / dt:.1f} tok/s)")
     for o in outs[:2]:
         print(o.tolist())

@@ -367,6 +367,30 @@ def split_paged_cache(cfg: ModelConfig, new_cache: LMCache, one: LMCache, wp: ja
     return LMCache(entries=tuple(entries), length=new_cache.length), tuple(pages)
 
 
+def split_paged_cache_span(
+    cfg: ModelConfig, new_cache: LMCache, one: LMCache, wp_a: jax.Array, wp_b: jax.Array, page_size: int
+):
+    """Two-page variant of :func:`split_paged_cache` for writes that may
+    straddle a page boundary (the speculative verify chunk starts at an
+    arbitrary mid-page position): extract the pages at slot-local indices
+    ``wp_a`` and ``wp_b``.  When the span stays inside one page the indices
+    coincide and the second extraction duplicates the first — the engine
+    routes the duplicate scatter to its trash page."""
+    kinds = block_pattern(cfg)
+    entries, pages_a, pages_b = [], [], []
+    for kind, ne, oe in zip(kinds, new_cache.entries, one.entries):
+        if kind == "attn":
+            nk, nv = ne
+            pages_a.append((attn.extract_kv_page(nk, wp_a, page_size), attn.extract_kv_page(nv, wp_a, page_size)))
+            pages_b.append((attn.extract_kv_page(nk, wp_b, page_size), attn.extract_kv_page(nv, wp_b, page_size)))
+            entries.append(oe)
+        else:
+            entries.append(ne)
+            pages_a.append(())
+            pages_b.append(())
+    return LMCache(entries=tuple(entries), length=new_cache.length), tuple(pages_a), tuple(pages_b)
+
+
 # ---------------------------------------------------------------------------
 # trunk
 # ---------------------------------------------------------------------------
@@ -556,10 +580,14 @@ def forward_decode(
     memory: Optional[jax.Array] = None,
     ctx: RunCtx = RunCtx(mode="decode"),
     phase_boundary: Callable = Identity,
+    all_positions: bool = False,
 ):
     """Decode step against the cache: one token ([B]) or a chunk ([B, s] —
     the chunked-prefill extend).  Returns (logits at the last position
-    [B, V], new_cache with length advanced by s)."""
+    [B, V], new_cache with length advanced by s).  With ``all_positions``
+    the logits cover EVERY chunk position ([B, s, V]) — the speculative
+    verify pass needs next-token predictions at each drafted offset, not
+    just the last."""
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     tokens = token if token.ndim == 2 else token[:, None]
     s = tokens.shape[1]
@@ -570,6 +598,10 @@ def forward_decode(
     positions = offs[None, :]
     x, new_cache, _ = run_trunk(params, cfg, x, ctx, cache, positions, memory)
     x = common.apply_norm(params["final_norm"], x, cfg.norm)
+    if all_positions:
+        xs = phase_boundary(x)
+        logits = common.unembed(lm_head_weight(params, cfg), xs)  # [B, s, V]
+        return logits, LMCache(entries=new_cache.entries, length=cache.length + s)
     x = phase_boundary(x[:, -1:])
     logits = common.unembed(lm_head_weight(params, cfg), x)[:, 0]
     return logits, LMCache(entries=new_cache.entries, length=cache.length + s)

@@ -243,6 +243,15 @@ class _LMPolicy:
 
     decode_one = prefill_one
 
+    def verify_chunk(self, params, tokens, cache):
+        """The speculative verify pass: the SAME chunked extend as
+        ``prefill_one`` but with logits at every chunk position — the target
+        must judge each drafted token, not just predict the next one."""
+        return tfm.forward_decode(
+            params, self.cfg, tokens, cache, ctx=self._ctx, phase_boundary=self._pb,
+            all_positions=True,
+        )
+
     def check_request(self, prompt_len: int, max_new: int):
         if self.plan.cache_policy == "full_kv" and prompt_len + max_new > self.plan.max_len:
             raise ValueError(
@@ -273,8 +282,14 @@ class _LMPolicy:
     def split_paged(self, new_cache, one, wp):
         return tfm.split_paged_cache(self.cfg, new_cache, one, wp, self.plan.page_size)
 
-    def write_page(self, pos: int) -> int:
-        """Slot-local page index position ``pos``'s KV row lands in."""
+    def split_paged_span(self, new_cache, one, wp_a, wp_b):
+        """Two-page split for the speculative verify (its write span may
+        straddle a page boundary)."""
+        return tfm.split_paged_cache_span(self.cfg, new_cache, one, wp_a, wp_b, self.plan.page_size)
+
+    def write_page(self, pos) -> int:
+        """Slot-local page index position ``pos``'s KV row lands in (works on
+        host ints and traced arrays alike)."""
         if self._window is not None:
             return (pos % self._window) // self.plan.page_size
         return pos // self.plan.page_size
@@ -500,6 +515,37 @@ class _PagePool:
         self.table[slot, wp] = dst
         return page, dst
 
+    def claim(self, slot: int, wp: int, freed: list):
+        """Reserve one MORE page at table row ``wp`` mid-request: a
+        speculative verify writes ``draft_len`` rows past the current
+        position, which can run past the admission reservation near the end
+        of a request's budget.  Returns the page id (the caller zeroes it
+        before the gather that reads it), or None when the pool is
+        momentarily empty — the round then falls back to a plain tick, the
+        allocation story stays reserve-before-write either way."""
+        if self.table[slot, wp] != self.NULL:
+            raise RuntimeError(f"slot {slot} claims page {wp} it already holds")
+        while not self.free and self._evict_one_chain(freed):
+            pass
+        if not self.free:
+            return None
+        page = self.free.pop(0)
+        self.refs[page] = 1
+        self.table[slot, wp] = page
+        return page
+
+    def retract(self, slot: int, wp: int, freed: list):
+        """Withdraw a :meth:`claim` whose rows were all rolled back: the page
+        returns to the free list and the table row to NULL before any later
+        gather could see the rejected writes — the PR 7
+        reservation=allocation invariant extended to 'a reservation may be
+        retracted before completion'."""
+        page = int(self.table[slot, wp])
+        if page == self.NULL:
+            raise RuntimeError(f"slot {slot} retracts page {wp} it never claimed")
+        self.table[slot, wp] = self.NULL
+        self._decref(page, freed)
+
     def retire(self, slot: int, freed: list):
         """Drop the slot's references; pages nobody else holds return to the
         free list (and to ``freed`` — refcounts hit zero exactly here)."""
@@ -527,6 +573,25 @@ class _Slot:
 
 def _mask_like(mask, leaf):
     return mask.reshape((mask.shape[0],) + (1,) * (leaf.ndim - 1))
+
+
+def _accepted_len(drafts, g, L):
+    """Per-lane longest accepted draft prefix: ``drafts`` [L+1, K] (first L
+    used), ``g`` [K, L+1] target greedy tokens.  Draft i is accepted iff every
+    draft before it matched AND it matches the target's token at its slot —
+    the cumulative product counts exactly the leading run of matches."""
+    eq = (drafts[:L].T == g[:, :L]).astype(jnp.int32)  # [K, L]
+    return jnp.sum(jnp.cumprod(eq, axis=1), axis=1)  # [K] in [0, L]
+
+
+def _select_step(stacked, m):
+    """Per-lane index into scan-stacked state: each leaf [S, K, ...] selects
+    its lane's step ``m[k]`` — the state after exactly m+1 verify steps, so
+    the rolled-back suffix never existed in the committed cache."""
+    return jax.tree.map(
+        lambda stk: jax.vmap(lambda lane, mi: lane[mi])(jnp.moveaxis(stk, 0, 1), m),
+        stacked,
+    )
 
 
 def slot_table_shardings(plan: ServePlan, single: Any, cfg: Optional[ModelConfig] = None):
@@ -610,7 +675,7 @@ class ContinuousEngine:
       data-parallel, per the paper's hybrid layout.
     """
 
-    def __init__(self, cfg: ModelConfig, params, plan: Optional[ServePlan] = None, *, bos: int = 1, eos: Optional[int] = None, poison_on_recycle: bool = False):
+    def __init__(self, cfg: ModelConfig, params, plan: Optional[ServePlan] = None, *, bos: int = 1, eos: Optional[int] = None, poison_on_recycle: bool = False, draft_params=None):
         self.plan = plan if plan is not None else ServePlan.for_config(cfg)
         self.plan.validate_for(cfg)
         self.cfg, self.params = cfg, params
@@ -619,6 +684,7 @@ class ContinuousEngine:
         self.policy = _make_policy(cfg, self.plan)
         K, C = self.plan.max_slots, self.plan.prefill_chunk
         self._K, self._C = K, C
+        self._spec = self.plan.draft_arch is not None
         self._paged = self.plan.paged
         if self._paged:
             # positional state moves into fixed page pools; the per-slot
@@ -632,10 +698,45 @@ class ContinuousEngine:
         else:
             self._single = self.policy.single_cache()
         self._shardings = slot_table_shardings(self.plan, self._single, cfg)
+        if self._spec:
+            # the draft model: its own (tiny, recurrent-only) slot table
+            # beside the target table.  Draft params REPLICATE on the mesh
+            # whatever the target strategy does — the draft exists to be
+            # cheap per device program, so it never rides the model axis.
+            self._draft_cfg = self.plan.draft_config(cfg)
+            if draft_params is None:
+                draft_params, _ = tfm.init_lm(jax.random.key(0), self._draft_cfg)
+            self.draft_params = draft_params
+            self._draft_single = tfm.init_cache(self._draft_cfg, 1, 0)
+            self._draft_ctx = tfm.RunCtx(mode="decode", remat=False)
+            self._draft_shardings = (
+                None if self.plan.mesh is None
+                else jax.tree.map(lambda a: self.plan.slot_sharding(a.ndim + 1), self._draft_single)
+            )
+            if self.plan.mesh is not None:
+                self.draft_params = jax.device_put(
+                    draft_params, stg.replicated_shardings(draft_params, self.plan.mesh)
+                )
+            # verify strategy: the single chunked extend step is exact ONLY
+            # when every cache entry is append-positional (full_kv, all-attn
+            # pattern) — rewinding the length then un-writes rejected rows
+            # before anything attends them.  A rolling window's rejected
+            # writes DESTROY evicted-but-still-windowed rows and recurrent
+            # states are sequential, so those targets verify by scanning
+            # draft_len+1 single-token steps inside one jit and selecting the
+            # per-lane state at the accepted length (DESIGN.md §8).
+            kinds = tfm.block_pattern(cfg)
+            self._verify_chunked = (
+                self.plan.cache_policy == "full_kv" and all(k == "attn" for k in kinds)
+            )
         # per-run scheduling counters (reset by run(); pinned by tests)
         self.prefill_steps = 0
         self.cow_copies = 0
         self.shared_prefix_tokens = 0
+        self.spec_rounds = 0
+        self.spec_lane_rounds = 0
+        self.spec_accepted = 0
+        self.spec_fallback_ticks = 0
         if self.plan.mesh is not None:
             # place the parameters per the plan's strategy resolver: decode
             # is weight-streaming-bound, so under strategy='model' splitting
@@ -684,7 +785,19 @@ class ContinuousEngine:
 
         logits_sh = self.plan.logits_sharding()
 
-        def decode_tick(sampler, params, caches, tokens, active, rng):
+        def sample_lanes(sampler, step_logits, rng, tick):
+            # one rng key per LANE per TICK: fold the tick counter then the
+            # slot index into the run key inside the jit, so stochastic
+            # sampling decorrelates across slots — and across ticks even if
+            # the host loop ever skips a split (the old single-key path drew
+            # the same categorical sample for every slot of the table)
+            if rng is None:
+                return sampler(step_logits)
+            base = jax.random.fold_in(rng, tick)
+            keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(base, jnp.arange(K))
+            return jax.vmap(lambda lg, kk: sampler(lg[None], kk)[0])(step_logits, keys)
+
+        def decode_tick(sampler, params, caches, tokens, active, rng, tick):
             # With poisoning on, non-decoding lanes COMPUTE on the fresh
             # single-slot values, never on a retired slot's poisoned state —
             # the tick's math stays NaN-free even under jax_debug_nans.  The
@@ -716,7 +829,7 @@ class ContinuousEngine:
                 # the sampler's argmax reduces over shards itself — and lets
                 # the cache-merge writes overlap that head collective
                 step_logits = jax.lax.with_sharding_constraint(step_logits, logits_sh)
-            toks = sampler(step_logits) if rng is None else sampler(step_logits, rng)
+            toks = sample_lanes(sampler, step_logits, rng, tick)
             return toks, constrain(merged)
 
         def recycle(caches, poison_mask, reset_mask, use_sentinel):
@@ -765,7 +878,7 @@ class ContinuousEngine:
                 pool_constrain(scatter_pages(pools, pages, dst)),
             )
 
-        def paged_decode_tick(sampler, params, caches, pools, tokens, active, rows, wps, dsts, rng):
+        def paged_decode_tick(sampler, params, caches, pools, tokens, active, rows, wps, dsts, rng, tick):
             # same poison discipline as the contiguous tick: non-decoding
             # lanes COMPUTE on fresh per-slot values.  Their page-table rows
             # are either live allocations (a slot mid-prefill: real, finite
@@ -799,7 +912,7 @@ class ContinuousEngine:
             step_logits = logits[:, 0]
             if logits_sh is not None:
                 step_logits = jax.lax.with_sharding_constraint(step_logits, logits_sh)
-            toks = sampler(step_logits) if rng is None else sampler(step_logits, rng)
+            toks = sample_lanes(sampler, step_logits, rng, tick)
             return toks, constrain(merged), pool_constrain(pools)
 
         def paged_recycle(caches, pools, poison_mask, reset_mask, page_poison, page_reset, admit_lengths, use_sentinel):
@@ -832,6 +945,203 @@ class ContinuousEngine:
             # the COW page move: one physical row per entry pool
             return pool_constrain(jax.tree.map(lambda pool: pool.at[dst].set(pool[src]), pools))
 
+        # ---- speculative decoding: draft round / verify / commit -----------
+
+        def merge_active(caches, upd, active):
+            return jax.tree.map(
+                lambda old, new: jnp.where(_mask_like(active, new), new.astype(old.dtype), old),
+                caches, upd,
+            )
+
+        if self._spec:
+            Ld = self.plan.draft_len
+            Sd = Ld + 1
+            TRASH = jnp.int32(_PagePool.TRASH)
+
+            def draft_constrain(dcaches):
+                if self._draft_shardings is None:
+                    return dcaches
+                return jax.tree.map(jax.lax.with_sharding_constraint, dcaches, self._draft_shardings)
+
+            def draft_fresh(dcaches):
+                return jax.tree.map(
+                    lambda full, a: jnp.broadcast_to(a[None].astype(full.dtype), full.shape),
+                    dcaches, self._draft_single,
+                )
+
+            def draft_safe(dcaches, active):
+                if not self.poison_on_recycle:
+                    return dcaches
+                return jax.tree.map(
+                    lambda full, f: jnp.where(_mask_like(active, full), full, f),
+                    dcaches, draft_fresh(dcaches),
+                )
+
+            def draft_decode_one(params, tokens, dcache):
+                return tfm.forward_decode(params, self._draft_cfg, tokens, dcache, ctx=self._draft_ctx)
+
+            def draft_init_table():
+                return draft_constrain(
+                    jax.tree.map(lambda a: jnp.broadcast_to(a[None], (K,) + a.shape), self._draft_single)
+                )
+
+            def draft_prefill_step(params, dcaches, slot, tokens):
+                # the draft consumes every prompt chunk the target does: a
+                # recurrent state cannot skip tokens, so the draft prefills
+                # alongside the target and begins decode in lockstep
+                _, one = draft_decode_one(params, tokens, take(dcaches, slot))
+                return draft_constrain(put(dcaches, one, slot))
+
+            def draft_tick(params, dcaches, tokens, active):
+                # fallback rounds run a plain target tick; the draft must
+                # still consume that token or its state falls behind
+                _, new = jax.vmap(draft_decode_one, in_axes=(None, 0, 0))(
+                    params, tokens[:, None], draft_safe(dcaches, active)
+                )
+                return draft_constrain(merge_active(dcaches, new, active))
+
+            def draft_round(params, dcaches, tokens, active):
+                # Ld+1 cheap recurrent steps per lane inside ONE jit: feed the
+                # current token, then each greedy draft back in.  Returns the
+                # drafted tokens [Ld+1, K] (the last is speculative overshoot
+                # the verify ignores) and the per-step states [Ld+1, K, ...]
+                # the commit selects from at the accepted length.
+                def step(carry, _):
+                    dc, tok = carry
+                    logits, ndc = jax.vmap(draft_decode_one, in_axes=(None, 0, 0))(
+                        params, tok[:, None], dc
+                    )
+                    nt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                    return (ndc, nt), (nt, ndc)
+                _, (drafts, stacked) = jax.lax.scan(
+                    step, (draft_safe(dcaches, active), tokens), None, length=Sd
+                )
+                return drafts, stacked
+
+            def draft_commit(dcaches, stacked, m, active):
+                # state after consuming exactly the m+1 committed tokens —
+                # the draft's own rollback, by selection instead of rewind
+                return draft_constrain(merge_active(dcaches, _select_step(stacked, m), active))
+
+            def verify_chunked(params, caches, tokens, drafts, active):
+                # full_kv/all-attn: ONE chunked extend at s=Ld+1 judges every
+                # draft; rollback is an in-jit length rewind (rows past the
+                # committed length are invisible to decode attention until a
+                # later sequential write replaces them)
+                chunk = jnp.concatenate([tokens[:, None], drafts[:Ld].T], axis=1)  # [K, Sd]
+                safe = caches if not self.poison_on_recycle else jax.tree.map(
+                    lambda full, f: jnp.where(_mask_like(active, full), full, f),
+                    caches, fresh_table(caches),
+                )
+                logits, new = jax.vmap(self.policy.verify_chunk, in_axes=(None, 0, 0))(
+                    params, chunk[:, None], safe
+                )
+                g = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)  # [K, Sd]
+                m = _accepted_len(drafts, g, Ld)
+                rolled = new._replace(length=new.length - (Ld - m))
+                return g, m, constrain(merge_active(caches, rolled, active))
+
+            def verify_scan(params, caches, tokens, drafts, active):
+                # window/recurrent targets: a rolling write of a REJECTED
+                # position would destroy an evicted-but-still-windowed row
+                # (and recurrent states are sequential), so no length rewind
+                # can undo it — instead scan Ld+1 single-token steps and
+                # select each lane's state at its accepted length
+                chunk = jnp.concatenate([tokens[None], drafts[:Ld]], axis=0)  # [Sd, K]
+                safe = caches if not self.poison_on_recycle else jax.tree.map(
+                    lambda full, f: jnp.where(_mask_like(active, full), full, f),
+                    caches, fresh_table(caches),
+                )
+                def step(carry, tok_row):
+                    logits, nc = jax.vmap(self.policy.decode_one, in_axes=(None, 0, 0))(
+                        params, tok_row[:, None], carry
+                    )
+                    return nc, (nc, jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32))
+                _, (stacked, gs) = jax.lax.scan(step, safe, chunk)
+                g = gs.T  # [K, Sd]
+                m = _accepted_len(drafts, g, Ld)
+                return g, m, constrain(merge_active(caches, _select_step(stacked, m), active))
+
+            def spec_page_dsts(rows, active, wpa, wpb):
+                # rows [K, pages_per_slot] -> physical dst per lane; inactive
+                # lanes (and the duplicate second page of a one-page span)
+                # scatter to TRASH, which is reserved and never gathered
+                da = jax.vmap(lambda rk, w: rk[w])(rows, wpa)
+                db = jax.vmap(lambda rk, w: rk[w])(rows, wpb)
+                return jnp.where(active, da, TRASH), jnp.where(active & (wpb != wpa), db, TRASH)
+
+            def paged_verify_chunked(params, caches, pools, tokens, drafts, active, rows):
+                chunk = jnp.concatenate([tokens[:, None], drafts[:Ld].T], axis=1)  # [K, Sd]
+                safe = caches if not self.poison_on_recycle else jax.tree.map(
+                    lambda full, f: jnp.where(_mask_like(active, full), full, f),
+                    caches, fresh_table(caches),
+                )
+                def lane(tok_s, one, rows_k):
+                    wpa = self.policy.write_page(one.length)
+                    wpb = self.policy.write_page(one.length + Ld)
+                    view = self.policy.assemble(one, pools, rows_k)
+                    logits, new_cache = self.policy.verify_chunk(params, tok_s[None], view)
+                    new_one, pa, pb = self.policy.split_paged_span(new_cache, one, wpa, wpb)
+                    return logits[0], new_one, pa, pb, wpa, wpb
+                logits, new, pa, pb, wpas, wpbs = jax.vmap(lane)(chunk, safe, rows)
+                g = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [K, Sd]
+                m = _accepted_len(drafts, g, Ld)
+                rolled = new._replace(length=new.length - (Ld - m))
+                merged = merge_active(caches, rolled, active)
+                da, db = spec_page_dsts(rows, active, wpas, wpbs)
+                pools = scatter_pages(scatter_pages(pools, pa, da), pb, db)
+                return g, m, constrain(merged), pool_constrain(pools)
+
+            def paged_verify_scan(params, caches, pools, tokens, drafts, active, rows):
+                safe = caches if not self.poison_on_recycle else jax.tree.map(
+                    lambda full, f: jnp.where(_mask_like(active, full), full, f),
+                    caches, fresh_table(caches),
+                )
+                views = jax.vmap(lambda one, rows_k: self.policy.assemble(one, pools, rows_k))(safe, rows)
+                chunk = jnp.concatenate([tokens[None], drafts[:Ld]], axis=0)  # [Sd, K]
+                def step(carry, tok_row):
+                    logits, nc = jax.vmap(self.policy.decode_one, in_axes=(None, 0, 0))(
+                        params, tok_row[:, None], carry
+                    )
+                    return nc, (nc, jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32))
+                _, (stacked, gs) = jax.lax.scan(step, views, chunk)
+                g = gs.T
+                m = _accepted_len(drafts, g, Ld)
+                sel = _select_step(stacked, m)  # committed per-lane VIEWS
+                n0 = safe.length  # [K] pre-round lengths
+                wpa = self.policy.write_page(n0)
+                wpb = self.policy.write_page(n0 + m)  # page of the LAST committed row
+                new, pa, pb = jax.vmap(
+                    lambda selc, one, a, b: self.policy.split_paged_span(selc, one, a, b)
+                )(sel, safe, wpa, wpb)
+                merged = merge_active(caches, new, active)
+                da, db = spec_page_dsts(rows, active, wpa, wpb)
+                pools = scatter_pages(scatter_pages(pools, pa, da), pb, db)
+                return g, m, constrain(merged), pool_constrain(pools)
+
+            def draft_recycle(dcaches, poison_mask, reset_mask, use_sentinel):
+                fresh = draft_fresh(dcaches)
+                def leaf(full, f):
+                    bad = jnp.full(full.shape, poison_scalar(full.dtype, use_sentinel), full.dtype)
+                    out = jnp.where(_mask_like(poison_mask, full), bad, full)
+                    return jnp.where(_mask_like(reset_mask, full), f, out)
+                return draft_constrain(jax.tree.map(leaf, dcaches, fresh))
+
+            self._draft_init_table = jax.jit(draft_init_table)
+            self._draft_prefill = jax.jit(draft_prefill_step, donate_argnums=(1,))
+            self._draft_tick = jax.jit(draft_tick, donate_argnums=(1,))
+            # draft_round does NOT donate: the commit still reads the
+            # pre-round table for lanes whose round is merged away
+            self._draft_round = jax.jit(draft_round)
+            self._draft_commit = jax.jit(draft_commit, donate_argnums=(0,))
+            self._draft_recycle = jax.jit(draft_recycle, donate_argnums=(0,), static_argnums=(3,))
+            if self._paged:
+                fn = paged_verify_chunked if self._verify_chunked else paged_verify_scan
+                self._verify = jax.jit(fn, donate_argnums=(1, 2))
+            else:
+                fn = verify_chunked if self._verify_chunked else verify_scan
+                self._verify = jax.jit(fn, donate_argnums=(1,))
+
         # the table argument is donated everywhere it is updated: callers
         # rebind on every call, so the update aliases the input buffer and
         # the full slot table never round-trips through the host
@@ -853,7 +1163,7 @@ class ContinuousEngine:
             self._init_pools = jax.jit(pool_constrain)
 
     def _tick_for(self, sampler):
-        """The jitted (params, caches, tokens, active, rng) -> (tokens,
+        """The jitted (params, caches, tokens, active, rng, tick) -> (tokens,
         caches) decode tick with ``sampler`` fused after the head."""
         tick = self._tick_cache.get(sampler)
         if tick is None:
@@ -863,7 +1173,7 @@ class ContinuousEngine:
 
     def _paged_tick_for(self, sampler):
         """Paged twin of :meth:`_tick_for`: (params, caches, pools, tokens,
-        active, rows, wps, dsts, rng) -> (tokens, caches, pools)."""
+        active, rows, wps, dsts, rng, tick) -> (tokens, caches, pools)."""
         tick = self._paged_tick_cache.get(sampler)
         if tick is None:
             tick = jax.jit(functools.partial(self._paged_tick_fn, sampler), donate_argnums=(1, 2))
@@ -900,6 +1210,11 @@ class ContinuousEngine:
         prompts = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
         max_news = [int(max_new)] * n if np.ndim(max_new) == 0 else [int(m) for m in max_new]
         self.plan.validate_batch(n)
+        if self._spec and sampler is not greedy:
+            raise ValueError(
+                "speculative decoding verifies against greedy acceptance; serve "
+                "stochastic sampling from a plan without draft_arch"
+            )
         outputs: List[Any] = [None] * n
         queue: deque = deque()
         for i, (p, m) in enumerate(zip(prompts, max_news)):
@@ -907,19 +1222,31 @@ class ContinuousEngine:
             # output position and every other request keeps serving (raising
             # here used to kill the whole loop, in-flight slots included)
             try:
-                if len(p) < 1 or m < 1:
-                    raise ValueError("each request needs a non-empty prompt and max_new >= 1")
+                if len(p) < 1:
+                    raise ValueError("each request needs a non-empty prompt")
+                if m < 0:
+                    raise ValueError(f"max_new must be >= 0, got {m}")
                 self.policy.check_request(len(p), m)
             except ValueError as e:
                 outputs[i] = RequestError(str(e))
+                continue
+            if m == 0:
+                # asking for nothing is not an error: the empty output lands
+                # in-position without spending a single prefill step
+                outputs[i] = np.zeros((0,), np.int64)
                 continue
             queue.append(i)
 
         self.prefill_steps = 0
         self.cow_copies = 0
         self.shared_prefix_tokens = 0
+        self.spec_rounds = 0
+        self.spec_lane_rounds = 0
+        self.spec_accepted = 0
+        self.spec_fallback_ticks = 0
         caches = self._init_caches()
         pools = self._init_pools(self._pool_template) if self._paged else None
+        dcaches = self._draft_init_table() if self._spec else None
         pool = (
             _PagePool(self.plan.pool_pages, self.plan.page_size, self.plan.pages_per_slot,
                       self._K, self.plan.share_prefixes)
@@ -1005,8 +1332,12 @@ class ContinuousEngine:
             if not (poison_pending.any() or admit_pending.any()
                     or page_poison.any() or page_reset.any()):
                 return
-            nonlocal caches, pools
+            nonlocal caches, pools, dcaches
             use_sentinel = bool(getattr(jax.config, "jax_debug_nans", False))
+            if self._spec:
+                dcaches = self._draft_recycle(
+                    dcaches, jnp.asarray(poison_pending), jnp.asarray(admit_pending), use_sentinel
+                )
             if self._paged:
                 caches, pools = self._paged_recycle(
                     caches, pools, jnp.asarray(poison_pending), jnp.asarray(admit_pending),
@@ -1032,6 +1363,7 @@ class ContinuousEngine:
                 pools = self._copy_page(pools, jnp.int32(cw[0]), jnp.int32(cw[1]))
                 self.cow_copies += 1
 
+        tick_no = 0
         while queue or any(s.phase != "free" for s in slots):
             progress = False
             # ---- admission (continuous: whenever a slot is free), then the
@@ -1056,6 +1388,8 @@ class ContinuousEngine:
                     )
                 else:
                     logits, caches = self._prefill_step(self.params, caches, jnp.int32(k), chunk)
+                if self._spec:
+                    dcaches = self._draft_prefill(self.draft_params, dcaches, jnp.int32(k), chunk)
                 self.prefill_steps += 1
                 s.pos += step
                 if s.pos == len(prompt):
@@ -1071,39 +1405,134 @@ class ContinuousEngine:
             active = np.array([s.phase == "decode" for s in slots])
             if active.any():
                 progress = True
-                sub = None
-                if rng is not None:
-                    rng, sub = jax.random.split(rng)
-                if self._paged:
-                    wps = np.zeros(self._K, np.int32)
-                    dsts = np.full(self._K, _PagePool.TRASH, np.int32)
+                # -- speculative round eligibility (the whole round is one
+                # -- global choice: static shapes, one verify dispatch) ------
+                run_spec = self._spec
+                claims: list = []
+                if run_spec and self.plan.cache_policy == "full_kv":
+                    # the chunked verify writes s=draft_len+1 rows from each
+                    # lane's length; a lane at the capacity edge would make
+                    # dynamic_update_slice clamp the start (silent overlap
+                    # corruption) — those last few tokens run plain ticks
+                    for k, s in enumerate(slots):
+                        if active[k] and s.pos + self.plan.draft_len + 1 > self.plan.cache_capacity:
+                            run_spec = False
+                            break
+                if run_spec and self._paged:
+                    # the verify span may run past the admission reservation
+                    # (draft_len rows past the budgeted tail): CLAIM the extra
+                    # page up front — reserve-before-write holds through
+                    # speculation — and retract it after rollback if no
+                    # committed row reached it.  An empty pool degrades the
+                    # round to a plain tick instead of breaking the invariant.
+                    for k, s in enumerate(slots):
+                        if not active[k]:
+                            continue
+                        span = {self.policy.write_page(s.pos),
+                                self.policy.write_page(s.pos + self.plan.draft_len)}
+                        for wp in sorted(span):
+                            if pool.table[k, wp] != _PagePool.NULL:
+                                continue
+                            freed = []
+                            page = pool.claim(k, wp, freed)
+                            note_freed(freed)
+                            if page is None:
+                                run_spec = False
+                                break
+                            claims.append((k, wp))
+                            page_reset[page] = True
+                        if not run_spec:
+                            break
+                    if not run_spec:
+                        for k, wp in claims:
+                            freed = []
+                            pool.retract(k, wp, freed)
+                            note_freed(freed)
+                        claims = []
+                if run_spec:
+                    if claims:
+                        apply_recycle()  # zero claimed pages before the verify gathers them
+                    toks_dev = jnp.asarray(cur_tok, jnp.int32)
+                    act_dev = jnp.asarray(active)
+                    drafts, dstacked = self._draft_round(self.draft_params, dcaches, toks_dev, act_dev)
+                    if self._paged:
+                        g, m, caches, pools = self._verify(
+                            self.params, caches, pools, toks_dev, drafts, act_dev,
+                            jnp.asarray(pool.table),
+                        )
+                    else:
+                        g, m, caches = self._verify(self.params, caches, toks_dev, drafts, act_dev)
+                    dcaches = self._draft_commit(dcaches, dstacked, m, act_dev)
+                    g_h, m_h = np.asarray(g), np.asarray(m)
+                    pos0 = [s.pos for s in slots]
+                    self.spec_rounds += 1
+                    for k, s in enumerate(slots):
+                        if not active[k]:
+                            continue
+                        acc = int(m_h[k]) + 1  # accepted drafts + the correction token
+                        self.spec_lane_rounds += 1
+                        self.spec_accepted += acc
+                        for tok in g_h[k, :acc]:
+                            tok = int(tok)
+                            s.pos += 1
+                            s.generated.append(tok)
+                            cur_tok[k] = tok
+                            if (self.eos is not None and tok == self.eos) or len(s.generated) >= max_news[s.req]:
+                                retire(s, k)
+                                break
+                    for k, wp in claims:
+                        if slots[k].phase == "free":
+                            continue  # retired above: retire() already freed the claim
+                        keep = {self.policy.write_page(pos0[k]),
+                                self.policy.write_page(pos0[k] + int(m_h[k]))}
+                        if wp not in keep:
+                            freed = []
+                            pool.retract(k, wp, freed)
+                            note_freed(freed)
+                else:
+                    sub = None
+                    if rng is not None:
+                        rng, sub = jax.random.split(rng)
+                    if self._paged:
+                        wps = np.zeros(self._K, np.int32)
+                        dsts = np.full(self._K, _PagePool.TRASH, np.int32)
+                        for k, s in enumerate(slots):
+                            if s.phase != "decode":
+                                continue
+                            wp = self.policy.write_page(s.pos)
+                            wps[k] = wp
+                            if self.policy.writes_pages_on_decode:
+                                cow_preflight(k, wp)
+                                dsts[k] = int(pool.table[k, wp])
+                        toks, caches, pools = self._paged_tick_for(sampler)(
+                            self.params, caches, pools, jnp.asarray(cur_tok, jnp.int32),
+                            jnp.asarray(active), jnp.asarray(pool.table),
+                            jnp.asarray(wps), jnp.asarray(dsts), sub, jnp.int32(tick_no),
+                        )
+                    else:
+                        toks, caches = self._tick_for(sampler)(
+                            self.params, caches, jnp.asarray(cur_tok, jnp.int32),
+                            jnp.asarray(active), sub, jnp.int32(tick_no),
+                        )
+                    if self._spec:
+                        # the draft must consume the plain tick's input token
+                        # too, or its state falls behind the target's
+                        dcaches = self._draft_tick(
+                            self.draft_params, dcaches, jnp.asarray(cur_tok, jnp.int32),
+                            jnp.asarray(active),
+                        )
+                        self.spec_fallback_ticks += 1
+                    toks = np.asarray(toks)
                     for k, s in enumerate(slots):
                         if s.phase != "decode":
                             continue
-                        wp = self.policy.write_page(s.pos)
-                        wps[k] = wp
-                        if self.policy.writes_pages_on_decode:
-                            cow_preflight(k, wp)
-                            dsts[k] = int(pool.table[k, wp])
-                    toks, caches, pools = self._paged_tick_for(sampler)(
-                        self.params, caches, pools, jnp.asarray(cur_tok, jnp.int32),
-                        jnp.asarray(active), jnp.asarray(pool.table),
-                        jnp.asarray(wps), jnp.asarray(dsts), sub,
-                    )
-                else:
-                    toks, caches = self._tick_for(sampler)(
-                        self.params, caches, jnp.asarray(cur_tok, jnp.int32), jnp.asarray(active), sub
-                    )
-                toks = np.asarray(toks)
-                for k, s in enumerate(slots):
-                    if s.phase != "decode":
-                        continue
-                    s.pos += 1  # the tick wrote its input token's state
-                    tok = int(toks[k])
-                    s.generated.append(tok)
-                    cur_tok[k] = tok
-                    if (self.eos is not None and tok == self.eos) or len(s.generated) >= max_news[s.req]:
-                        retire(s, k)
+                        s.pos += 1  # the tick wrote its input token's state
+                        tok = int(toks[k])
+                        s.generated.append(tok)
+                        cur_tok[k] = tok
+                        if (self.eos is not None and tok == self.eos) or len(s.generated) >= max_news[s.req]:
+                            retire(s, k)
+                tick_no += 1
             if not progress and not any(s.phase != "free" for s in slots) and queue:
                 # reserve-at-admission guarantees an all-free table can admit
                 # any request that passed the size check; reaching here means

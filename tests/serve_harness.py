@@ -399,3 +399,31 @@ register(
 
 # every positional policy serves paged; 'recurrent' has no pages to manage
 PAGED_CASES = tuple(n for n in all_names() if REGISTRY[n].cache_policy != "recurrent")
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding (marker ``serve_spec``; driven by tests/test_spec.py)
+# ---------------------------------------------------------------------------
+
+# any decoder-only case can take a recurrent draft; encdec_memory cannot
+# (the plan rejects it — pinned in test_spec)
+SPEC_CASES = tuple(n for n in all_names() if REGISTRY[n].cache_policy != "encdec_memory")
+SPEC_DRAFT = dict(draft_arch="xlstm-350m", draft_len=3)  # Sd=4 == prefill_chunk
+
+
+def assert_spec_greedy_equivalence(name: str, *, paged: bool = False) -> None:
+    """Greedy speculative serving == plain greedy serving, token for token,
+    across every verify path (chunked for full_kv all-attn, scan otherwise;
+    contiguous and paged) — more requests than slots with poisoned recycling
+    so rollback, draft-table recycle, and page claim/retract all fire."""
+    case = REGISTRY[name]
+    prompts = prompts_for(case, seed=7) * 2  # > max_slots -> recycling
+    plain = make_engine(case).run(prompts, case.max_new)
+    pk = dict(page_size=PAGE_SIZE) if paged else {}
+    eng = make_engine(case, **SPEC_DRAFT, **pk, engine_kwargs={"poison_on_recycle": True})
+    outs = eng.run(prompts, case.max_new)
+    for i, (a, b) in enumerate(zip(outs, plain)):
+        assert a.tolist() == b.tolist(), (
+            f"{name} req{i} spec{'-paged' if paged else ''} {a.tolist()} != plain greedy {b.tolist()}"
+        )
+    assert eng.spec_rounds > 0, f"{name}: speculative path never ran"

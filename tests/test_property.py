@@ -287,7 +287,7 @@ def test_page_pool_lifecycle_invariants(seed, share):
     for _ in range(50):
         _check_page_pool(pool, share)
         free_slots = [k for k in range(K) if k not in live]
-        op = int(rng.integers(0, 3))
+        op = int(rng.integers(0, 4))
         if op == 0 and free_slots:
             k = free_slots[0]
             plen = int(rng.integers(1, pps * ps + 1))
@@ -339,6 +339,32 @@ def test_page_pool_lifecycle_invariants(seed, share):
             pool.retire(k, freed)
             assert (pool.table[k] == pool.NULL).all()
             del live[k]
+        elif op == 3 and live:
+            # speculative claim/retract: reserve the NEXT row mid-request,
+            # then either keep it (a verify committed into it) or retract it
+            # (every row the claim covered was rolled back) — the
+            # reservation=allocation invariant must hold at both exits, and a
+            # retracted page must be immediately reusable
+            k = sorted(live)[int(rng.integers(0, len(live)))]
+            st = live[k]
+            if st["pages"] >= pps:
+                continue
+            wp = st["pages"]
+            assert pool.table[k, wp] == pool.NULL
+            freed = []
+            page = pool.claim(k, wp, freed)
+            if page is None:
+                assert pool.table[k, wp] == pool.NULL  # failed claim changes nothing
+                continue
+            assert pool.refs[page] == 1  # claimed pages are always private
+            _check_page_pool(pool, share)
+            if rng.integers(0, 2):
+                st["pages"] += 1  # kept: the row behaves like any written page
+            else:
+                pool.retract(k, wp, freed)
+                assert pool.table[k, wp] == pool.NULL and page in pool.free
+                with pytest.raises(RuntimeError):
+                    pool.retract(k, wp, [])  # double-retract fails loudly
     for k in list(live):
         pool.retire(k, [])
     while pool.chain_order:

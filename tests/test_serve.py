@@ -254,6 +254,82 @@ def test_seeded_sampling_is_deterministic():
     assert a.shape == (4,) and a.dtype == jnp.int32
 
 
+def test_decode_rng_is_per_slot_per_tick():
+    """Two slots with IDENTICAL prompts under temperature sampling must draw
+    distinct token streams: the tick folds the slot index and tick counter
+    into the run key, so every lane gets its own categorical draw (the old
+    path passed ONE key to the whole slot table, making identical lanes
+    emit identical tokens forever)."""
+    from repro.serve.sampling import make_sampler
+
+    case = sh.REGISTRY["transformer-full_kv"]
+    cfg, _ = sh.build(case.arch)
+    p = np.random.default_rng(11).integers(3, cfg.vocab_size, size=6).astype(np.int32)
+    prompts = [p.copy(), p.copy()]
+
+    def draws(seed):
+        eng = sh.make_engine(case)
+        return [o.tolist() for o in eng.run(prompts, 8, sampler=make_sampler(1.5),
+                                            rng=jax.random.key(seed))]
+
+    a, b, c = draws(0), draws(0), draws(1)
+    assert a[0] != a[1], "identical prompts drew identical tokens (table-wide key bug)"
+    assert a == b, "fixed seed is not reproducible"
+    assert a != c, "seed is ignored"
+
+
+# ---------------------------------------------------------------------------
+# degenerate requests: bad inputs land in-position, never as shape errors
+# ---------------------------------------------------------------------------
+
+
+def test_empty_prompt_is_request_error_in_position():
+    from repro.serve.engine import RequestError
+
+    case = sh.REGISTRY["transformer-full_kv"]
+    good = sh.prompts_for(case, seed=14)
+    outs = sh.make_engine(case).run([np.zeros((0,), np.int32), good[0]], 3)
+    ref = sh.make_engine(case).run([good[0]], 3)
+    assert isinstance(outs[0], RequestError) and "non-empty" in outs[0].reason
+    assert outs[1].tolist() == ref[0].tolist()
+
+
+def test_zero_budget_returns_empty_in_position():
+    case = sh.REGISTRY["transformer-full_kv"]
+    good = sh.prompts_for(case, seed=14)
+    eng = sh.make_engine(case)
+    outs = eng.run([good[0], good[1]], [0, 3])
+    assert outs[0].shape == (0,)
+    assert eng.prefill_steps > 0  # the real request still served
+    ref = sh.make_engine(case).run([good[1]], 3)
+    assert outs[1].tolist() == ref[0].tolist()
+
+
+def test_negative_budget_is_request_error():
+    from repro.serve.engine import RequestError
+
+    case = sh.REGISTRY["transformer-full_kv"]
+    good = sh.prompts_for(case, seed=14)
+    outs = sh.make_engine(case).run([good[0]], [-1])
+    assert isinstance(outs[0], RequestError)
+
+
+def test_prompt_at_exact_capacity_never_shape_errors():
+    """A prompt that fills the whole cache leaves no room for the decode
+    write: the engine must reject it per-request (capacity check), not die
+    in dynamic_update_slice — and one token under capacity must serve."""
+    from repro.serve.engine import RequestError
+
+    case = sh.REGISTRY["transformer-full_kv"]
+    cfg, _ = sh.build(case.arch)
+    cap = sh.make_plan(case).cache_capacity
+    rng = np.random.default_rng(15)
+    full = rng.integers(3, cfg.vocab_size, size=cap).astype(np.int32)
+    outs = sh.make_engine(case).run([full, full[: cap - 1]], 1)
+    assert isinstance(outs[0], RequestError)
+    assert not isinstance(outs[1], RequestError) and len(outs[1]) == 1
+
+
 # ---------------------------------------------------------------------------
 # launcher: the seq2seq arch serves end to end (the old SystemExit is gone)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,153 @@
+"""Speculative decoding battery (marker ``serve_spec``).
+
+The contract is the tentpole invariant: greedy speculative serving is
+token-for-token identical to plain greedy serving on every verify path —
+chunked verify for full_kv all-attn targets, scan verify for window /
+recurrent / hybrid caches, contiguous and paged layouts, with poisoned
+slot recycling forcing draft-table resets and page claim/retract.  Plan
+validation pins reject every unsound combination at construction time.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import serve_harness as sh
+from repro.configs import get_config
+from repro.core.plan import ServePlan
+
+pytestmark = pytest.mark.serve_spec
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: spec greedy == plain greedy, every policy x layout
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sh.SPEC_CASES)
+def test_spec_greedy_equivalence(name):
+    sh.assert_spec_greedy_equivalence(name)
+
+
+@pytest.mark.parametrize("name", [n for n in sh.SPEC_CASES if n in sh.PAGED_CASES])
+def test_spec_greedy_equivalence_paged(name):
+    sh.assert_spec_greedy_equivalence(name, paged=True)
+
+
+def test_spec_full_acceptance_stats():
+    """Draft == target (shared params): every draft token verifies, so the
+    engine must accept draft_len+1 tokens per lane-round and never fall
+    back — the accepted-tokens/step counter is the speedup the ROADMAP
+    item reports, so pin its ceiling exactly."""
+    case = sh.REGISTRY["ssm-recurrent"]
+    cfg, params = sh.build(case.arch)
+    prompts = sh.prompts_for(case, seed=13)
+    eng = sh.make_engine(case, **sh.SPEC_DRAFT, engine_kwargs={"draft_params": params})
+    outs = eng.run(prompts, case.max_new)
+    plain = sh.make_engine(case).run(prompts, case.max_new)
+    for a, b in zip(outs, plain):
+        assert a.tolist() == b.tolist()
+    assert eng.spec_lane_rounds > 0
+    assert eng.spec_accepted / eng.spec_lane_rounds == sh.SPEC_DRAFT["draft_len"] + 1
+    assert eng.spec_fallback_ticks == 0
+
+
+def test_spec_capacity_edge_falls_back_exactly():
+    """A full_kv lane within draft_len of cache capacity must round-trip
+    through the plain-tick fallback (a clamped dynamic_update_slice would
+    corrupt the cache) and still match plain greedy decode."""
+    case = sh.REGISTRY["transformer-full_kv"]
+    cfg, _ = sh.build(case.arch)
+    rng = np.random.default_rng(9)
+    p = rng.integers(3, cfg.vocab_size, size=28).astype(np.int32)  # capacity 32
+    ref = sh.make_engine(case).run([p], 4)
+    eng = sh.make_engine(case, **sh.SPEC_DRAFT)
+    got = eng.run([p], 4)
+    assert ref[0].tolist() == got[0].tolist()
+    assert eng.spec_fallback_ticks > 0, "capacity guard never fired"
+
+
+def test_spec_rejects_stochastic_sampler():
+    from repro.serve.sampling import make_sampler
+
+    case = sh.REGISTRY["transformer-full_kv"]
+    eng = sh.make_engine(case, **sh.SPEC_DRAFT)
+    with pytest.raises(ValueError, match="greedy acceptance"):
+        eng.run(sh.prompts_for(case), 2, sampler=make_sampler(1.0), rng=jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# plan validation pins
+# ---------------------------------------------------------------------------
+
+
+def _plan(**kw):
+    base = dict(max_slots=2, max_len=32, prefill_chunk=4)
+    base.update(kw)
+    return ServePlan(**base)
+
+
+def test_plan_rejects_bad_acceptance():
+    with pytest.raises(ValueError, match="acceptance"):
+        _plan(draft_arch="xlstm-350m", draft_len=3, acceptance="typical")
+
+
+def test_plan_rejects_draft_len_without_arch():
+    with pytest.raises(ValueError, match="without draft_arch"):
+        _plan(draft_len=3)
+
+
+def test_plan_rejects_zero_draft_len():
+    with pytest.raises(ValueError, match="draft_len >= 1"):
+        _plan(draft_arch="xlstm-350m", draft_len=0)
+
+
+def test_plan_rejects_draft_len_at_prefill_chunk():
+    # the verify chunk is draft_len+1 tokens riding the prefill-chunk step
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        _plan(draft_arch="xlstm-350m", draft_len=4)
+
+
+def test_plan_rejects_encdec_target():
+    with pytest.raises(ValueError, match="encdec_memory"):
+        _plan(cache_policy="encdec_memory", draft_arch="xlstm-350m", draft_len=3)
+
+
+def test_plan_rejects_share_prefixes_with_draft():
+    with pytest.raises(ValueError, match="share_prefixes"):
+        _plan(draft_arch="xlstm-350m", draft_len=3, page_size=4, share_prefixes=True)
+
+
+def test_plan_rejects_static_admission_with_draft():
+    with pytest.raises(ValueError, match="static"):
+        _plan(draft_arch="xlstm-350m", draft_len=3, admission="static")
+
+
+def test_plan_rejects_attention_draft_arch():
+    plan = _plan(draft_arch="qwen3-1.7b", draft_len=3)
+    with pytest.raises(ValueError, match="recurrent-cache"):
+        plan.validate_for(dataclasses.replace(get_config("qwen3-1.7b", smoke=True), dtype="float32"))
+
+
+def test_plan_rejects_vocab_mismatch():
+    # full-scale configs: qwen3 vocab 151936 vs xlstm draft vocab 50304
+    plan = _plan(draft_arch="xlstm-350m", draft_len=3)
+    with pytest.raises(ValueError, match="vocab"):
+        plan.validate_for(get_config("qwen3-1.7b"))
+
+
+def test_plan_engine_kwargs_round_trips_draft_fields():
+    plan = _plan(draft_arch="xlstm-350m", draft_len=3)
+    again = ServePlan(**plan.engine_kwargs())
+    assert again == plan
+    assert again.draft_arch == "xlstm-350m" and again.draft_len == 3
+
+
+def test_draft_config_tracks_target_scale_and_dtype():
+    cfg = dataclasses.replace(get_config("qwen3-1.7b", smoke=True), dtype="float32")
+    plan = _plan(draft_arch="xlstm-350m", draft_len=3)
+    dcfg = plan.draft_config(cfg)
+    assert dcfg.name.endswith("-smoke") and dcfg.dtype == "float32" and dcfg.dropout == 0.0
+    assert plan.draft_config(cfg) is not None
+    assert _plan().draft_config(cfg) is None
