@@ -1,4 +1,5 @@
-"""Pipeline-schedule sweep: gpipe vs 1f1b across micro_batches.
+"""Pipeline-schedule sweep: gpipe / 1f1b / zerobubble / interleaved across
+micro_batches, plus mixed-precision and overlapped-grad-sync points.
 
 For each (schedule, k) the PIPELINED hybrid train step is built through
 its :class:`repro.core.plan.ExecutionPlan` and measured on this host:
@@ -12,15 +13,26 @@ its :class:`repro.core.plan.ExecutionPlan` and measured on this host:
   contract, at fixed per-microbatch batch so k is the large-batch lever),
   and the *compiled* step's XLA ``temp_size_in_bytes`` when the backend
   exposes it (the whole step's temp arena — stash plus everything else,
-  so read the DELTA between schedules, not the absolute).
+  so read the DELTA between schedules, not the absolute);
+* **predicted time stretch** — the table's lockstep elapsed/ideal ratio,
+  the model term the measured steps/s deltas are judged against.
+
+The accumulation rows (``accum_*``) measure the non-pipelined hybrid
+plan's overlap lever: delayed head-psum off/on and the bucketed
+whole-tree variant, each next to ``scaling_factor_model``'s prediction.
+
+``--compute-dtype`` tags every record and reruns the same grid at that
+activation dtype (fp32 master weights throughout), so the trajectory
+holds fp32-vs-bf16 steps/s side by side.
 
 Rows: (name, us_per_step, predicted_stash_bytes, notes).  The sweep is
 also appended to ``experiments/bench/schedule_bench.json`` — one entry
-per invocation — so the gpipe/1f1b memory trajectory survives across
-bench runs.
+per invocation — so the schedule/dtype memory-and-speed trajectory
+survives across bench runs.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import json
 import os
@@ -31,6 +43,9 @@ import jax.numpy as jnp
 
 TRAJECTORY = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench", "schedule_bench.json")
 
+# (schedule kind, virtual_stages) grid; interleaved needs layers % (v*NS) == 0
+KINDS = (("gpipe", 1), ("1f1b", 1), ("zerobubble", 1), ("interleaved", 2))
+
 
 def _temp_bytes(compiled):
     """XLA's temp arena for the compiled step, when the backend reports it."""
@@ -40,9 +55,21 @@ def _temp_bytes(compiled):
         return None
 
 
-def run(ks=(1, 2, 4), steps: int = 4):
+def _measure(step, st, batch, steps: int):
+    compiled = jax.jit(step).lower(st, batch, 1.0, jax.random.key(0)).compile()
+    temp_bytes = _temp_bytes(compiled)
+    st, m = compiled(st, batch, 1.0, jax.random.key(0))  # warm
+    t0 = time.perf_counter()
+    for i in range(steps):
+        st, m = compiled(st, batch, 1.0, jax.random.key(i))
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / steps
+    return dt, temp_bytes, m
+
+
+def run(ks=(1, 2, 4), steps: int = 4, compute_dtype: str | None = None):
     from repro.configs import get_config
-    from repro.core.hybrid import pipeline_activation_model
+    from repro.core.hybrid import pipeline_activation_model, scaling_factor_model
     from repro.core.plan import ExecutionPlan
     from repro.core.strategy import Strategy
     from repro.data import MTBatchIterator, SyntheticMTTask
@@ -55,53 +82,103 @@ def run(ks=(1, 2, 4), steps: int = 4):
     task = SyntheticMTTask(vocab_size=cfg.vocab_size, min_len=6, max_len=12)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     B_mb = 8  # fixed per-microbatch batch: k is the global-batch lever
+    dt_tag = compute_dtype or cfg.dtype
+    model_kw = dict(
+        devices=4, flops_per_sec=1e13, link_bytes_per_sec=1e11,
+        compute_dtype=compute_dtype,
+    )
     rows, records = [], []
     for k in ks:
         it = MTBatchIterator(task, batch_size=B_mb * k, buckets=(13,))
         batch = {k_: jnp.asarray(v) for k_, v in next(it).items()}
         N = batch["tgt_in"].shape[1]
         M = batch["src"].shape[1]
-        for kind in ("gpipe", "1f1b"):
+        for kind, vs in KINDS:
+            if cfg.num_layers % vs:
+                continue
             plan = ExecutionPlan(
                 strategy=Strategy.HYBRID, mesh=mesh, micro_batches=k,
-                use_pipeline=True, schedule=kind,
+                use_pipeline=True, schedule=kind, virtual_stages=vs,
+                compute_dtype=compute_dtype,
             )
             act = pipeline_activation_model(
                 cfg, schedule=kind, num_stages=plan.num_stages, micro_batches=k,
                 batch=B_mb * k, src_len=M, tgt_len=N,
+                compute_dtype=plan.resolve_compute_dtype(cfg), virtual_stages=vs,
             )
             sched = plan.pipeline_schedule(N)
             step, _, _ = make_train_step(cfg, adam(), plan=plan, jit=False)
-            st = init_train_state(params, adam())
-            # AOT-compile ONCE and reuse the executable for both the memory
-            # reading and the timing loop (a separate jit call would compile
-            # a second copy of the same program)
-            compiled = jax.jit(step).lower(st, batch, 1.0, jax.random.key(0)).compile()
-            temp_bytes = _temp_bytes(compiled)
-            st, m = compiled(st, batch, 1.0, jax.random.key(0))  # warm
-            t0 = time.perf_counter()
-            for i in range(steps):
-                st, m = compiled(st, batch, 1.0, jax.random.key(i))
-            jax.block_until_ready(m["loss"])
-            dt = (time.perf_counter() - t0) / steps
+            st = init_train_state(params, adam(), plan=plan, cfg=cfg)
+            dt, temp_bytes, m = _measure(step, st, batch, steps)
             rec = {
                 "schedule": kind,
+                "virtual_stages": vs,
+                "compute_dtype": dt_tag,
                 "micro_batches": k,
                 "global_batch": B_mb * k,
                 "us_per_step": round(dt * 1e6, 1),
                 "steps_per_s": round(1.0 / dt, 3),
                 "predicted_stash_bytes": act["peak_stash_bytes"],
                 "predicted_peak_bytes": act["peak_bytes"],
+                "predicted_time_stretch": round(act["time_stretch"], 4),
                 "xla_temp_bytes": temp_bytes,
                 "peak_live_microbatches": sched.max_live_microbatches,
+                "bubble_fraction": round(sched.bubble_fraction, 4),
                 "total_ticks": sched.total_ticks,
             }
             records.append(rec)
+            suffix = f"_v{vs}" if vs > 1 else ""
             rows.append((
-                f"schedule_{kind}_k{k}",
+                f"schedule_{kind}{suffix}_k{k}_{dt_tag}",
                 rec["us_per_step"],
                 int(rec["predicted_stash_bytes"]),
                 f"live_mb={rec['peak_live_microbatches']} "
+                f"stretch={rec['predicted_time_stretch']} "
+                f"xla_temp={temp_bytes if temp_bytes is not None else 'n/a'}",
+            ))
+    # overlap on/off: the ACCUMULATION schedule's delayed grad all-reduce
+    # (head-only, then the bucketed whole-tree generalization)
+    k = max(ks)
+    if k > 1:
+        it = MTBatchIterator(task, batch_size=B_mb * k, buckets=(13,))
+        batch = {k_: jnp.asarray(v) for k_, v in next(it).items()}
+        variants = [
+            ("off", dict(overlap=False)),
+            ("head", dict(overlap=True)),
+            ("bucketed", dict(overlap=True, bucket_bytes=1 << 22)),
+        ]
+        for name, kw in variants:
+            plan = ExecutionPlan(
+                strategy=Strategy.HYBRID, mesh=mesh, micro_batches=k,
+                compute_dtype=compute_dtype, **kw,
+            )
+            step, _, _ = make_train_step(cfg, adam(), plan=plan, jit=False)
+            st = init_train_state(params, adam(), plan=plan, cfg=cfg)
+            dt, temp_bytes, m = _measure(step, st, batch, steps)
+            pred = scaling_factor_model(
+                cfg, strategy="hybrid", batch=B_mb * k,
+                src_len=int(batch["src"].shape[1]), tgt_len=int(batch["tgt_in"].shape[1]),
+                micro_batches=k, overlap=kw.get("overlap", False), **model_kw,
+            )
+            nb = len(plan.grad_buckets(params)) if kw.get("bucket_bytes") else None
+            rec = {
+                "schedule": None,
+                "overlap": name,
+                "compute_dtype": dt_tag,
+                "micro_batches": k,
+                "global_batch": B_mb * k,
+                "us_per_step": round(dt * 1e6, 1),
+                "steps_per_s": round(1.0 / dt, 3),
+                "predicted_scaling_factor": round(pred, 4),
+                "buckets": nb,
+                "xla_temp_bytes": temp_bytes,
+            }
+            records.append(rec)
+            rows.append((
+                f"accum_overlap_{name}_k{k}_{dt_tag}",
+                rec["us_per_step"],
+                rec["predicted_scaling_factor"],
+                f"buckets={nb if nb is not None else 'n/a'} "
                 f"xla_temp={temp_bytes if temp_bytes is not None else 'n/a'}",
             ))
     try:
@@ -113,9 +190,36 @@ def run(ks=(1, 2, 4), steps: int = 4):
                     traj = json.load(f)
             except ValueError:
                 traj = []  # interrupted prior write: restart the trajectory
-        traj.append({"time": time.strftime("%Y-%m-%dT%H:%M:%S"), "records": records})
+        traj.append({
+            "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "compute_dtype": dt_tag,
+            "records": records,
+        })
         with open(TRAJECTORY, "w") as f:
             json.dump(traj, f, indent=1)
     except OSError:
         pass  # read-only checkout: the CSV rows still report the sweep
     return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--compute-dtype", default=None, choices=("float32", "bfloat16", "float16"),
+                    help="activation compute dtype for the whole sweep (fp32 master weights)")
+    ap.add_argument("--smoke", action="store_true", help="reduced grid: k in (1, 2), 2 timed steps")
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--ks", default=None, help="comma list of microbatch counts, e.g. 1,2,4")
+    args = ap.parse_args()
+    ks = (1, 2) if args.smoke else (1, 2, 4)
+    if args.ks:
+        ks = tuple(int(x) for x in args.ks.split(","))
+    steps = 2 if args.smoke else args.steps
+    print("name,us_per_call,derived,notes")
+    for row in run(ks=ks, steps=steps, compute_dtype=args.compute_dtype):
+        name, us, derived = row[0], row[1], row[2]
+        notes = row[3] if len(row) > 3 else ""
+        print(f"{name},{us},{derived},{notes}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

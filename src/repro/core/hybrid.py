@@ -21,8 +21,25 @@ statement bytes(HYBRID grad sync) ≈ 0.1 * bytes(DATA grad sync).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 from repro.configs.base import ModelConfig
+
+#: activation bytes per element by compute dtype.  Gradients are NOT in this
+#: table on purpose: accumulation and the all-reduce stay fp32 (master
+#: weights), so grad bytes are 4 regardless of compute dtype.
+ACT_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+
+def act_bytes_for(compute_dtype: Optional[str], default: int) -> int:
+    """Dtype-aware activation bytes; ``default`` preserves legacy callers
+    that pass raw ``act_bytes`` and no dtype."""
+    if compute_dtype is None:
+        return default
+    try:
+        return ACT_BYTES[compute_dtype]
+    except KeyError:
+        raise ValueError(f"unknown compute dtype {compute_dtype!r}")
 
 
 @dataclass(frozen=True)
@@ -74,19 +91,34 @@ def strategy_comm_cost(
     act_bytes: int = 2,
     micro_batches: int = 1,
     overlap: bool = False,
+    compute_dtype: Optional[str] = None,
 ) -> CommCost:
     """``micro_batches`` > 1 syncs the hybrid head's grads once per
     microbatch (the accumulation loop's per-micro all-reduce); ``overlap``
     hides all but the last of those under the next microbatch's backbone
-    compute (reported via ``CommCost.overlap_hidden``)."""
+    compute (reported via ``CommCost.overlap_hidden``).
+
+    ``compute_dtype`` makes the activation byte terms dtype-aware
+    (overriding ``act_bytes``); grad bytes stay 4 — accumulation and the
+    all-reduce are fp32 under the master-weight scheme.  For the ``data``
+    strategy, ``overlap`` models the BUCKETED all-reduce: every bucket's
+    sync but the last microbatch's executes under the next microbatch's
+    backward, hiding ``(k-1)/k`` of the grad volume."""
     pb, ph = seq2seq_param_split(cfg)
     h = cfg.d_model
     k = micro_batches
+    act_bytes = act_bytes_for(compute_dtype, act_bytes)
     ring = 2 * (devices - 1) / devices  # ring all-reduce factor
     hidden_vals = batch * (src_len + tgt_len) * h
     hop_vals = batch * (src_len + tgt_len) * h  # one hand-off per stage boundary
     if strategy == "data":
-        return CommCost(grad_sync=ring * grad_bytes * (pb + ph), activation_reshard=0.0, pipeline_hops=0.0)
+        grad_sync = ring * grad_bytes * (pb + ph)
+        return CommCost(
+            grad_sync=grad_sync,
+            activation_reshard=0.0,
+            pipeline_hops=0.0,
+            overlap_hidden=grad_sync * (k - 1) / k if (overlap and k > 1) else 0.0,
+        )
     if strategy == "model":
         return CommCost(grad_sync=0.0, activation_reshard=0.0, pipeline_hops=act_bytes * hop_vals)
     if strategy == "hybrid":
@@ -119,6 +151,8 @@ def pipeline_activation_model(
     tgt_len: int,
     act_bytes: int = 2,
     carry_bytes: int = 4,
+    compute_dtype: Optional[str] = None,
+    virtual_stages: int = 1,
 ) -> dict:
     """Predicted peak stashed-activation bytes per pipeline stage for the
     seq2seq backbone's backward, per :class:`PipelineSchedule` kind.
@@ -143,22 +177,36 @@ def pipeline_activation_model(
 
     ``batch`` is whatever batch the caller accounts for (global, or
     per-shard for a per-device number).
+
+    ``compute_dtype`` makes the boundary-buffer bytes dtype-aware (the
+    hand-off vectors are saved in the activation dtype); the recurrent
+    carries stay fp32 — the executor keeps h/c in fp32 regardless.
+
+    ``virtual_stages`` > 1 (interleaved): the table runs over ``v*NS``
+    virtual stages whose work units each cover ``Lp/v`` layers, so the
+    per-unit stash shrinks by ``1/v`` while per-DEVICE stash counts sum
+    over the device's v chunks — net stash bytes match gpipe, but the
+    per-unit granularity (and the table's bubble/live numbers) change.
     """
     from repro.core.schedule import PipelineSchedule
 
+    act_bytes = act_bytes_for(compute_dtype, act_bytes)
+    chunks = virtual_stages if schedule == "interleaved" else 1
     h = cfg.d_model
     lp = max(cfg.num_layers // num_stages, 1)
     b_mb = batch / micro_batches
-    unit = 2 * lp * b_mb * h * carry_bytes  # h_in + c_in per layer, fp32
-    out = {"schedule": schedule, "unit_bytes": unit}
+    # h_in + c_in per layer, fp32; one unit covers a CHUNK's layers
+    unit = 2 * (lp / chunks) * b_mb * h * carry_bytes
+    out = {"schedule": schedule, "unit_bytes": unit, "virtual_stages": chunks * num_stages}
     stash = bubble = live = 0
     boundary = 0.0
     for S in (src_len, tgt_len):
         sched = PipelineSchedule(
-            seq_len=S, num_stages=num_stages, micro_batches=micro_batches, kind=schedule
+            seq_len=S, num_stages=num_stages, micro_batches=micro_batches, kind=schedule,
+            chunks=chunks,
         )
         stash = max(stash, sched.peak_activation_bytes(unit))
-        boundary += micro_batches * S * b_mb * h * act_bytes
+        boundary += chunks * micro_batches * S * b_mb * h * act_bytes
         bubble = max(bubble, sched.bubble_fraction)
         live = max(live, sched.max_live_microbatches)
     out.update(
@@ -167,6 +215,13 @@ def pipeline_activation_model(
         peak_bytes=stash + boundary,
         bubble_fraction=bubble,
         peak_live_microbatches=live,
+        time_stretch=max(
+            PipelineSchedule(
+                seq_len=S, num_stages=num_stages, micro_batches=micro_batches,
+                kind=schedule, chunks=chunks,
+            ).time_stretch()
+            for S in (src_len, tgt_len)
+        ),
     )
     return out
 
@@ -205,6 +260,9 @@ def scaling_factor_model(
     sync_latency_per_array: float = 0.026,
     micro_batches: int = 1,
     overlap: bool = False,
+    schedule: str = "gpipe",
+    virtual_stages: int = 1,
+    compute_dtype: Optional[str] = None,
 ) -> float:
     """Analytic Table-3 scaling factor vs the paper's 1-GPU baseline.
 
@@ -245,23 +303,51 @@ def scaling_factor_model(
       last executes under the next microbatch's backbone compute, so only
       one sync event is exposed.  Hybrid-with-overlap therefore dominates
       hybrid for every k > 1.
+
+    **Schedules beyond gpipe** (``schedule`` / ``virtual_stages``): the
+    wavefront term generalizes from the gpipe closed form to the schedule
+    table's ``time_stretch()`` — elapsed lockstep ticks over ideal
+    per-device compute — which reproduces the gpipe closed form exactly
+    and prices 1f1b the same (identical F/B timeline) but zerobubble
+    strictly cheaper (W units fill the drain).  The gpipe default keeps
+    the legacy closed form so existing calibrations are bit-identical.
+
+    **Half precision** (``compute_dtype``): bf16/fp16 double the GEMM
+    rate (``flops_per_sec`` is the fp32 rate); the 1-GPU baseline stays
+    fp32, so mixed precision shows up as super-linear scaling — exactly
+    how Ott et al. report it.  For the ``data`` strategy, ``overlap``
+    additionally models the bucketed all-reduce: only the last
+    microbatch's bucket syncs are exposed (wire term / k).
     """
     p_enc, p_dec, p_head = _param_groups(cfg, input_feeding)
     h = cfg.d_model
     k = micro_batches
-    rate = lambda B: flops_per_sec * B / (B + batch_half_util)
+    mp = 2.0 if compute_dtype in ("bfloat16", "float16") else 1.0
+    rate = lambda B: mp * flops_per_sec * B / (B + batch_half_util)
+    rate_base = lambda B: flops_per_sec * B / (B + batch_half_util)
     F = lambda P, B, L: 6.0 * P * B * L  # fwd+bwd flops of group P over B x L tokens
     ring = 2 * (devices - 1) / devices
-    # microbatched wavefront: k*L token-steps share one (D-1)-tick fill/drain
-    bubble = lambda L: (k * L + devices - 1) / (k * L * devices)
+    if schedule == "gpipe" and virtual_stages == 1:
+        # microbatched wavefront: k*L token-steps share one (D-1)-tick
+        # fill/drain (legacy closed form, kept bit-identical)
+        bubble = lambda L: (k * L + devices - 1) / (k * L * devices)
+    else:
+        from repro.core.schedule import PipelineSchedule
+
+        def bubble(L):
+            sched = PipelineSchedule(
+                seq_len=L, num_stages=devices, micro_batches=k, kind=schedule,
+                chunks=virtual_stages if schedule == "interleaved" else 1,
+            )
+            return sched.time_stretch() / devices
 
     def sync_t(param_count: float, n_arrays: int) -> float:
         return ring * 4.0 * param_count / link_bytes_per_sec + n_arrays * sync_latency_per_array
 
-    # the 1-GPU baseline row (batch = base_batch, everything serial)
+    # the 1-GPU baseline row (batch = base_batch, everything serial, fp32)
     t_base = (
         F(p_enc, base_batch, src_len) + F(p_dec, base_batch, tgt_len) + F(p_head, base_batch, tgt_len)
-    ) / rate(base_batch)
+    ) / rate_base(base_batch)
 
     f_enc, f_dec, f_head = F(p_enc, batch, src_len), F(p_dec, batch, tgt_len), F(p_head, batch, tgt_len)
     reshard = 2.0 * batch * (src_len + tgt_len) * h * (devices - 1) / devices / link_bytes_per_sec
@@ -270,7 +356,14 @@ def scaling_factor_model(
         Bd = batch / devices
         # grad accumulation: same total flops at microbatch-size utilization
         t = (F(p_enc, Bd, src_len) + F(p_dec, Bd, tgt_len) + F(p_head, Bd, tgt_len)) / rate(Bd / k)
-        t += sync_t(p_enc + p_dec + p_head, _num_sync_arrays(cfg))
+        full_sync = sync_t(p_enc + p_dec + p_head, _num_sync_arrays(cfg))
+        if overlap and k > 1:
+            # bucketed delayed all-reduce: wire time of all buckets but the
+            # last microbatch's hides under backward compute; the per-array
+            # latency is not hidden (it is serialization, not bandwidth)
+            wire = ring * 4.0 * (p_enc + p_dec + p_head) / link_bytes_per_sec
+            full_sync -= wire * (k - 1) / k
+        t += full_sync
     elif strategy == "model":
         # paper Fig. 2: layers on 3 GPUs, attention-softmax on the 4th, all
         # wavefronted; input-feeding serializes decoder + head.

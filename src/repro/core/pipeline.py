@@ -184,7 +184,23 @@ def _scheduled_pipeline(mesh: Mesh, sched: PipelineSchedule, *, model_axis: str,
                         batch_axes: tuple, in_max: int, hidden: int, stage_kernel: str):
     """Build the custom-vjp (stacked, x_padded) -> y executor for one
     (mesh, schedule, shape-statics) binding.  Cached so repeated train
-    steps reuse one function identity (stable jit caching)."""
+    steps reuse one function identity (stable jit caching).
+
+    ``zerobubble`` lowers through the same path as ``1f1b`` (group size 1):
+    the table splits each backward unit into an input-grad B and a
+    weight-grad W so W work fills the parallel timeline's bubble, but a
+    single-program lockstep realization has no idle slot to fill — it
+    performs W(s, u) fused immediately after B(s, u), a table-legal order
+    (W has no dependents), so the split shows up in the table's timeline
+    accounting while the executed gradients stay identical.
+
+    ``interleaved`` (``sched.chunks > 1``) dispatches to the virtual-stage
+    ring executor below."""
+    if sched.chunks > 1:
+        return _interleaved_pipeline(
+            mesh, sched, model_axis=model_axis, batch_axes=batch_axes,
+            in_max=in_max, hidden=hidden, stage_kernel=stage_kernel,
+        )
     NS, S, k = sched.num_stages, sched.seq_len, sched.micro_batches
     TT = sched.forward_ticks
     perm_up = [(i, i + 1) for i in range(NS - 1)]
@@ -401,6 +417,252 @@ def _scheduled_pipeline(mesh: Mesh, sched: PipelineSchedule, *, model_axis: str,
     return run
 
 
+def _interleaved_pipeline(mesh: Mesh, sched: PipelineSchedule, *, model_axis: str,
+                          batch_axes: tuple, in_max: int, hidden: int, stage_kernel: str):
+    """The ``interleaved`` executor: v = ``sched.chunks`` layer chunks per
+    device over VS = v*NS VIRTUAL stages.  Chunk c on device s is virtual
+    stage ``vs = c*NS + s`` — the standard round-robin assignment — so the
+    stage chain walks the mesh as a RING: vs -> vs+1 is device s -> s+1 for
+    s < NS-1 and device NS-1 -> device 0 (next chunk) at the wrap.  Each
+    tick every device runs ALL its chunks (v sweeps of Lc = Lp/v layers —
+    the same per-tick flops as one gpipe stage) on the pure VS-deep
+    wavefront ``tick = vs + u``, which keeps the hand-off systolic: a
+    chunk's input is produced exactly one tick before it is consumed, so
+    one [v, B, H] ring ppermute per tick suffices (device 0 rolls the
+    received chunks by +1: what device NS-1's chunk c produced feeds chunk
+    c+1).  The backward mirrors it with the grads ppermuted down the ring.
+    The table (gpipe at VS stages) prices this honestly: fill/drain grows
+    to VS-1 thin ticks, and each device saves v boundary windows."""
+    NS, S, k, v = sched.num_stages, sched.seq_len, sched.micro_batches, sched.chunks
+    VS = v * NS
+    TT = sched.forward_ticks  # k*S + VS - 1
+    ring_up = [(i, (i + 1) % NS) for i in range(NS)]
+    ring_down = [(i, (i - 1) % NS) for i in range(NS)]
+    send_up = lambda a: a if NS == 1 else jax.lax.ppermute(a, model_axis, ring_up)
+    send_down = lambda a: a if NS == 1 else jax.lax.ppermute(a, model_axis, ring_down)
+    vary = lambda a: compat.pcast_varying(a, mesh.axis_names)
+    batch_p = batch_axes if batch_axes else None
+
+    def _fwd_stage_fn(save_boundaries: bool):
+        def stage_fn(w, xloc):
+            wx, wh, b = w["wx"][0], w["wh"][0], w["b"][0]  # [v, Lc, ...]
+            Lc = wx.shape[1]
+            stage = jax.lax.axis_index(model_axis)
+            B_loc = xloc.shape[0]
+            B_mb = B_loc // k
+            xmb = xloc.reshape(k, B_mb, S, in_max)
+            dt = xloc.dtype
+            cells = [
+                _make_cell(wx[c], wh[c], b[c], in_max=in_max, dt=dt, stage_kernel=stage_kernel)
+                for c in range(v)
+            ]
+
+            def tick(carry, tau):
+                h, c, left = carry  # h,c [v, Lc, B_mb, H] fp32; left [v, B_mb, H]
+                hs_new, cs_new, tops = [], [], []
+                for ci in range(v):
+                    vs = ci * NS + stage  # this chunk's virtual stage
+                    u = tau - vs
+                    valid = (u >= 0) & (u < k * S)
+                    ucl = jnp.clip(u, 0, k * S - 1)
+                    m, t = ucl // S, ucl % S
+                    x_m = jax.lax.dynamic_index_in_dim(xmb, m, axis=0, keepdims=False)
+                    x_t = jax.lax.dynamic_index_in_dim(x_m, t, axis=1, keepdims=False)
+                    h_in = jnp.where(t == 0, jnp.zeros_like(h[ci]), h[ci])
+                    c_in = jnp.where(t == 0, jnp.zeros_like(c[ci]), c[ci])
+                    first_in = jnp.where(
+                        vs == 0, x_t, jnp.pad(left[ci], ((0, 0), (0, in_max - hidden)))
+                    )
+                    hs, cs, _ = _stage_sweep(cells[ci], Lc, first_in, h_in, c_in, dt=dt, in_max=in_max)
+                    hs_new.append(jnp.where(valid, hs, h[ci]))
+                    cs_new.append(jnp.where(valid, cs, c[ci]))
+                    tops.append(hs_new[-1][-1].astype(dt))
+                tops = jnp.stack(tops)  # [v, B_mb, H]
+                received = send_up(tops)
+                # device 0 consumes device NS-1's chunk c as chunk c+1's input
+                nxt_left = jnp.where(stage == 0, jnp.roll(received, 1, axis=0), received)
+                ys = (tops, left) if save_boundaries else tops
+                return (jnp.stack(hs_new), jnp.stack(cs_new), nxt_left), ys
+
+            h0 = vary(jnp.zeros((v, Lc, B_mb, hidden), jnp.float32))
+            c0 = vary(jnp.zeros((v, Lc, B_mb, hidden), jnp.float32))
+            left0 = vary(jnp.zeros((v, B_mb, hidden), dt))
+            _, ys = jax.lax.scan(tick, (h0, c0, left0), jnp.arange(TT))
+            tops_hist = ys[0] if save_boundaries else ys  # [TT, v, B_mb, H]
+            # the model output is virtual stage VS-1 = (chunk v-1, device
+            # NS-1); its valid ticks occupy [VS-1, VS-1 + k*S)
+            window = jax.lax.dynamic_slice_in_dim(
+                tops_hist[:, v - 1], (v - 1) * NS + stage, k * S, axis=0
+            )
+            out = window.reshape(k, S, B_mb, hidden).transpose(0, 2, 1, 3).reshape(B_loc, S, hidden)
+            if not save_boundaries:
+                return out[None]
+            lefts_hist = ys[1]
+            lwins = [
+                jax.lax.dynamic_slice_in_dim(lefts_hist[:, ci], ci * NS + stage, k * S, axis=0)
+                .reshape(k, S, B_mb, hidden)
+                for ci in range(v)
+            ]
+            return out[None], jnp.stack(lwins)[None]  # [1, v, k, S, B_mb, H]
+
+        return stage_fn
+
+    pspec = lambda tree: jax.tree.map(lambda _: P(model_axis), tree)
+    bspec = P(batch_p, None, None)
+    param_tpl = {"wx": 0, "wh": 0, "b": 0}
+
+    def _run_fwd(stacked, x, save_boundaries):
+        out_specs = P(model_axis, batch_p, None, None)
+        if save_boundaries:
+            out_specs = (out_specs, P(model_axis, None, None, None, batch_p, None))
+        return compat.shard_map(
+            _fwd_stage_fn(save_boundaries), mesh=mesh,
+            in_specs=(pspec(param_tpl), bspec), out_specs=out_specs, check_vma=False,
+        )(stacked, x)
+
+    # -- backward: one gpipe-style group (all k microbatches), VS-deep -----
+
+    G = k * S
+    Tb = G + VS - 1
+
+    def _bwd_stage_fn(w, xloc, leftsloc, dyloc):
+        wx, wh, b = w["wx"][0], w["wh"][0], w["b"][0]
+        Lc = wx.shape[1]
+        stage = jax.lax.axis_index(model_axis)
+        B_loc = xloc.shape[0]
+        B_mb = B_loc // k
+        xmb = xloc.reshape(k, B_mb, S, in_max)
+        dymb = dyloc.astype(jnp.float32).reshape(k, B_mb, S, hidden)
+        lefts = leftsloc[0]  # [v, k, S, B_mb, H]
+        dt = xloc.dtype
+        cells = [
+            _make_cell(wx[c], wh[c], b[c], in_max=in_max, dt=dt, stage_kernel=stage_kernel)
+            for c in range(v)
+        ]
+
+        def first_input(ci, mi, t):
+            x_m = jax.lax.dynamic_index_in_dim(xmb, mi, axis=0, keepdims=False)
+            x_t = jax.lax.dynamic_index_in_dim(x_m, t, axis=1, keepdims=False)
+            l_m = jax.lax.dynamic_index_in_dim(lefts[ci], mi, axis=0, keepdims=False)
+            l_t = jax.lax.dynamic_index_in_dim(l_m, t, axis=0, keepdims=False)
+            vs = ci * NS + stage
+            return jnp.where(vs == 0, x_t, jnp.pad(l_t, ((0, 0), (0, in_max - hidden))))
+
+        # phase A: recompute every chunk's forward from its saved boundary
+        # inputs (chunks recompute independently — their couplings are all
+        # in the saved hand-offs), stashing the per-step carries.
+        def fstep(carry, j):
+            h, c = carry  # [v, Lc, B_mb, H]
+            mi, t = j // S, j % S
+            hs_all, cs_all, h_ins, c_ins = [], [], [], []
+            for ci in range(v):
+                h_in = jnp.where(t == 0, jnp.zeros_like(h[ci]), h[ci])
+                c_in = jnp.where(t == 0, jnp.zeros_like(c[ci]), c[ci])
+                hs, cs, _ = _stage_sweep(
+                    cells[ci], Lc, first_input(ci, mi, t), h_in, c_in, dt=dt, in_max=in_max
+                )
+                hs_all.append(hs)
+                cs_all.append(cs)
+                h_ins.append(h_in)
+                c_ins.append(c_in)
+            return (jnp.stack(hs_all), jnp.stack(cs_all)), (jnp.stack(h_ins), jnp.stack(c_ins))
+
+        h0 = vary(jnp.zeros((v, Lc, B_mb, hidden), jnp.float32))
+        c0 = vary(jnp.zeros((v, Lc, B_mb, hidden), jnp.float32))
+        _, (h_ins, c_ins) = jax.lax.scan(fstep, (h0, c0), jnp.arange(G))  # [G, v, Lc, B, H]
+
+        # phase B: the mirrored VS-deep backward wavefront on the ring.
+        def bstep(carry, taub):
+            dh, dc, dleft_in, dwx, dwh, db = carry
+            dh_new, dc_new, dwx_new, dwh_new, db_new, dfirsts = [], [], [], [], [], []
+            for ci in range(v):
+                vs = ci * NS + stage
+                vb = taub - (VS - 1 - vs)
+                valid = (vb >= 0) & (vb < G)
+                vcl = jnp.clip(vb, 0, G - 1)
+                j = G - 1 - vcl
+                mi, t = j // S, j % S
+                h_in = jax.lax.dynamic_index_in_dim(h_ins, j, axis=0, keepdims=False)[ci]
+                c_in = jax.lax.dynamic_index_in_dim(c_ins, j, axis=0, keepdims=False)[ci]
+                dy_m = jax.lax.dynamic_index_in_dim(dymb, mi, axis=0, keepdims=False)
+                dy_t = jax.lax.dynamic_index_in_dim(dy_m, t, axis=1, keepdims=False)
+                dh_u = jnp.where(t == S - 1, jnp.zeros_like(dh[ci]), dh[ci])
+                dc_u = jnp.where(t == S - 1, jnp.zeros_like(dc[ci]), dc[ci])
+                dtop = jnp.where(vs == VS - 1, dy_t, dleft_in[ci])
+                dfirst, dh_n, dc_n, dwx_c, dwh_c, db_c = _cell_fwd_bwd(
+                    wx[ci], wh[ci], b[ci], first_input(ci, mi, t), h_in, c_in,
+                    dtop, dh_u, dc_u, cell=cells[ci], dt=dt,
+                )
+                vm = valid[None, None]
+                dh_new.append(jnp.where(vm, dh_n, dh[ci]))
+                dc_new.append(jnp.where(vm, dc_n, dc[ci]))
+                g1 = jnp.where(valid, 1.0, 0.0)
+                dwx_new.append(dwx[ci] + g1 * dwx_c)
+                dwh_new.append(dwh[ci] + g1 * dwh_c)
+                db_new.append(db[ci] + g1 * db_c)
+                dfirsts.append(jnp.where(valid, dfirst, jnp.zeros_like(dfirst)))
+            dfirsts = jnp.stack(dfirsts)  # [v, B_mb, in_max]
+            received = send_down(dfirsts[:, :, :hidden])
+            # device NS-1 consumes device 0's chunk c+1 grad as chunk c's
+            dleft_out = jnp.where(stage == NS - 1, jnp.roll(received, -1, axis=0), received)
+            carry_out = (
+                jnp.stack(dh_new), jnp.stack(dc_new), dleft_out,
+                jnp.stack(dwx_new), jnp.stack(dwh_new), jnp.stack(db_new),
+            )
+            return carry_out, dfirsts
+
+        zeros_f32 = lambda a: vary(jnp.zeros(a.shape, jnp.float32))
+        dh0 = vary(jnp.zeros((v, Lc, B_mb, hidden), jnp.float32))
+        dc0 = vary(jnp.zeros((v, Lc, B_mb, hidden), jnp.float32))
+        dl0 = vary(jnp.zeros((v, B_mb, hidden), jnp.float32))
+        acc0 = (zeros_f32(wx), zeros_f32(wh), zeros_f32(b))
+        (_, _, _, dwx, dwh, db), dfirsts_hist = jax.lax.scan(
+            bstep, (dh0, dc0, dl0) + acc0, jnp.arange(Tb)
+        )
+        if batch_axes:
+            dwx, dwh, db = (jax.lax.psum(a, batch_axes) for a in (dwx, dwh, db))
+        # virtual stage 0 (device 0, chunk 0) emits dx at ticks
+        # [VS-1, VS-1+G) with j = G-1-vb: slice, flip to ascending order
+        dxg = dfirsts_hist[VS - 1 : VS - 1 + G, 0][::-1]  # [G, B_mb, in_max]
+        dx = dxg.reshape(k, S, B_mb, in_max).transpose(0, 2, 1, 3).reshape(B_loc, S, in_max)
+        grads = {"wx": dwx[None], "wh": dwh[None], "b": db[None]}
+        return grads, dx[None]
+
+    def _run_bwd(stacked, x, lefts, dy):
+        grads, dx_all = compat.shard_map(
+            _bwd_stage_fn, mesh=mesh,
+            in_specs=(
+                pspec(param_tpl),
+                bspec,
+                P(model_axis, None, None, None, batch_p, None),
+                bspec,
+            ),
+            out_specs=(
+                pspec(param_tpl),
+                P(model_axis, batch_p, None, None),
+            ),
+            check_vma=False,
+        )(stacked, x, lefts, dy)
+        grads = jax.tree.map(lambda gr, p: gr.astype(p.dtype), grads, stacked)
+        return grads, dx_all[0].astype(x.dtype)
+
+    @jax.custom_vjp
+    def run(stacked, x):
+        outs = _run_fwd(stacked, x, save_boundaries=False)
+        return outs[NS - 1]
+
+    def run_fwd(stacked, x):
+        outs, lefts = _run_fwd(stacked, x, save_boundaries=True)
+        return outs[NS - 1], (stacked, x, lefts)
+
+    def run_bwd(res, dy):
+        stacked, x, lefts = res
+        return _run_bwd(stacked, x, lefts, dy)
+
+    run.defvjp(run_fwd, run_bwd)
+    return run
+
+
 def pipeline_lstm(
     mesh: Mesh,
     stacked,
@@ -411,6 +673,7 @@ def pipeline_lstm(
     micro_batches: int = 1,
     stage_kernel: str = "jnp",
     schedule: str = "gpipe",
+    virtual_stages: int = 1,
 ):
     """Run a stacked LSTM over ``x`` [B, S, in_dim] in wavefront order.
 
@@ -426,8 +689,12 @@ def pipeline_lstm(
     :class:`~repro.core.schedule.PipelineSchedule` driving the backward's
     activation liveness: ``"gpipe"`` stashes all k microbatches at the
     fwd/bwd boundary, ``"1f1b"`` bounds the stash at one microbatch per
-    stage (``min(k, NS)`` by the table) — same gradients, different order.
-    Returns hidden states of the top layer, [B, S, H].
+    stage (``min(k, NS)`` by the table), ``"zerobubble"`` rides 1f1b's
+    groups with the backward's weight-grad/input-grad split priced by the
+    table, and ``"interleaved"`` with ``virtual_stages=v > 1`` runs v layer
+    chunks per device over the ring executor (each device's [Lp] rows are
+    re-dealt round-robin to its chunks) — same gradients, different order,
+    for all of them.  Returns hidden states of the top layer, [B, S, H].
     """
     from repro.core.plan import STAGE_KERNELS
 
@@ -450,8 +717,31 @@ def pipeline_lstm(
     in_max = stacked["wx"].shape[2]
     if in_dim < in_max:  # zero-pad the embedded inputs to the padded wx rows
         x = jnp.pad(x, ((0, 0), (0, 0), (0, in_max - in_dim)))
-    sched = PipelineSchedule(seq_len=S, num_stages=num_stages, micro_batches=k, kind=schedule)
-    assert sched.forward_ticks == k * S + num_stages - 1  # one fill/drain per STEP
+    if virtual_stages > 1 and schedule != "interleaved":
+        raise ValueError(
+            f"virtual_stages={virtual_stages} requires schedule='interleaved', got {schedule!r}"
+        )
+    chunks = virtual_stages if schedule == "interleaved" else 1
+    if chunks > 1:
+        Lp = stacked["wh"].shape[1]
+        if Lp % chunks:
+            raise ValueError(
+                f"{Lp} layers/device cannot split into {chunks} virtual chunks"
+            )
+        # re-deal the contiguous [NS, Lp] rows to the round-robin virtual
+        # assignment: device s's chunk c is virtual stage c*NS + s, i.e.
+        # global layers [(c*NS+s)*Lc, ...) -> dev_stacked [NS, v, Lc, ...]
+        VS, Lc = chunks * num_stages, Lp // chunks
+        stacked = jax.tree.map(
+            lambda a: a.reshape(VS, Lc, *a.shape[2:])
+            .reshape(chunks, num_stages, Lc, *a.shape[2:])
+            .transpose(1, 0, *range(2, a.ndim + 1)),
+            stacked,
+        )
+    sched = PipelineSchedule(
+        seq_len=S, num_stages=num_stages, micro_batches=k, kind=schedule, chunks=chunks
+    )
+    assert sched.forward_ticks == k * S + sched.virtual_stages - 1  # one fill/drain per STEP
 
     # Pin the stacked params replicated BEFORE the shard_map boundary.  When
     # the stacking (jnp.stack of the per-layer trees) is traced inside the
@@ -513,12 +803,14 @@ def batch_shard_backbone(mesh: Mesh, batch_axes: tuple, dropout: float = 0.0):
 
 
 def pipeline_backbone(mesh: Mesh, model_axis: str = "model", micro_batches: int = 1,
-                      stage_kernel: str = "jnp", schedule: str = "gpipe"):
+                      stage_kernel: str = "jnp", schedule: str = "gpipe",
+                      virtual_stages: int = 1):
     """Adapter for ``seq2seq.forward_no_input_feeding(backbone=...)``: runs
     the stacked-LSTM encoder/decoder through the wavefront pipeline (with
     ``micro_batches`` slices interleaved through one fill/drain,
-    ``stage_kernel`` selecting the per-tick cell compute, and ``schedule``
-    the backward's activation liveness)."""
+    ``stage_kernel`` selecting the per-tick cell compute, ``schedule`` the
+    backward's activation liveness, and ``virtual_stages`` the interleaved
+    layer chunks per device)."""
 
     def run(layer_params, xs, rng):  # rng unused: no dropout inside the pipeline
         del rng
@@ -526,6 +818,7 @@ def pipeline_backbone(mesh: Mesh, model_axis: str = "model", micro_batches: int 
         return pipeline_lstm(
             mesh, stacked, xs, in_dim=xs.shape[-1], model_axis=model_axis,
             micro_batches=micro_batches, stage_kernel=stage_kernel, schedule=schedule,
+            virtual_stages=virtual_stages,
         )
 
     return run

@@ -28,6 +28,7 @@ Microbatch placement (DESIGN.md §1):
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -77,6 +78,10 @@ class WavefrontSchedule:
 
 STAGE_KERNELS = ("jnp", "pallas", "pallas_interpret")
 
+# training compute precisions the plan can prescribe; params, optimizer
+# moments, and gradient accumulators stay fp32 regardless (master weights)
+COMPUTE_DTYPES = ("float32", "bfloat16", "float16")
+
 
 @dataclass(frozen=True)
 class ExecutionPlan:
@@ -92,9 +97,27 @@ class ExecutionPlan:
     stage_kernel: str = "jnp"
     # the PipelineSchedule kind driving the pipelined backward's activation
     # liveness: "gpipe" stashes all k microbatches at the fwd/bwd boundary,
-    # "1f1b" bounds the per-stage stash at min(k, NS) microbatches — same
-    # gradients, different order (DESIGN.md §4)
+    # "1f1b" bounds the per-stage stash at min(k, NS) microbatches,
+    # "interleaved" runs virtual_stages layer chunks per device over the
+    # gpipe table, "zerobubble" splits 1f1b's backward into input-grad and
+    # weight-grad units — same gradients for all (DESIGN.md §4, §9)
     schedule: str = "gpipe"
+    # layer chunks per device for schedule="interleaved" (1 == gpipe table)
+    virtual_stages: int = 1
+    # the precision the loss fn computes in; None defers to cfg.dtype.
+    # Casts happen at the loss-fn boundary: master weights and grad
+    # accumulation are always fp32 (DESIGN.md §9)
+    compute_dtype: Optional[str] = None
+    # dynamic loss scaling (consulted only when the resolved compute dtype
+    # is float16): initial scale, and the clean-step streak after which the
+    # scale doubles; an overflowed step skips the update and halves it
+    loss_scale_init: float = 2.0**15
+    loss_scale_growth: int = 2000
+    # overlapped grad sync: when set, ALL grads (backbone included) are
+    # partitioned into ~bucket_bytes fp32 buckets, each folded into the
+    # accumulator one microbatch late (generalizes the delayed head psum);
+    # None keeps the legacy head-only delay
+    bucket_bytes: Optional[int] = None
 
     def __post_init__(self):
         from repro.core.schedule import SCHEDULES
@@ -106,6 +129,29 @@ class ExecutionPlan:
             raise ValueError(f"stage_kernel must be one of {STAGE_KERNELS}, got {self.stage_kernel!r}")
         if self.schedule not in SCHEDULES:
             raise ValueError(f"schedule must be one of {SCHEDULES}, got {self.schedule!r}")
+        if self.virtual_stages < 1:
+            raise ValueError(f"virtual_stages must be >= 1, got {self.virtual_stages}")
+        if self.virtual_stages > 1 and self.schedule != "interleaved":
+            raise ValueError(
+                f"virtual_stages={self.virtual_stages} requires schedule='interleaved', "
+                f"got {self.schedule!r}"
+            )
+        if self.compute_dtype is not None and self.compute_dtype not in COMPUTE_DTYPES:
+            raise ValueError(
+                f"compute_dtype must be one of {COMPUTE_DTYPES}, got {self.compute_dtype!r}"
+            )
+        if not self.loss_scale_init > 0:
+            raise ValueError(f"loss_scale_init must be > 0, got {self.loss_scale_init}")
+        if self.loss_scale_growth < 1:
+            raise ValueError(f"loss_scale_growth must be >= 1, got {self.loss_scale_growth}")
+        if self.bucket_bytes is not None:
+            if self.bucket_bytes < 1:
+                raise ValueError(f"bucket_bytes must be >= 1, got {self.bucket_bytes}")
+            if not self.overlap:
+                # buckets only change WHEN each grad's all-reduce runs; with
+                # no delayed fold they would compile to the same program —
+                # reject rather than record a knob that did nothing
+                raise ValueError("bucket_bytes requires overlap=True")
         if self.overlap and self.pipelined:
             # the pipelined schedule runs ONE fwd/bwd (head grads sync once),
             # so there is no per-microbatch sync to delay — reject rather
@@ -155,7 +201,22 @@ class ExecutionPlan:
             num_stages=self.num_stages,
             micro_batches=self.micro_batches if self.pipelined else 1,
             kind=self.schedule,
+            chunks=self.virtual_stages if self.schedule == "interleaved" else 1,
         )
+
+    # -- mixed precision ----------------------------------------------------
+
+    def resolve_compute_dtype(self, cfg=None) -> str:
+        """The dtype the loss fn computes in: the plan's ``compute_dtype``
+        when set, else the model config's ``dtype`` (fp32 when neither)."""
+        if self.compute_dtype is not None:
+            return self.compute_dtype
+        return getattr(cfg, "dtype", "float32") if cfg is not None else "float32"
+
+    def fp16(self, cfg=None) -> bool:
+        """Whether this plan trains in float16 — the one compute dtype that
+        needs dynamic loss scaling (bf16 shares fp32's exponent range)."""
+        return self.resolve_compute_dtype(cfg) == "float16"
 
     # -- sharding specs (delegated to core.strategy, bound to this plan) ----
 
@@ -237,6 +298,7 @@ class ExecutionPlan:
                 micro_batches=self.micro_batches,
                 stage_kernel=self.stage_kernel,
                 schedule=self.schedule,
+                virtual_stages=self.virtual_stages,
             )
         if batch_backbone and self.mesh is not None:
             # batch over ALL axes: the paper's hand-off already spreads the
@@ -260,6 +322,38 @@ class ExecutionPlan:
     @staticmethod
     def merge_head(head: dict, body: dict) -> dict:
         return {**head, **body}
+
+    def grad_buckets(self, tree: Any) -> list[dict]:
+        """Partition the grad pytree's leaves into size-targeted buckets for
+        the delayed (one-microbatch-late) all-reduce fold.
+
+        Greedy by flattened traversal order: a leaf joins the current bucket
+        until it holds >= ``bucket_bytes`` of fp32 grads — so every bucket
+        except possibly the last meets the size target, and a single leaf
+        larger than the target gets its own bucket.  Returns
+        ``[{"index": i, "leaves": [leaf positions], "bytes": fp32 bytes,
+        "names": [dot paths]}]`` covering every leaf exactly once;
+        ``tree`` may hold arrays or ShapeDtypeStructs (dryrun)."""
+        if self.bucket_bytes is None:
+            raise ValueError("grad_buckets requires bucket_bytes to be set")
+        leaves, _ = jax.tree.flatten(tree)
+        paths = [
+            jax.tree_util.keystr(kp).replace("'", "").strip("[]").replace("][", ".")
+            for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+        ]
+        buckets: list[dict] = []
+        cur = {"index": 0, "leaves": [], "bytes": 0, "names": []}
+        for i, leaf in enumerate(leaves):
+            nbytes = 4 * math.prod(leaf.shape)
+            cur["leaves"].append(i)
+            cur["bytes"] += nbytes
+            cur["names"].append(paths[i])
+            if cur["bytes"] >= self.bucket_bytes:
+                buckets.append(cur)
+                cur = {"index": len(buckets), "leaves": [], "bytes": 0, "names": []}
+        if cur["leaves"]:
+            buckets.append(cur)
+        return buckets
 
 
 # ---------------------------------------------------------------------------

@@ -108,15 +108,18 @@ def apply_variant(cfg, variant: str | None, strategy: str | None = None):
     return cfg, dict(v.get("build", {}))
 
 
-def schedule_report(cfg, shape, mesh, strat, micro: int, schedule: str, build_kw: dict):
+def schedule_report(cfg, shape, mesh, strat, micro: int, schedule: str, build_kw: dict,
+                    compute_dtype: str | None = None, virtual_stages: int = 1):
     """Tick-table summary + predicted activation bytes for a pipelined
-    seq2seq plan (None when the plan does not pipeline)."""
+    seq2seq plan (None when the plan does not pipeline).  Byte terms are
+    dtype-aware: the boundary hand-off buffers live in the compute dtype."""
     from repro.core.hybrid import pipeline_activation_model
     from repro.core.plan import ExecutionPlan
 
     plan = ExecutionPlan(
         strategy=strat, mesh=mesh, micro_batches=micro,
         use_pipeline=build_kw.get("use_pipeline", False), schedule=schedule,
+        compute_dtype=compute_dtype, virtual_stages=virtual_stages,
     )
     if not plan.pipelined or cfg.family != "seq2seq":
         return None
@@ -126,11 +129,40 @@ def schedule_report(cfg, shape, mesh, strat, micro: int, schedule: str, build_kw
         cfg, schedule=schedule, num_stages=plan.num_stages, micro_batches=micro,
         batch=shape.global_batch // max(plan.batch_shard_size(), 1),
         src_len=M, tgt_len=N,
+        compute_dtype=plan.resolve_compute_dtype(cfg), virtual_stages=virtual_stages,
     )
     return {"table": summ, "activation_model": act}
 
 
-def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: str | None, *, micro: int | None = None, overlap: bool = False, schedule: str = "gpipe", tag: str = "", variant: str | None = None, save_hlo: bool = True):
+def mixed_precision_report(cfg, plan):
+    """Dtype-aware byte accounting + loss-scale config + bucket table for
+    the dry-run printout (None for a plain fp32 plan with no buckets)."""
+    from repro.core.hybrid import ACT_BYTES, seq2seq_param_split
+    from repro.launch.inputs import abstract_init
+    from repro.models import seq2seq as s2s_mod
+
+    dt = plan.resolve_compute_dtype(cfg)
+    if dt == "float32" and plan.bucket_bytes is None:
+        return None
+    rep = {
+        "compute_dtype": dt,
+        "act_bytes": ACT_BYTES[dt],
+        "param_bytes": 4,  # fp32 master weights
+        "grad_bytes": 4,  # fp32 accumulation + all-reduce
+    }
+    if plan.fp16(cfg):
+        rep["loss_scale"] = {"init": plan.loss_scale_init, "growth_interval": plan.loss_scale_growth}
+    if plan.bucket_bytes is not None and cfg.family == "seq2seq":
+        shapes, _ = abstract_init(cfg, lambda k, c: s2s_mod.init_seq2seq(k, c))
+        buckets = plan.grad_buckets(shapes)
+        rep["buckets"] = [
+            {"index": b["index"], "bytes": b["bytes"], "leaves": len(b["leaves"])}
+            for b in buckets
+        ]
+    return rep
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: str | None, *, micro: int | None = None, overlap: bool = False, schedule: str = "gpipe", tag: str = "", variant: str | None = None, save_hlo: bool = True, compute_dtype: str | None = None, virtual_stages: int = 1, bucket_bytes: int | None = None):
     cfg, build_kw = apply_variant(get_config(arch), variant, strategy)
     shape = get_shape(shape_name)
     multi = mesh_kind == "multipod"
@@ -139,7 +171,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: 
     strat = Strategy(strategy)
     if micro is None:
         micro = default_micro(arch, shape_name, mesh_kind)
-    sched_rec = schedule_report(cfg, shape, mesh, strat, micro, schedule, build_kw) if shape.kind == "train" else None
+    sched_rec = schedule_report(cfg, shape, mesh, strat, micro, schedule, build_kw, compute_dtype, virtual_stages) if shape.kind == "train" else None
     if schedule != "gpipe" and sched_rec is None:
         print(f"[dryrun] warning: --schedule={schedule} has no effect for {arch} x {shape_name} "
               f"x {strategy} (needs the seq2seq pipeline variant)", flush=True)
@@ -153,8 +185,31 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: 
             f"(stash {a['peak_stash_bytes']/2**20:.1f} + boundary {a['boundary_bytes']/2**20:.1f})",
             flush=True,
         )
+    mp_rec = None
+    if shape.kind == "train":
+        from repro.core.plan import ExecutionPlan
+
+        mp_plan = ExecutionPlan(
+            strategy=strat, mesh=mesh, micro_batches=micro, overlap=overlap,
+            use_pipeline=build_kw.get("use_pipeline", False), schedule=schedule,
+            compute_dtype=compute_dtype, virtual_stages=virtual_stages,
+            bucket_bytes=bucket_bytes,
+        )
+        mp_rec = mixed_precision_report(cfg, mp_plan)
+    if mp_rec is not None:
+        line = (f"[dryrun] {arch}: compute_dtype={mp_rec['compute_dtype']} "
+                f"act={mp_rec['act_bytes']}B param=4B(master) grad=4B(fp32 accum)")
+        if "loss_scale" in mp_rec:
+            ls = mp_rec["loss_scale"]
+            line += f" loss_scale(init={ls['init']:g}, growth_interval={ls['growth_interval']})"
+        print(line, flush=True)
+        if "buckets" in mp_rec:
+            bks = mp_rec["buckets"]
+            print(f"[dryrun] {arch}: {len(bks)} grad buckets (delayed all-reduce):", flush=True)
+            for b in bks:
+                print(f"[dryrun]   bucket {b['index']:>2}: {b['bytes']/2**20:7.2f} MiB  {b['leaves']} arrays", flush=True)
     t0 = time.perf_counter()
-    fn, args = build_lowerable(cfg, shape, mesh, strat, micro_batches=micro, overlap=overlap, schedule=schedule, **build_kw)
+    fn, args = build_lowerable(cfg, shape, mesh, strat, micro_batches=micro, overlap=overlap, schedule=schedule, compute_dtype=compute_dtype, virtual_stages=virtual_stages, bucket_bytes=bucket_bytes, **build_kw)
     with compat.set_mesh(mesh):
         lowered = fn.lower(*args)
         t_lower = time.perf_counter() - t0
@@ -195,6 +250,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str, out_dir: 
         # None when no schedule drove the step (non-pipelined plan): a
         # recorded kind must mean the backward actually used it
         "schedule": schedule if sched_rec is not None else None,
+        # None for a plain-fp32, unbucketed plan (nothing beyond defaults)
+        "mixed_precision": mp_rec,
         "chips": chips,
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),
@@ -298,6 +355,12 @@ def main():
     ap.add_argument("--overlap", action="store_true", help="overlap the hybrid head grad sync across microbatches")
     ap.add_argument("--schedule", default="gpipe", choices=SCHEDULES,
                     help="pipelined-backward activation liveness (needs the pipeline variant)")
+    ap.add_argument("--compute-dtype", default=None, choices=("float32", "bfloat16", "float16"),
+                    help="activation compute dtype (params stay fp32 master weights)")
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    help="layer chunks per device for --schedule interleaved")
+    ap.add_argument("--bucket-bytes", type=int, default=None,
+                    help="bucketed delayed grad all-reduce bucket size (requires --overlap)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--tag", default="")
     ap.add_argument("--variant", default=None, choices=sorted(VARIANTS))
@@ -337,7 +400,7 @@ def main():
                 print(f"[dryrun] skip existing {fname}", flush=True)
                 continue
             try:
-                run_one(arch, shape, mesh_kind, args.strategy, args.out, micro=args.micro, overlap=args.overlap, schedule=args.schedule, tag=args.tag, variant=args.variant)
+                run_one(arch, shape, mesh_kind, args.strategy, args.out, micro=args.micro, overlap=args.overlap, schedule=args.schedule, tag=args.tag, variant=args.variant, compute_dtype=args.compute_dtype, virtual_stages=args.virtual_stages, bucket_bytes=args.bucket_bytes)
             except Exception as e:  # noqa: BLE001 — report and continue the sweep
                 failures.append((arch, shape, mesh_kind, repr(e)))
                 print(f"[dryrun] FAIL {arch} x {shape} x {mesh_kind}: {e}", flush=True)

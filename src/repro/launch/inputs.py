@@ -129,11 +129,15 @@ def build_lowerable(
     pin_residual: bool = False,
     batch_backbone: bool = False,
     q_chunk: int = 128,
+    compute_dtype: Optional[str] = None,
+    virtual_stages: int = 1,
+    bucket_bytes: Optional[int] = None,
+    loss_scale_init: float = 2.0**15,
 ) -> Tuple[Any, tuple]:
     """Returns (jitted_fn, args) such that jitted_fn.lower(*args) is the
     production step for this (arch x shape x mesh x strategy).  Train steps
     go through an :class:`ExecutionPlan` binding (strategy, mesh,
-    micro_batches, overlap, pipeline, schedule)."""
+    micro_batches, overlap, pipeline, schedule, compute dtype, buckets)."""
     init_fn = (lambda k, c: __import__("repro.models.seq2seq", fromlist=["x"]).init_seq2seq(k, c)) if cfg.family == "seq2seq" else (lambda k, c: tfm.init_lm(k, c))
     shapes, specs = abstract_init(cfg, init_fn)
     data = input_specs(cfg, shape, mesh, strat)
@@ -143,6 +147,8 @@ def build_lowerable(
         plan = ExecutionPlan(
             strategy=strat, mesh=mesh, micro_batches=micro_batches,
             overlap=overlap, use_pipeline=use_pipeline, schedule=schedule,
+            compute_dtype=compute_dtype, virtual_stages=virtual_stages,
+            bucket_bytes=bucket_bytes, loss_scale_init=loss_scale_init,
         )
         plan.validate_batch(shape.global_batch)
         step_fn, sshard, _ = trainer_mod.make_train_step(
@@ -157,6 +163,13 @@ def build_lowerable(
             jit=False,
         )
         psh = sshard.params if sshard is not None else None
+        scaling_sds = None
+        if plan.fp16(cfg):
+            # the step expects a LossScale node; its SDS must match
+            scaling_sds = trainer_mod.LossScale(
+                scale=sds((), jnp.float32, _nsh(mesh, P())),
+                good_steps=sds((), jnp.int32, _nsh(mesh, P())),
+            )
         state_sds = trainer_mod.TrainState(
             params=_tree_sds(shapes, psh),
             opt_state=trainer_mod.OptState(
@@ -164,6 +177,7 @@ def build_lowerable(
                 m=_tree_sds(jax.tree.map(lambda s: sds(s.shape, jnp.float32), shapes), psh),
                 v=_tree_sds(jax.tree.map(lambda s: sds(s.shape, jnp.float32), shapes), psh),
             ),
+            scaling=scaling_sds,
         )
         rng = sds((), KEY_DTYPE, _nsh(mesh, P()))
         lr = sds((), jnp.float32, _nsh(mesh, P()))

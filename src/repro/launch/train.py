@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_IDS, get_config
-from repro.core.plan import ExecutionPlan, STAGE_KERNELS
+from repro.core.plan import COMPUTE_DTYPES, ExecutionPlan, STAGE_KERNELS
 from repro.core.schedule import SCHEDULES
 from repro.core.strategy import Strategy
 from repro.data import LMBatchIterator, MTBatchIterator, SyntheticLMTask, SyntheticMTTask
@@ -52,7 +52,27 @@ def main():
         "--schedule", choices=SCHEDULES, default="gpipe",
         help="pipelined-backward activation liveness: gpipe stashes all "
         "microbatches at the fwd/bwd boundary, 1f1b bounds the per-stage "
-        "stash at min(micro_batches, num_stages)",
+        "stash at min(micro_batches, num_stages), zerobubble fills 1f1b's "
+        "bubble with weight-grad work, interleaved runs --virtual-stages "
+        "layer chunks per device",
+    )
+    ap.add_argument(
+        "--virtual-stages", type=int, default=1,
+        help="layer chunks per device for --schedule interleaved (v>1)",
+    )
+    ap.add_argument(
+        "--compute-dtype", choices=COMPUTE_DTYPES, default=None,
+        help="activation compute dtype; params stay fp32 master weights "
+        "(default: the config's dtype)",
+    )
+    ap.add_argument(
+        "--loss-scale-init", type=float, default=2.0**15,
+        help="initial dynamic loss scale (float16 only)",
+    )
+    ap.add_argument(
+        "--bucket-bytes", type=int, default=None,
+        help="bucketed delayed grad all-reduce target bucket size in bytes "
+        "(requires --overlap)",
     )
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -81,6 +101,8 @@ def main():
         strategy=strat, mesh=mesh, micro_batches=args.micro_batches,
         overlap=args.overlap, use_pipeline=args.pipeline,
         stage_kernel=args.stage_kernel, schedule=args.schedule,
+        virtual_stages=args.virtual_stages, compute_dtype=args.compute_dtype,
+        loss_scale_init=args.loss_scale_init, bucket_bytes=args.bucket_bytes,
     )
     plan.validate_batch(args.batch)
     if args.pipeline and not plan.pipelined:
@@ -110,10 +132,13 @@ def main():
 
     sched = PlateauDecay()
     n_params = sum(x.size for x in jax.tree.leaves(params))
+    resolved_dt = plan.resolve_compute_dtype(cfg)
+    mp_note = f" loss_scale={plan.loss_scale_init:g}" if plan.fp16(cfg) else ""
     print(
         f"arch={cfg.name} params={n_params/1e6:.1f}M strategy={strat.value} mesh={args.mesh} "
         f"micro_batches={args.micro_batches} pipeline={plan.pipelined} overlap={args.overlap} "
-        f"stage_kernel={plan.stage_kernel} schedule={plan.schedule}"
+        f"stage_kernel={plan.stage_kernel} schedule={plan.schedule} "
+        f"compute_dtype={resolved_dt}{mp_note}"
     )
     chunk = max(args.eval_every, args.steps if not args.eval_every else args.eval_every)
     done = 0

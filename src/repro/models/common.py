@@ -32,6 +32,22 @@ import jax.numpy as jnp
 Params = Dict[str, Any]
 Specs = Dict[str, Any]
 
+# Named compute dtypes. Parameters are always held in fp32 (master weights);
+# these are the dtypes activations may be computed in.
+DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+}
+
+
+def resolve_dtype(name: str):
+    """Map a dtype name from config/plan to the jnp dtype."""
+    try:
+        return DTYPES[name]
+    except KeyError:
+        raise ValueError(f"unknown compute dtype {name!r}; expected one of {tuple(DTYPES)}")
+
 
 # ---------------------------------------------------------------------------
 # init helpers

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import lstm
-from repro.models.common import Initializer, softmax_cross_entropy
+from repro.models.common import Initializer, resolve_dtype, softmax_cross_entropy
 
 Identity = lambda x: x
 
@@ -117,7 +117,7 @@ def forward_no_input_feeding(
     ``stage_kernel`` selects the attention-softmax head compute (jnp math or
     the fused Pallas Luong kernel).
     """
-    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    dt = resolve_dtype(cfg.dtype)
     run = backbone or (lambda ps, xs, rng: lstm.run_stacked_lstm(ps, xs, dropout_rng=rng, dropout=cfg.dropout)[0])
     src_e = params["src_emb"]["table"].astype(dt)[batch.src]
     tgt_e = params["tgt_emb"]["table"].astype(dt)[batch.tgt_in]
@@ -146,7 +146,7 @@ def forward_input_feeding(
 ):
     """Baseline / HybridNMTIF forward: Hc_{t-1} concatenated to the first
     decoder LSTM input (Fig. 1) — the decoder is a single serial scan."""
-    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    dt = resolve_dtype(cfg.dtype)
     h = cfg.d_model
     B, N = batch.tgt_in.shape
     src_e = params["src_emb"]["table"].astype(dt)[batch.src]
@@ -205,7 +205,7 @@ class Seq2SeqCache(NamedTuple):
 
 
 def init_seq2seq_cache(cfg: ModelConfig, batch: int, capacity: int) -> Seq2SeqCache:
-    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    dt = resolve_dtype(cfg.dtype)
     h = cfg.d_model
     states = tuple(lstm.init_lstm_state(batch, h) for _ in range(cfg.num_layers))
     return Seq2SeqCache(
@@ -225,7 +225,7 @@ def encode_extend(params, cfg: ModelConfig, src_chunk: jax.Array, cache: Seq2Seq
     [B, s] marks real tokens (default all-real); padded positions still run
     through the LSTM (same semantics as the batched training forward) but
     are masked out of the attention memory."""
-    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    dt = resolve_dtype(cfg.dtype)
     B, s = src_chunk.shape
     src_e = params["src_emb"]["table"].astype(dt)[src_chunk]
     h, enc_states = lstm.run_stacked_lstm(params["encoder"], src_e, states=list(cache.enc_states))
@@ -244,7 +244,7 @@ def init_memory_pools(cfg: ModelConfig, phys_pages: int, page_size: int):
     A source sentence reserves ``ceil(src_len / page_size)`` pages instead of
     a full ``max_len`` memory stripe (decode never writes the memory, so the
     reservation is exactly the prompt's length)."""
-    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    dt = resolve_dtype(cfg.dtype)
     return (
         jnp.zeros((phys_pages, page_size, cfg.d_model), dt),
         jnp.zeros((phys_pages, page_size), bool),
@@ -283,7 +283,7 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Seq2SeqCache,
     and decoder state, and the pin marks Hc replicated right there, so the
     per-token context vector is the only value crossing the model axis
     before the vocab-sharded eq. 5 GEMM."""
-    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    dt = resolve_dtype(cfg.dtype)
     emb = params["tgt_emb"]["table"].astype(dt)[token]
     x = jnp.concatenate([emb, cache.hc.astype(dt)], -1) if cfg.input_feeding else emb
     new_states = []

@@ -1,0 +1,307 @@
+"""Mixed-precision training: bf16/fp32 parity, fp16 dynamic loss scaling,
+fp32 gradient accumulation, and the bucketed delayed grad all-reduce.
+
+Tolerances (documented contract):
+
+* **bf16 vs fp32 parity** — bf16 keeps 8 mantissa bits, so per-leaf grads
+  are compared RELATIVE to the fp32 leaf's max magnitude:
+  ``max|g_bf16 - g_fp32| / (max|g_fp32| + 1e-6) < 0.1`` and
+  ``|loss_bf16 - loss_fp32| < 0.05`` (one bf16 ulp at loss ~6 is ~0.03).
+  fp16 has 10 mantissa bits but less exponent; same bound applies with
+  loss scaling active.
+* **fp32 accumulation** — the accumulator is fp32 from microbatch 0, so
+  16-way accumulation must match a float64 mean of the per-microbatch
+  grads to 1e-6 absolute (bf16 accumulation would drift ~1e-2 here).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import strategy as st
+from repro.core.plan import COMPUTE_DTYPES, ExecutionPlan
+from repro.models import seq2seq as s2s
+from repro.optim import adam
+from repro.train.trainer import (
+    LossScale,
+    TrainState,
+    init_train_state,
+    make_grad_fn,
+    make_train_step,
+    state_shardings,
+)
+
+pytestmark = pytest.mark.train_mp
+
+
+def _cfg():
+    return dataclasses.replace(get_config("seq2seq-rnn", smoke=True), dropout=0.0, dtype="float32")
+
+
+def _batch(cfg, B=8, M=12, N=10, reps=1):
+    ks = jax.random.split(jax.random.key(1), 3)
+    b = {
+        "src": jax.random.randint(ks[0], (B, M), 3, cfg.vocab_size),
+        "tgt_in": jax.random.randint(ks[1], (B, N), 3, cfg.vocab_size),
+        "tgt_out": jax.random.randint(ks[2], (B, N), 3, cfg.vocab_size),
+        "src_mask": jnp.ones((B, M), bool),
+        "tgt_mask": jnp.ones((B, N), bool),
+    }
+    if reps > 1:
+        b = {k: jnp.tile(v, (reps, 1)) for k, v in b.items()}
+    return b
+
+
+# ---------------------------------------------------------------------------
+# half-precision vs fp32 parity across strategy x schedule x stage_kernel
+# ---------------------------------------------------------------------------
+
+
+PARITY_GRID = [
+    # (strategy, plan kwargs) — schedules need the wavefront pipeline
+    (st.Strategy.SINGLE, {}),
+    (st.Strategy.DATA, {"micro_batches": 2}),
+    (st.Strategy.HYBRID, {"micro_batches": 2, "use_pipeline": True, "schedule": "gpipe"}),
+    (st.Strategy.HYBRID, {"micro_batches": 2, "use_pipeline": True, "schedule": "1f1b"}),
+    (st.Strategy.HYBRID, {"micro_batches": 2, "use_pipeline": True, "schedule": "zerobubble"}),
+    (st.Strategy.HYBRID, {"micro_batches": 2, "use_pipeline": True, "schedule": "interleaved", "virtual_stages": 2}),
+    (st.Strategy.HYBRID, {"micro_batches": 2, "use_pipeline": True, "stage_kernel": "pallas_interpret"}),
+    (st.Strategy.MODEL, {"use_pipeline": True}),
+]
+
+
+@pytest.mark.parametrize("half", ["bfloat16", "float16"])
+@pytest.mark.parametrize("strat,kw", PARITY_GRID)
+def test_half_precision_grad_parity(strat, kw, half):
+    """plan.compute_dtype half-precision loss/grads track the fp32 plan
+    within the documented relative tolerance, for every execution shape."""
+    cfg = _cfg()
+    params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    batch = _batch(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rng = jax.random.key(9)
+
+    p32 = ExecutionPlan(strategy=strat, mesh=mesh, compute_dtype="float32", **kw)
+    l32, _, g32 = jax.jit(make_grad_fn(cfg, p32))(params, batch, rng)
+    ph = ExecutionPlan(strategy=strat, mesh=mesh, compute_dtype=half, **kw)
+    lh, _, gh = jax.jit(make_grad_fn(cfg, ph))(params, batch, rng)
+
+    assert abs(float(lh) - float(l32)) < 0.05
+    for a, b in zip(jax.tree.leaves(g32), jax.tree.leaves(gh)):
+        rel = float(jnp.abs(a - b).max()) / (float(jnp.abs(a).max()) + 1e-6)
+        assert rel < 0.1, (strat, kw, half, rel)
+        # master weights: grads must come back fp32 regardless of compute dtype
+        assert b.dtype == jnp.float32
+
+
+def test_compute_dtype_threads_through_train_step():
+    """A full bf16 train step runs and moves the fp32 master weights."""
+    cfg = _cfg()
+    params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    plan = ExecutionPlan(strategy=st.Strategy.SINGLE, compute_dtype="bfloat16")
+    step, _, _ = make_train_step(cfg, adam(), plan=plan)
+    state = init_train_state(params, adam(), plan=plan, cfg=cfg)
+    state2, metrics = step(state, _batch(cfg), 1.0, jax.random.key(3))
+    assert jnp.isfinite(metrics["loss"])
+    for p0, p1 in zip(jax.tree.leaves(params), jax.tree.leaves(state2.params)):
+        assert p1.dtype == p0.dtype  # fp32 master weights stay fp32
+    assert any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(state2.params))
+    )
+
+
+# ---------------------------------------------------------------------------
+# fp16 dynamic loss scaling
+# ---------------------------------------------------------------------------
+
+
+def test_fp16_state_carries_loss_scale():
+    cfg = _cfg()
+    params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    plan = ExecutionPlan(strategy=st.Strategy.SINGLE, compute_dtype="float16", loss_scale_init=512.0)
+    state = init_train_state(params, adam(), plan=plan, cfg=cfg)
+    assert isinstance(state.scaling, LossScale)
+    assert float(state.scaling.scale) == 512.0
+    assert int(state.scaling.good_steps) == 0
+    # non-fp16 plans carry no scaling node (pytree structure contract)
+    for dt in ("float32", "bfloat16"):
+        p = ExecutionPlan(strategy=st.Strategy.SINGLE, compute_dtype=dt)
+        assert init_train_state(params, adam(), plan=p, cfg=cfg).scaling is None
+
+
+def test_fp16_clean_step_updates_and_counts():
+    cfg = _cfg()
+    params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    plan = ExecutionPlan(strategy=st.Strategy.SINGLE, compute_dtype="float16", loss_scale_init=2.0**10)
+    step, _, _ = make_train_step(cfg, adam(), plan=plan)
+    state = init_train_state(params, adam(), plan=plan, cfg=cfg)
+    state2, m = step(state, _batch(cfg), 1.0, jax.random.key(3))
+    assert float(m["overflow"]) == 0.0
+    assert float(m["loss_scale"]) == 2.0**10  # growth interval not reached
+    assert int(state2.scaling.good_steps) == 1
+    assert any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(state2.params))
+    )
+
+
+def test_fp16_overflow_skips_update_and_halves_scale():
+    """A scale chosen so scaled-loss overflows fp32: the step must leave
+    params AND optimizer state untouched, halve the scale, reset the
+    clean-step streak, and report the overflow."""
+    cfg = _cfg()
+    params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    plan = ExecutionPlan(strategy=st.Strategy.SINGLE, compute_dtype="float16", loss_scale_init=2.0**126)
+    step, _, _ = make_train_step(cfg, adam(), plan=plan)
+    state = init_train_state(params, adam(), plan=plan, cfg=cfg)
+    state2, m = step(state, _batch(cfg), 1.0, jax.random.key(3))
+    assert float(m["overflow"]) == 1.0
+    assert float(m["loss_scale"]) == 2.0**125
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(state2.params)):
+        assert float(jnp.abs(a - b).max()) == 0.0
+    for a, b in zip(jax.tree.leaves(state.opt_state), jax.tree.leaves(state2.opt_state)):
+        assert float(jnp.abs(jnp.asarray(a, jnp.float32) - jnp.asarray(b, jnp.float32)).max()) == 0.0
+    assert int(state2.scaling.good_steps) == 0
+    # the loss metric itself is UNSCALED and still finite
+    assert jnp.isfinite(m["loss"])
+
+
+def test_fp16_scale_grows_after_clean_streak():
+    cfg = _cfg()
+    params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    plan = ExecutionPlan(
+        strategy=st.Strategy.SINGLE, compute_dtype="float16",
+        loss_scale_init=2.0**10, loss_scale_growth=2,
+    )
+    step, _, _ = make_train_step(cfg, adam(), plan=plan)
+    state = init_train_state(params, adam(), plan=plan, cfg=cfg)
+    batch = _batch(cfg)
+    state, m = step(state, batch, 1.0, jax.random.key(3))
+    assert float(m["loss_scale"]) == 2.0**10 and int(state.scaling.good_steps) == 1
+    state, m = step(state, batch, 1.0, jax.random.key(4))
+    assert float(m["loss_scale"]) == 2.0**11  # doubled on the 2nd clean step
+    assert int(state.scaling.good_steps) == 0  # streak reset after growth
+
+
+def test_fp16_state_shardings_structure():
+    """On a mesh, the fp16 TrainState's LossScale node needs a matching
+    sharding node — the jit in_shardings pytree must line up end to end."""
+    cfg = _cfg()
+    params, specs = s2s.init_seq2seq(jax.random.key(0), cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shapes = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    sh16 = state_shardings(specs, shapes, mesh, st.Strategy.DATA, fp16=True)
+    assert isinstance(sh16.scaling, LossScale)
+    sh32 = state_shardings(specs, shapes, mesh, st.Strategy.DATA)
+    assert sh32.scaling is None
+    # the jit'd sharded step accepts and returns the fp16 state
+    plan = ExecutionPlan(strategy=st.Strategy.DATA, mesh=mesh, compute_dtype="float16")
+    step, sshard, _ = make_train_step(cfg, adam(), plan=plan, specs=specs, params_shapes=shapes)
+    assert isinstance(sshard.scaling, LossScale)
+    state = init_train_state(params, adam(), plan=plan, cfg=cfg)
+    state2, m = step(state, _batch(cfg), 1.0, jax.random.key(3))
+    assert isinstance(state2.scaling, LossScale)
+    assert float(m["overflow"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fp32 gradient accumulation (the make_grad_fn satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def test_grad_accumulation_is_fp32_exact():
+    """16-way accumulation matches the float64 mean of the 16 individual
+    microbatch grads to 1e-6 — only possible if the accumulator is fp32
+    from microbatch 0 (bf16 accumulation drifts ~1e-2 at this depth)."""
+    cfg = _cfg()
+    params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    batch = _batch(cfg, reps=2)  # B=16 so 16 microbatches of 1
+    rng = jax.random.key(11)
+    acc = ExecutionPlan(strategy=st.Strategy.SINGLE, micro_batches=16)
+    gacc = jax.jit(make_grad_fn(cfg, acc))(params, batch, rng)[2]
+    assert all(g.dtype == jnp.float32 for g in jax.tree.leaves(gacc))
+
+    single = make_grad_fn(cfg, ExecutionPlan(strategy=st.Strategy.SINGLE))
+    xs = acc.split_micro(batch)
+    ref = None
+    for i in range(16):
+        mb = {k: v[i] for k, v in xs.items()}
+        g = single(params, mb, jax.random.fold_in(rng, i))[2]
+        gl = [np.asarray(x, np.float64) for x in jax.tree.leaves(g)]
+        ref = gl if ref is None else [a + b for a, b in zip(ref, gl)]
+    err = max(
+        float(np.abs(np.asarray(a, np.float64) - b / 16).max())
+        for a, b in zip(jax.tree.leaves(gacc), ref)
+    )
+    assert err < 1e-6, err
+
+
+# ---------------------------------------------------------------------------
+# bucketed delayed grad all-reduce
+# ---------------------------------------------------------------------------
+
+
+def test_grad_buckets_partition_and_size():
+    """Buckets cover every leaf exactly once; every bucket but the last
+    reaches the size target (greedy close-on-threshold)."""
+    cfg = _cfg()
+    params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    target = 1 << 16
+    plan = ExecutionPlan(strategy=st.Strategy.SINGLE, overlap=True, micro_batches=2, bucket_bytes=target)
+    buckets = plan.grad_buckets(params)
+    leaves = jax.tree.leaves(params)
+    seen = [pos for b in buckets for pos in b["leaves"]]
+    assert sorted(seen) == list(range(len(leaves)))
+    for b in buckets[:-1]:
+        assert b["bytes"] >= target
+    for b in buckets:
+        assert b["bytes"] == sum(4 * leaves[p].size for p in b["leaves"])
+
+
+def test_bucketed_overlap_is_pure_reordering():
+    """Bucketed delayed all-reduce grads equal the plain accumulation
+    grads exactly — only the reduction order moves."""
+    cfg = _cfg()
+    params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    batch = _batch(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rng = jax.random.key(7)
+    base = ExecutionPlan(strategy=st.Strategy.DATA, mesh=mesh, micro_batches=4)
+    bkt = dataclasses.replace(base, overlap=True, bucket_bytes=1 << 16)
+    l1, e1, g1 = jax.jit(make_grad_fn(cfg, base))(params, batch, rng)
+    l2, e2, g2 = jax.jit(make_grad_fn(cfg, bkt))(params, batch, rng)
+    assert abs(float(l1) - float(l2)) < 1e-6
+    assert float(e1["denom"]) == float(e2["denom"])
+    gerr = max(float(jnp.abs(a - b).max()) for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
+    assert gerr < 1e-6, gerr
+
+
+# ---------------------------------------------------------------------------
+# plan validation for the new fields
+# ---------------------------------------------------------------------------
+
+
+def test_plan_mixed_precision_field_validation():
+    mk = lambda **kw: ExecutionPlan(strategy=st.Strategy.SINGLE, **kw)
+    for dt in COMPUTE_DTYPES:
+        assert mk(compute_dtype=dt).compute_dtype == dt
+    with pytest.raises(ValueError):
+        mk(compute_dtype="fp8")
+    with pytest.raises(ValueError):
+        mk(loss_scale_init=0.0)
+    with pytest.raises(ValueError):
+        mk(loss_scale_growth=0)
+    with pytest.raises(ValueError):
+        mk(bucket_bytes=0, overlap=True, micro_batches=2)
+    with pytest.raises(ValueError):  # buckets without the overlap lever: reject, don't ignore
+        mk(bucket_bytes=1 << 20)
+    cfg = _cfg()
+    # resolution: plan overrides config; config is the fallback
+    assert mk(compute_dtype="float16").resolve_compute_dtype(cfg) == "float16"
+    assert mk().resolve_compute_dtype(cfg) == "float32"
+    assert mk().resolve_compute_dtype(dataclasses.replace(cfg, dtype="bfloat16")) == "bfloat16"
+    assert mk(compute_dtype="float16").fp16(cfg) and not mk(compute_dtype="bfloat16").fp16(cfg)

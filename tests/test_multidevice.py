@@ -146,9 +146,11 @@ def test_pipeline_microbatched_wavefront_matches_sequential():
 
 def test_pipeline_schedule_grads_match_sequential_multistage():
     """The schedule-driven custom-vjp backward on a REAL 4-stage pipeline:
-    for gpipe and 1f1b at k in (1, 2, 4), outputs AND parameter/input grads
-    match the sequential reference — the mirrored backward wavefront's
-    ppermute chain and the per-group recompute are numerically exact."""
+    for gpipe and 1f1b at k in (1, 2, 4) — plus zerobubble and interleaved
+    (v=2, 1 layer/chunk) at the fully pipelined k=4 point — outputs AND
+    parameter/input grads match the sequential reference: the mirrored
+    backward wavefront's ppermute chain, the interleaved ring, and the
+    per-group recompute are numerically exact."""
     code = PREAMBLE + textwrap.dedent(
         """
         from repro.models import lstm
@@ -168,9 +170,13 @@ def test_pipeline_schedule_grads_match_sequential_multistage():
         with compat.set_mesh(mesh):
             stacked, _ = pl.stack_pipeline_params(params, 4)  # 2 layers/stage
             for k in (1, 2, 4):
-                for sched in ("gpipe", "1f1b"):
+                kinds = [("gpipe", 1), ("1f1b", 1)]
+                if k == 4:
+                    kinds += [("zerobubble", 1), ("interleaved", 2)]
+                for sched, vs in kinds:
                     fn = lambda st_, xx: pl.pipeline_lstm(
-                        mesh, st_, xx, in_dim=e, micro_batches=k, schedule=sched)
+                        mesh, st_, xx, in_dim=e, micro_batches=k,
+                        schedule=sched, virtual_stages=vs)
                     y = jax.jit(fn)(stacked, x)
                     g, gx = jax.jit(jax.grad(
                         lambda st_, xx: (fn(st_, xx) * w).sum(), argnums=(0, 1)))(stacked, x)

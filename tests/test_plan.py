@@ -503,6 +503,81 @@ def test_pipeline_activation_model_1f1b_bounds_memory():
     assert ob[16] == ob[8]  # saturated: flat in k past the pipeline depth
 
 
+@pytest.mark.pipeline
+def test_zerobubble_bubble_strictly_below_1f1b():
+    """The acceptance contract for the split backward: at the same (k, NS)
+    the zerobubble table's bubble fraction is strictly below 1f1b's
+    whenever 1f1b has any bubble to fill, because the W units land in the
+    cooldown idle slots instead of extending the fused B critical path."""
+    for S, NS, k in [(5, 2, 3), (3, 4, 8), (4, 4, 2), (6, 2, 4)]:
+        ob = PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind="1f1b")
+        zb = PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind="zerobubble")
+        assert zb.work_units == 3 * NS * k * S  # F, B, W each once per step
+        if ob.bubble_fraction > 0:
+            assert zb.bubble_fraction < ob.bubble_fraction, (S, NS, k)
+        # the split backward also shortens the lockstep critical path
+        assert zb.time_stretch() <= ob.time_stretch() + 1e-12
+
+
+@pytest.mark.pipeline
+def test_interleaved_v1_is_gpipe():
+    """interleaved with one chunk per device is literally the gpipe table."""
+    for S, NS, k in [(4, 2, 3), (3, 4, 2)]:
+        gp = PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind="gpipe")
+        il = PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind="interleaved", chunks=1)
+        assert il.table() == gp.table()
+        assert il.bubble_fraction == gp.bubble_fraction
+    with pytest.raises(ValueError):
+        PipelineSchedule(seq_len=4, num_stages=2, kind="gpipe", chunks=2)
+
+
+@pytest.mark.pipeline
+@pytest.mark.parametrize("strat", [st.Strategy.HYBRID, st.Strategy.MODEL])
+def test_pipelined_train_step_new_schedule_parity(strat):
+    """zerobubble and interleaved (v=2) execute a pure reordering of the
+    same per-microbatch gradient sums: loss and every grad leaf must match
+    the gpipe execution within fp32 reordering noise."""
+    cfg = dataclasses.replace(get_config("seq2seq-rnn", smoke=True), dropout=0.0, dtype="float32")
+    params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    batch = _fixed_batch(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rng = jax.random.key(17)
+    k = 4
+    plans = {
+        "gpipe": dict(schedule="gpipe"),
+        "zerobubble": dict(schedule="zerobubble"),
+        "interleaved_v2": dict(schedule="interleaved", virtual_stages=2),
+    }
+    losses, grads = {}, {}
+    for name, kw in plans.items():
+        plan = ExecutionPlan(
+            strategy=strat, mesh=mesh, micro_batches=k, use_pipeline=True, **kw,
+        )
+        losses[name], _, grads[name] = jax.jit(make_grad_fn(cfg, plan))(params, batch, rng)
+    for name in ("zerobubble", "interleaved_v2"):
+        assert abs(float(losses["gpipe"]) - float(losses[name])) < 1e-5, name
+        for a, b in zip(jax.tree.leaves(grads["gpipe"]), jax.tree.leaves(grads[name])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.pipeline
+def test_plan_virtual_stages_validation():
+    """virtual_stages is the interleaved lever only: v >= 1 always, v > 1
+    demands the interleaved schedule (other kinds have no chunk column)."""
+    with pytest.raises(ValueError):
+        ExecutionPlan(strategy=st.Strategy.HYBRID, virtual_stages=0)
+    with pytest.raises(ValueError):
+        ExecutionPlan(
+            strategy=st.Strategy.HYBRID, micro_batches=2, use_pipeline=True,
+            schedule="gpipe", virtual_stages=2,
+        )
+    plan = ExecutionPlan(
+        strategy=st.Strategy.HYBRID, micro_batches=2, use_pipeline=True,
+        schedule="interleaved", virtual_stages=2,
+    )
+    assert plan.pipeline_schedule(5).chunks == 2
+
+
 # ---------------------------------------------------------------------------
 # ServePlan: the serving half of the execution vocabulary
 # ---------------------------------------------------------------------------

@@ -237,6 +237,74 @@ def test_pipeline_schedule_1f1b_depth_gate(S, NS, k):
     assert ob.total_ticks <= gp.total_ticks
 
 
+@pytest.mark.pipeline
+@SET
+@given(hst.integers(1, 6), hst.integers(1, 5), hst.integers(1, 6), hst.integers(1, 3))
+def test_pipeline_schedule_interleaved_is_gpipe_over_virtual_stages(S, NS, k, v):
+    """The interleaved table IS the gpipe wavefront run over v*NS virtual
+    stages (round-robin device assignment), and v=1 is literally gpipe."""
+    from repro.core.schedule import PipelineSchedule
+
+    il = PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind="interleaved", chunks=v)
+    gp = PipelineSchedule(seq_len=S, num_stages=v * NS, micro_batches=k, kind="gpipe")
+    assert il.table() == gp.table()
+    assert il.virtual_stages == v * NS
+    for vs in range(v * NS):
+        assert il.device_of(vs) == vs % NS  # round-robin chunk placement
+    if v == 1:
+        assert il.table() == PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind="gpipe").table()
+
+
+@pytest.mark.pipeline
+@SET
+@given(hst.integers(1, 6), hst.integers(1, 5), hst.integers(1, 6))
+def test_pipeline_schedule_zerobubble_table_invariants(S, NS, k):
+    """The split backward: every (stage, micro, t) appears exactly once per
+    kind F/B/W; at most one unit per (tick, stage); W lands at-or-after its
+    own B (it consumes the same stashed activations but no cross-stage
+    cotangent); B keeps the wavefront dependency order; work == 3*NS*k*S."""
+    from repro.core.schedule import PipelineSchedule
+
+    zb = PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind="zerobubble")
+    tab = zb.table()
+    assert len(tab) == zb.work_units == 3 * NS * k * S
+    tick = {}
+    per_slot = set()
+    for u in tab:
+        assert (u.kind, u.stage, u.micro, u.t) not in tick
+        tick[(u.kind, u.stage, u.micro, u.t)] = u.tick
+        assert (u.tick, u.stage) not in per_slot
+        per_slot.add((u.tick, u.stage))
+    for s in range(NS):
+        for m in range(k):
+            for t in range(S):
+                ft, bt, wt = tick[("F", s, m, t)], tick[("B", s, m, t)], tick[("W", s, m, t)]
+                assert bt > ft      # input-grad needs its own forward
+                assert wt >= bt     # weight-grad deferred to-or-past its B
+                if s < NS - 1:
+                    assert bt > tick[("B", s + 1, m, t)]
+                if t < S - 1:
+                    assert bt > tick[("B", s, m, t + 1)]
+
+
+@pytest.mark.pipeline
+@SET
+@given(hst.integers(1, 6), hst.integers(2, 5), hst.integers(2, 6))
+def test_pipeline_schedule_zerobubble_fills_the_1f1b_bubble(S, NS, k):
+    """The point of the split: at the same (k, NS) the zerobubble bubble
+    fraction never exceeds 1f1b's — strictly below whenever 1f1b idles at
+    all — bought by stashing at least as many activation steps."""
+    from repro.core.schedule import PipelineSchedule
+
+    ob = PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind="1f1b")
+    zb = PipelineSchedule(seq_len=S, num_stages=NS, micro_batches=k, kind="zerobubble")
+    assert zb.bubble_fraction <= ob.bubble_fraction + 1e-12
+    if ob.bubble_fraction > 0:
+        assert zb.bubble_fraction < ob.bubble_fraction
+    # memory-for-bubble trade: the deferred W units hold their stash longer
+    assert zb.max_stash_steps >= ob.max_stash_steps
+
+
 # ---------------------------------------------------------------------------
 # _PagePool invariants: the host-side page allocator behind paged serving.
 # Pure numpy bookkeeping — no jax arrays — so these run dense and fast.
