@@ -16,7 +16,6 @@ import dataclasses
 import os
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.hybrid import scaling_factor_model

@@ -1,0 +1,115 @@
+"""Schema validator for the bench trajectory files.
+
+    PYTHONPATH=src python benchmarks/validate_records.py [paths...]
+
+Every ``experiments/bench/*.json`` is an append-only trajectory: a list of
+entries ``{"time": <iso timestamp>, "records": [<flat dict>, ...], ...}``.
+The benches append blindly (serve_bench/schedule_bench), so a half-written
+or drifted entry would only surface when a render/analysis script crashes
+much later — CI's bench-smoke step runs this right after the benches to
+fail at the writer instead.  Checks, per file:
+
+* top level is a non-empty list of dict entries;
+* every entry carries an ISO-ish ``time`` string and a non-empty
+  ``records`` list of dicts;
+* record values are JSON scalars (or one level of list/dict of scalars)
+  and every float is finite — NaN/Infinity serialize as non-standard JSON
+  and poison downstream aggregation;
+* records of the same ``kind`` within one ENTRY carry the same key set
+  (schema drift inside a kind means a writer forgot a field).  Untagged
+  records (no ``kind``) are exempt — the trajectory format lets their
+  schema grow across appends, and one bench run can mix row shapes.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+import sys
+
+_SCALARS = (str, int, float, bool, type(None))
+_TIME_HINT = "YYYY-MM-DDThh:mm:ss"
+
+
+def _finite(x) -> bool:
+    return not (isinstance(x, float) and not math.isfinite(x))
+
+
+def _flat_value_ok(v) -> bool:
+    if isinstance(v, _SCALARS):
+        return _finite(v)
+    if isinstance(v, list):
+        return all(isinstance(i, _SCALARS) and _finite(i) for i in v)
+    if isinstance(v, dict):
+        return all(isinstance(i, _SCALARS) and _finite(i) for i in v.values())
+    return False
+
+
+def _iso_ish(s) -> bool:
+    return isinstance(s, str) and len(s) >= 16 and s[4] == "-" and s[7] == "-" and s[10] == "T"
+
+
+def validate_file(path: str) -> list:
+    """Problems found in one trajectory file (empty list = valid)."""
+    problems = []
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable/unparsable: {e}"]
+    if not isinstance(data, list) or not data:
+        return [f"{path}: top level must be a non-empty list of entries, got {type(data).__name__}"]
+    for i, entry in enumerate(data):
+        keys_by_kind: dict = {}
+        where = f"{path}[{i}]"
+        if not isinstance(entry, dict):
+            problems.append(f"{where}: entry must be a dict, got {type(entry).__name__}")
+            continue
+        if not _iso_ish(entry.get("time")):
+            problems.append(f"{where}: missing/malformed 'time' ({_TIME_HINT}), got {entry.get('time')!r}")
+        records = entry.get("records")
+        if not isinstance(records, list) or not records:
+            problems.append(f"{where}: 'records' must be a non-empty list, got {records!r}")
+            continue
+        for j, rec in enumerate(records):
+            rwhere = f"{where}.records[{j}]"
+            if not isinstance(rec, dict) or not rec:
+                problems.append(f"{rwhere}: record must be a non-empty dict, got {rec!r}")
+                continue
+            for k, v in rec.items():
+                if not _flat_value_ok(v):
+                    problems.append(f"{rwhere}.{k}: non-scalar or non-finite value {v!r}")
+            kind = rec.get("kind")
+            if kind is None:
+                continue
+            keys = frozenset(rec)
+            prev = keys_by_kind.setdefault(kind, (keys, rwhere))
+            if prev[0] != keys:
+                missing = sorted(prev[0] - keys)
+                extra = sorted(keys - prev[0])
+                problems.append(
+                    f"{rwhere}: kind={kind!r} key set drifted from {prev[1]} "
+                    f"(missing {missing}, extra {extra})"
+                )
+    return problems
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:]) or sorted(
+        glob.glob(os.path.join("experiments", "bench", "*.json"))
+    )
+    if not paths:
+        print("[validate-records] no trajectory files found (experiments/bench/*.json)")
+        return 1
+    problems = []
+    for path in paths:
+        problems += validate_file(path)
+    for p in problems:
+        print(f"[validate-records] BAD {p}")
+    print(f"[validate-records] {len(paths)} file(s), {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,16 @@
+"""Static plan-contract auditing: lint lowered jaxprs/HLO against the
+ExecutionPlan / ServePlan they were built from — without executing anything.
+
+The auditors catch the bug classes that have actually bitten this repo:
+compiler-inserted reshards the plan never asked for (the PR 1
+stack-into-shard_map miscompile), silently dropped buffer donations,
+half-precision creep into the pinned-fp32 set (gates / softmax / logits /
+grad accumulation / master weights), unbounded jit cache keys on the serve
+path, and Pallas block shapes that cannot tile their grids.
+
+Entry points:
+  ``repro.analysis.audit.audit_train_entry`` / ``audit_serve_entry`` — one
+  plan each; ``run_matrix`` — the CI strategy x schedule x dtype x
+  cache_policy matrix; ``python -m repro.launch.audit`` — the CLI.
+"""
+from .findings import Finding, RULES, Severity, worst_severity  # noqa: F401

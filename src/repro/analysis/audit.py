@@ -1,0 +1,299 @@
+"""Plan-contract audit orchestrator: lower (never execute) the train steps
+and serve ticks of a plan matrix and lint each lowered graph against the
+contract its plan declares.
+
+One train entry:  build_lowerable -> trace (jaxpr) -> lower (StableHLO) ->
+compile (HLO) -> collective audit (comm_contract) + donation audit + dtype
+audit (half plans) + grad-accumulation audit (non-pipelined microbatched
+half plans).  One serve entry: ContinuousEngine.audit_lowerables() ->
+donation + collective audits per jitted closure + the static recompile-key
+enumeration (no lowering needed for that one).  Kernel entries are pure
+arithmetic over ``kernels.KERNEL_TILE_MODELS``.
+
+The matrices below are the CI surface: every entry must produce ZERO
+findings; the seeded-violation tests in tests/test_analysis.py prove each
+rule actually fires.  Multi-device entries need forced host devices —
+``launch/audit.py`` (the CLI) sets XLA_FLAGS before importing jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from .findings import AuditReport, Finding
+
+# 8 forced host devices cover every mesh in the matrix (8 data / 2 model /
+# 2x2 hybrid); the CLI forces exactly this many, dryrun --audit has 512
+_MIN_DEVICES = 8
+
+
+def _mesh(kind: str):
+    """Meshes carved from the first forced host devices (the matrix was
+    calibrated at 8; extra devices — e.g. dryrun's 512 — are ignored)."""
+    import jax
+    from jax.sharding import Mesh
+
+    if kind == "none":
+        return None
+    devs = np.asarray(jax.devices())
+    if len(devs) < _MIN_DEVICES:
+        raise RuntimeError(
+            f"mesh {kind!r} needs {_MIN_DEVICES} host devices, found {len(devs)}; "
+            "run via `python -m repro.launch.audit` (forces XLA_FLAGS) or set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={_MIN_DEVICES}"
+        )
+    if kind == "data8":
+        return Mesh(devs[:8], ("data",))
+    if kind == "model2":
+        return Mesh(devs[:2], ("model",))
+    if kind == "d2m2":
+        return Mesh(devs[:4].reshape(2, 2), ("data", "model"))
+    raise ValueError(f"unknown mesh kind {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# the CI matrices
+# --------------------------------------------------------------------------
+
+# strategy x schedule x dtype coverage for the paper arch's train step at
+# smoke scale (get_config(..., smoke=True), batch 64, seq 32).  `build` are
+# build_lowerable kwargs; every strategy family, every pipeline schedule in
+# SCHEDULES, both half dtypes, and the bucketed-overlap path appear.
+TRAIN_MATRIX = (
+    {"name": "train/single_fp32", "mesh": "none", "strategy": "single", "build": {}},
+    {"name": "train/data_fp32", "mesh": "data8", "strategy": "data", "build": {}},
+    {"name": "train/data_bf16", "mesh": "data8", "strategy": "data",
+     "build": {"compute_dtype": "bfloat16"}},
+    {"name": "train/data_bucketed_fp16", "mesh": "data8", "strategy": "data",
+     "build": {"compute_dtype": "float16", "overlap": True, "bucket_bytes": 1 << 16,
+               "micro_batches": 4}},
+    {"name": "train/model_pipe_gpipe", "mesh": "model2", "strategy": "model",
+     "build": {"use_pipeline": True, "micro_batches": 4}},
+    {"name": "train/model_pipe_1f1b_bf16", "mesh": "model2", "strategy": "model",
+     "build": {"use_pipeline": True, "schedule": "1f1b", "micro_batches": 4,
+               "compute_dtype": "bfloat16"}},
+    {"name": "train/hybrid_zerobubble_bf16", "mesh": "d2m2", "strategy": "hybrid",
+     "build": {"use_pipeline": True, "schedule": "zerobubble", "micro_batches": 4,
+               "compute_dtype": "bfloat16"}},
+    {"name": "train/hybrid_nopipe_mb4_bf16", "mesh": "d2m2", "strategy": "hybrid",
+     "build": {"micro_batches": 4, "compute_dtype": "bfloat16"}},
+    {"name": "train/hybrid_opt_fp16", "mesh": "d2m2", "strategy": "hybrid_opt",
+     "build": {"use_pipeline": True, "micro_batches": 2, "compute_dtype": "float16"}},
+)
+
+# cache_policy x paging x speculation coverage for the serve tick, one arch
+# per family, smoke scale, meshless (the sharded serve path is covered by
+# the serve_multidevice battery; its collectives are allowed-any anyway)
+SERVE_MATRIX = (
+    {"name": "serve/lm_full_kv", "arch": "qwen3-1.7b", "plan": {}},
+    {"name": "serve/lm_window", "arch": "qwen3-1.7b",
+     "plan": {"cache_policy": "window", "window": 8}},
+    {"name": "serve/ssm_recurrent", "arch": "xlstm-350m",
+     "plan": {"cache_policy": "recurrent"}},
+    {"name": "serve/seq2seq_encdec", "arch": "seq2seq-rnn",
+     "plan": {"cache_policy": "encdec_memory"}, "engine": {"bos": 1, "eos": None}},
+    {"name": "serve/lm_paged", "arch": "qwen3-1.7b",
+     "plan": {"page_size": 4}},
+    {"name": "serve/lm_spec", "arch": "qwen3-1.7b",
+     "plan": {"draft_arch": "xlstm-350m", "draft_len": 3}},
+    {"name": "serve/lm_paged_spec", "arch": "qwen3-1.7b",
+     "plan": {"page_size": 4, "draft_arch": "xlstm-350m", "draft_len": 3}},
+)
+
+_SERVE_PLAN_BASE = {"max_slots": 2, "max_len": 32, "prefill_chunk": 4}
+
+# smoke-shape kernel audit targets: (tag, arch, batch, seq_len)
+KERNEL_MATRIX = (
+    {"name": "kernels/seq2seq-rnn", "arch": "seq2seq-rnn", "batch": 64, "seq_len": 32},
+    {"name": "kernels/qwen3-1.7b", "arch": "qwen3-1.7b", "batch": 8, "seq_len": 128},
+    {"name": "kernels/qwen3-moe-30b-a3b", "arch": "qwen3-moe-30b-a3b", "batch": 8, "seq_len": 128},
+)
+
+
+def _smoke_shape():
+    from repro.configs.base import InputShape
+
+    return InputShape("train_smk", 32, 64, "train")
+
+
+# --------------------------------------------------------------------------
+# per-entry auditors
+# --------------------------------------------------------------------------
+
+
+def audit_train_entry(entry: dict, *, arch: str = "seq2seq-rnn") -> List[Finding]:
+    """Lower + compile one training plan and run every applicable audit."""
+    from repro.configs import get_config
+    from repro.core import compat, hybrid
+    from repro.core.plan import ExecutionPlan
+    from repro.core.strategy import Strategy
+    from repro.launch import hlo_analysis
+    from repro.launch.inputs import abstract_init, build_lowerable
+
+    from . import collectives as coll
+    from . import donation, dtypes
+
+    tag = entry["name"]
+    cfg = get_config(arch, smoke=True)
+    shape = _smoke_shape()
+    mesh = _mesh(entry["mesh"])
+    strat = Strategy(entry["strategy"])
+    kw = dict(entry["build"])
+
+    fn, args = build_lowerable(cfg, shape, mesh, strat, **kw)
+    with compat.set_mesh(mesh):
+        traced = fn.trace(*args)
+        lowered = traced.lower()
+        compiled = lowered.compile()
+
+    fallback = max(cfg.num_layers // cfg.layer_group, 1)
+    stats = hlo_analysis.analyze_hlo(compiled.as_text(), fallback_trip=fallback)
+
+    # the contract comes from the plan's own terms (not the HLO)
+    bucket_count = 0
+    if kw.get("bucket_bytes"):
+        from repro.models import seq2seq as s2s
+
+        plan = ExecutionPlan(
+            strategy=strat, mesh=mesh,
+            micro_batches=kw.get("micro_batches", 1),
+            overlap=kw.get("overlap", False),
+            use_pipeline=kw.get("use_pipeline", False),
+            schedule=kw.get("schedule", "gpipe"),
+            compute_dtype=kw.get("compute_dtype"),
+            bucket_bytes=kw.get("bucket_bytes"),
+        )
+        shapes, _ = abstract_init(cfg, lambda k, c: s2s.init_seq2seq(k, c))
+        bucket_count = len(plan.grad_buckets(shapes))
+    devices = int(mesh.devices.size) if mesh is not None else 1
+    contract = hybrid.comm_contract(
+        cfg,
+        strategy=strat.value,
+        devices=devices,
+        batch=shape.global_batch,
+        src_len=shape.seq_len // 2,
+        tgt_len=shape.seq_len // 2,
+        micro_batches=kw.get("micro_batches", 1),
+        overlap=kw.get("overlap", False),
+        pipelined=kw.get("use_pipeline", False),
+        compute_dtype=kw.get("compute_dtype"),
+        bucket_count=bucket_count,
+    )
+
+    findings = coll.audit_collectives(tag, stats, contract)
+    # the train step donates its TrainState (donate_argnums=(0,)): the
+    # lowering must alias at least one of its leaves back to an output
+    findings += donation.audit_donation(tag, lowered.as_text(), compiled.as_text())
+    if kw.get("compute_dtype") in dtypes.HALF_DTYPES:
+        findings += dtypes.audit_dtypes(tag, traced.jaxpr)
+        if kw.get("micro_batches", 1) > 1 and not kw.get("use_pipeline", False):
+            findings += dtypes.audit_grad_accumulation(tag, traced.jaxpr)
+    return findings
+
+
+def audit_serve_entry(entry: dict) -> List[Finding]:
+    """Build one engine, lower every hot-path closure, audit donation and
+    collectives per closure, then statically enumerate the jit key space."""
+    from repro.configs import get_config
+    from repro.core import hybrid
+    from repro.core.plan import ServePlan
+    from repro.models import seq2seq as s2s
+    from repro.models import transformer as tfm
+    from repro.serve.engine import ContinuousEngine
+
+    from . import collectives as coll
+    from . import donation, recompile
+
+    import jax
+
+    tag = entry["name"]
+    cfg = dataclasses.replace(
+        get_config(entry["arch"], smoke=True), dropout=0.0, dtype="float32"
+    )
+    if cfg.family == "seq2seq":
+        params, _ = s2s.init_seq2seq(jax.random.key(0), cfg)
+    else:
+        params, _ = tfm.init_lm(jax.random.key(0), cfg)
+    plan = ServePlan(**{**_SERVE_PLAN_BASE, **entry["plan"]})
+    plan.validate_for(cfg)
+    eng = ContinuousEngine(cfg, params, plan, **entry.get("engine", {}))
+
+    ndev = int(plan.mesh.devices.size) if plan.mesh is not None else 1
+    contract = hybrid.serve_comm_contract(devices=ndev)
+
+    findings: List[Finding] = []
+    from repro.launch import hlo_analysis
+
+    for name, (fn, args) in eng.audit_lowerables().items():
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        if name in ContinuousEngine.AUDIT_DONATING:
+            findings += donation.audit_donation(
+                f"{tag}/{name}", lowered.as_text(), compiled.as_text()
+            )
+        stats = hlo_analysis.analyze_hlo(compiled.as_text(), fallback_trip=1)
+        findings += coll.audit_collectives(f"{tag}/{name}", stats, contract)
+
+    keyspaces = (
+        recompile.serve_cache_keyspaces(plan)
+        if plan.admission == "continuous"
+        else recompile.static_cache_keyspaces(plan)
+    )
+    findings += recompile.audit_recompile(tag, keyspaces, recompile.declared_key_budget(plan))
+    return findings
+
+
+def audit_kernel_entry(entry: dict) -> List[Finding]:
+    from repro.configs import get_config
+
+    from . import pallas_checks
+
+    cfg = get_config(entry["arch"], smoke=True)
+    return pallas_checks.audit_config_kernels(
+        entry["name"], cfg, batch=entry["batch"], seq_len=entry["seq_len"]
+    )
+
+
+# --------------------------------------------------------------------------
+# the matrix runner
+# --------------------------------------------------------------------------
+
+
+def run_matrix(
+    *,
+    train: bool = True,
+    serve: bool = True,
+    kernels: bool = True,
+    only: Optional[str] = None,
+    verbose: bool = False,
+) -> AuditReport:
+    """Audit every matrix entry (optionally filtered by ``only`` substring)
+    into one :class:`AuditReport`.  An entry that fails to even lower is
+    itself a finding — the audit never silently skips coverage."""
+    report = AuditReport()
+
+    def run(entries, auditor):
+        for entry in entries:
+            if only and only not in entry["name"]:
+                continue
+            if verbose:
+                print(f"[audit] {entry['name']} ...", flush=True)
+            try:
+                report.extend(entry["name"], auditor(entry))
+            except Exception as e:  # noqa: BLE001 — an unlowered entry is a finding
+                report.extend(entry["name"], [Finding(
+                    rule="SHRD003",
+                    location=f"{entry['name']}/<build>",
+                    message=f"entry failed to lower/audit: {e!r}",
+                    fix_hint="the matrix entry itself is broken; fix the plan or the builder",
+                )])
+
+    if train:
+        run(TRAIN_MATRIX, audit_train_entry)
+    if serve:
+        run(SERVE_MATRIX, audit_serve_entry)
+    if kernels:
+        run(KERNEL_MATRIX, audit_kernel_entry)
+    return report

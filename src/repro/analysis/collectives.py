@@ -1,0 +1,73 @@
+"""Collective audit: match lowered HLO collectives against a CommContract.
+
+Consumes the per-op :class:`repro.launch.hlo_analysis.CollectiveOp` records
+(async pairs already deduplicated) and the contract built by
+``core.hybrid.comm_contract`` from the plan's own terms.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import List
+
+from repro.core.hybrid import CommContract
+from repro.launch.hlo_analysis import HloStats
+
+from .findings import Finding
+
+
+def _fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB"):
+        if abs(b) < 1024 or unit == "GB":
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}GB"
+
+
+def audit_collectives(tag: str, stats: HloStats, contract: CommContract) -> List[Finding]:
+    findings: List[Finding] = []
+    by_kind: dict = defaultdict(list)
+    for op in stats.collective_ops:
+        by_kind[op.kind].append(op)
+
+    for kind, ops in sorted(by_kind.items()):
+        total = sum(o.bytes for o in ops)
+        biggest = max(ops, key=lambda o: o.bytes)
+        where = f"{tag}/{biggest.computation}/{biggest.op}"
+        if kind not in contract.allowed:
+            findings.append(Finding(
+                rule="SHRD001",
+                location=where,
+                message=(f"{kind} x{len(ops)} ({_fmt_bytes(total)}) lowered but the plan's "
+                         f"comm set allows only {sorted(contract.allowed) or 'no collectives'}"),
+            ))
+            continue
+        if total > contract.ceiling_bytes:
+            findings.append(Finding(
+                rule="SHRD002",
+                location=where,
+                message=(f"{kind} moves {_fmt_bytes(total)}/device, above the plan ceiling "
+                         f"{_fmt_bytes(contract.ceiling_bytes)}"),
+            ))
+
+    for kind in sorted(contract.required):
+        if kind not in by_kind:
+            findings.append(Finding(
+                rule="SHRD003",
+                location=f"{tag}/<module>",
+                message=f"plan requires {kind} (strategy sync) but none lowered",
+            ))
+
+    if contract.min_all_reduce_ops:
+        # GSPMD folds the delayed bucket psums into the accumulation loop
+        # body, so bucket syncs are not distinguishable by trip multiplier;
+        # the promise that IS checkable: at least one all-reduce instruction
+        # per bucket survives lowering (a dropped bucket sync lowers none)
+        n_ar = len(by_kind.get("all-reduce", []))
+        if n_ar < contract.min_all_reduce_ops:
+            findings.append(Finding(
+                rule="SHRD004",
+                location=f"{tag}/<module>",
+                message=(f"bucketed overlap promises >= {contract.min_all_reduce_ops} "
+                         f"all-reduce instructions (one per grad bucket), found {n_ar}"),
+            ))
+    return findings

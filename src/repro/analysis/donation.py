@@ -1,0 +1,78 @@
+"""Donation audit: donated buffers must survive lowering as input-output
+aliases, not silent copies.
+
+jax drops an unusable donation (dtype/sharding mismatch on the returned
+buffer) with only a UserWarning; the step then pays a full copy of the
+donated buffer — for slot tables and TrainState that is the largest buffer
+in the program.  Two text artifacts carry the ground truth:
+
+* the StableHLO lowering marks donated-and-aliased args with a
+  ``tf.aliasing_output = N : i32`` arg attribute;
+* the compiled HLO module header carries the pairs XLA actually kept:
+  ``input_output_alias={ {0}: (0, {}, may-alias), ... }``.
+"""
+from __future__ import annotations
+
+import re
+from typing import List
+
+from .findings import Finding
+
+def stablehlo_alias_count(stablehlo_text: str) -> int:
+    """Donated args the lowering managed to alias to an output.  The
+    attribute appears exactly once per aliased arg; matching the bare token
+    sidesteps the sharded case, where an ``mhlo.sharding`` attribute full
+    of braces and commas precedes it in the same arg attribute dict."""
+    return stablehlo_text.count("tf.aliasing_output")
+
+
+def compiled_alias_params(compiled_text: str) -> set:
+    """Parameter indices the compiled module aliases to outputs, from the
+    module header's ``input_output_alias={ {out}: (param, {idx}, ...) }``.
+    The value nests braces (output/param tuple indices), so the extent is
+    found by brace balancing, not regex."""
+    header = compiled_text.split("\n", 1)[0]
+    i = header.find("input_output_alias={")
+    if i < 0:
+        return set()
+    start = i + len("input_output_alias=")
+    depth = 0
+    for j in range(start, len(header)):
+        if header[j] == "{":
+            depth += 1
+        elif header[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return {int(p) for p in re.findall(r"\((\d+),", header[start:j])}
+    return set()
+
+
+def audit_donation(
+    tag: str,
+    stablehlo_text: str,
+    compiled_text: str,
+    *,
+    expect_donation: bool = True,
+    min_aliases: int = 1,
+) -> List[Finding]:
+    """``expect_donation``: the caller jitted with donate_argnums, so at
+    least ``min_aliases`` args must alias through BOTH artifacts."""
+    findings: List[Finding] = []
+    declared = stablehlo_alias_count(stablehlo_text)
+    kept = compiled_alias_params(compiled_text)
+    if expect_donation and declared < min_aliases:
+        findings.append(Finding(
+            rule="DON001",
+            location=f"{tag}/<lowering>",
+            message=(f"donate_argnums declared but only {declared} arg(s) carry "
+                     f"tf.aliasing_output (expected >= {min_aliases}): jax dropped the "
+                     "donation at trace time (dtype/sharding change on the returned buffer)"),
+        ))
+    elif declared and len(kept) < declared:
+        findings.append(Finding(
+            rule="DON002",
+            location=f"{tag}/<compile>",
+            message=(f"lowering declared {declared} aliased args but the compiled module "
+                     f"kept only {len(kept)} input_output_alias pairs"),
+        ))
+    return findings

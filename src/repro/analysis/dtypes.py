@@ -1,0 +1,147 @@
+"""Dtype-policy audit: walk the jaxpr of a half-precision train step and
+prove the pinned-fp32 set stayed fp32.
+
+The mixed-precision policy (DESIGN.md §9) pins gates, softmax, logits,
+grad accumulation and the loss-scale arithmetic at fp32 while the bulk
+compute runs bf16/fp16 over fp32 master weights.  In jaxpr terms:
+
+* no ``exp`` with a half-precision output — every softmax/CE exp is fp32
+  (``tanh`` is NOT checked: the Luong head's eq.-4 tanh legitimately runs
+  at compute precision; half ``reduce_sum`` is NOT checked either — bias
+  grads legitimately reduce at compute precision inside the backward);
+* no half-precision output leaf — master weights, optimizer state and the
+  loss scale come back fp32 or the update path downcast persistent state;
+* a non-pipelined microbatched half plan must carry fp32 param-shaped
+  accumulators through its accumulation scan (Ott et al. 1806.00187) —
+  their absence means grads are summing at half precision.  (Pipelined
+  executors accumulate outside scan carries, so the structural check does
+  not apply there.)
+"""
+from __future__ import annotations
+
+from typing import Iterator, List
+
+import jax.core as jcore
+
+from .findings import Finding
+
+HALF_DTYPES = ("bfloat16", "float16")
+
+_RULE_BY_PRIM = {
+    "exp": "DT001",
+    "exp2": "DT001",
+    "logistic": "DT002",
+}
+
+
+def _subjaxprs(value) -> Iterator:
+    """Every jaxpr reachable from one eqn.params value (ClosedJaxpr, raw
+    Jaxpr, or an arbitrarily nested tuple/list/dict of them)."""
+    if isinstance(value, jcore.ClosedJaxpr):
+        yield value.jaxpr
+    elif isinstance(value, jcore.Jaxpr):
+        yield value
+    elif isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _subjaxprs(v)
+    elif isinstance(value, dict):
+        for v in value.values():
+            yield from _subjaxprs(v)
+
+
+def iter_eqns(jaxpr) -> Iterator:
+    """Depth-first over every equation, descending into control-flow and
+    pjit sub-jaxprs.  Accepts a Jaxpr or ClosedJaxpr."""
+    if isinstance(jaxpr, jcore.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from iter_eqns(sub)
+
+
+def _is_half(aval) -> bool:
+    dt = getattr(aval, "dtype", None)
+    return dt is not None and str(dt) in HALF_DTYPES
+
+
+def _param_shapes(jaxpr) -> set:
+    """Shapes of the fp32 input leaves (master weights / optimizer state /
+    data), plus their de-stacked variants — pipelined plans stack stage
+    params along a leading [NS] dim while per-stage buffers drop it."""
+    shapes = set()
+    for v in jaxpr.invars:
+        av = getattr(v, "aval", None)
+        dt = getattr(av, "dtype", None)
+        if dt is not None and str(dt) == "float32" and av.ndim >= 1:
+            shapes.add(tuple(av.shape))
+            if av.ndim >= 2:
+                shapes.add(tuple(av.shape[1:]))
+    return shapes
+
+
+def audit_grad_accumulation(tag: str, closed_jaxpr) -> List[Finding]:
+    """DT004 for non-pipelined microbatched half plans: the accumulation
+    scan must carry fp32 param-shaped grad accumulators.  Zero of them
+    means the sum over microbatches runs at compute precision — exactly
+    the fp32-accumulation-point loss Ott et al. warn about.  (Half
+    param-shaped carries are NOT flagged: the cast compute weights ride
+    the same scans legitimately.)"""
+    jaxpr = closed_jaxpr.jaxpr if isinstance(closed_jaxpr, jcore.ClosedJaxpr) else closed_jaxpr
+    pshapes = _param_shapes(jaxpr)
+    fp32_accumulators = 0
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name != "scan":
+            continue
+        sub = eqn.params.get("jaxpr")
+        if sub is None:
+            continue
+        # scan in_avals are [consts..., carries..., xs...]
+        nc = eqn.params.get("num_consts", 0)
+        num_carry = eqn.params.get("num_carry", 0)
+        for av in sub.in_avals[nc:nc + num_carry]:
+            if str(getattr(av, "dtype", "")) == "float32" and tuple(av.shape) in pshapes:
+                fp32_accumulators += 1
+    if fp32_accumulators == 0:
+        return [Finding(
+            rule="DT004",
+            location=f"{tag}/jaxpr/scan",
+            message=("microbatched half-precision step carries no fp32 param-shaped "
+                     "accumulators through its scans — grad accumulation is running "
+                     "at compute precision"),
+        )]
+    return []
+
+
+def audit_dtypes(tag: str, closed_jaxpr, *, check_outputs: bool = True) -> List[Finding]:
+    """Audit one traced half-precision step.  ``closed_jaxpr`` is the
+    ClosedJaxpr from ``jitted.trace(*args).jaxpr``.  Call only for plans
+    with ``compute_dtype`` in the half set — an fp32 plan trivially has no
+    half ops and auditing it would only mask a broken matrix."""
+    findings: List[Finding] = []
+    hits: dict = {}
+    for eqn in iter_eqns(closed_jaxpr):
+        rule = _RULE_BY_PRIM.get(eqn.primitive.name)
+        if rule is None:
+            continue
+        if any(_is_half(v.aval) for v in eqn.outvars):
+            key = (rule, eqn.primitive.name)
+            hits[key] = hits.get(key, 0) + 1
+    for (rule, prim), count in sorted(hits.items()):
+        findings.append(Finding(
+            rule=rule,
+            location=f"{tag}/jaxpr/{prim}",
+            message=f"{count} half-precision {prim} op(s) in the pinned-fp32 set",
+        ))
+    if check_outputs:
+        jaxpr = closed_jaxpr.jaxpr if isinstance(closed_jaxpr, jcore.ClosedJaxpr) else closed_jaxpr
+        half_outs = sum(1 for v in jaxpr.outvars if _is_half(getattr(v, "aval", None)))
+        if half_outs:
+            findings.append(Finding(
+                rule="DT003",
+                location=f"{tag}/jaxpr/outputs",
+                message=(f"{half_outs} output leaf(s) are half precision — persistent "
+                         "state (master weights / opt state / loss scale) must return fp32"),
+            ))
+    return findings

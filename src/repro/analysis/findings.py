@@ -1,0 +1,149 @@
+"""Structured audit findings and the rule catalog.
+
+Every auditor emits :class:`Finding` rows tagged with a rule id from
+:data:`RULES`; the catalog is the single source of truth for severity and
+the generic fix hint (a finding may carry a more specific one).  DESIGN.md
+§10 documents the catalog and the procedure for adding a rule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+class Severity:
+    ERROR = "error"      # the lowered graph violates the plan's contract
+    WARNING = "warning"  # suspicious but possibly intended; audit still passes
+    INFO = "info"        # informational only
+
+    ORDER = {ERROR: 2, WARNING: 1, INFO: 0}
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    severity: str
+    title: str
+    hint: str
+
+
+RULES: Dict[str, Rule] = {
+    r.id: r
+    for r in [
+        # ---- sharding / collective contract ------------------------------
+        Rule("SHRD001", Severity.ERROR,
+             "collective kind not in the plan's allowed comm set (unexpected GSPMD reshard)",
+             "pin the intermediate with with_sharding_constraint / shard_map so "
+             "GSPMD cannot insert a resharding collective the plan never priced"),
+        Rule("SHRD002", Severity.ERROR,
+             "collective byte volume exceeds the plan's comm ceiling",
+             "compare against CommCost in core/hybrid.py: either the contract "
+             "ceiling is stale or the graph reshards far more than the plan models"),
+        Rule("SHRD003", Severity.ERROR,
+             "required collective kind missing from the lowered graph",
+             "the plan promises this sync (grad all-reduce / pipeline permute); "
+             "its absence means the step is not actually synchronizing"),
+        Rule("SHRD004", Severity.WARNING,
+             "bucketed grad sync lowered fewer top-level all-reduces than grad_buckets",
+             "bucket_bytes promises one delayed psum per bucket outside the "
+             "accumulation loop; check trainer bucket folding"),
+        # ---- donation ----------------------------------------------------
+        Rule("DON001", Severity.ERROR,
+             "donated buffer lost its input-output alias (silent copy)",
+             "the donated arg no longer aliases an output — usually a dtype or "
+             "sharding change on the returned buffer; jax drops the donation "
+             "with only a UserWarning and every step pays a full copy"),
+        Rule("DON002", Severity.WARNING,
+             "compiled module kept fewer aliases than the lowering declared",
+             "XLA refused some declared tf.aliasing_output pairs at compile "
+             "time; check layouts/shardings of the returned buffers"),
+        # ---- dtype policy ------------------------------------------------
+        Rule("DT001", Severity.ERROR,
+             "half-precision exp (softmax must be computed in fp32)",
+             "softmax/CE paths are in the pinned-fp32 set; cast scores to "
+             "float32 before exp (see models mixed-precision policy)"),
+        Rule("DT002", Severity.ERROR,
+             "half-precision logistic (LSTM gates must be computed in fp32)",
+             "gate activations are in the pinned-fp32 set; compute gates at "
+             "float32 and cast only the cell outputs"),
+        Rule("DT003", Severity.ERROR,
+             "train-step output leaf is half precision (master state downcast)",
+             "master weights / optimizer state / loss-scale live in fp32; a "
+             "half output means the update path downcasts persistent state"),
+        Rule("DT004", Severity.ERROR,
+             "grad accumulation not provably fp32 (no fp32 param-shaped scan accumulators)",
+             "accumulate in fp32: half-precision partial sums lose the small "
+             "microbatch contributions (Ott et al. 1806.00187); the accumulation "
+             "scan must carry fp32 grad buffers"),
+        # ---- recompile hazards -------------------------------------------
+        Rule("RC001", Severity.ERROR,
+             "serve-path jit key space is unbounded",
+             "a per-request shape or python value reaches a jit boundary; "
+             "bucket it (prefill_chunk padding) so the key set is finite"),
+        Rule("RC002", Severity.ERROR,
+             "serve-path jit key count exceeds the declared budget",
+             "more distinct (closure, sampler, shape-bucket) keys than the "
+             "plan declares; raise the budget knowingly or collapse variants"),
+        # ---- pallas static checks ----------------------------------------
+        Rule("PL001", Severity.ERROR,
+             "kernel block shape does not divide its grid dimension",
+             "the kernel raises at trace time for this shape; clamp the "
+             "requested block through kernels.fit_block"),
+        Rule("PL002", Severity.ERROR,
+             "kernel VMEM tile estimate exceeds the per-core budget",
+             "shrink the block sizes: resident in+out+scratch tiles must fit "
+             "~16 MB/core on v5e"),
+        Rule("PL003", Severity.WARNING,
+             "kernel block not a multiple of the 128-lane MXU tile",
+             "misaligned blocks pad in hardware; prefer multiples of 128 on "
+             "the minor dims"),
+    ]
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One audit hit: ``rule`` keys into :data:`RULES`; ``location`` is a
+    'graph/computation/op'-style path; ``fix_hint`` defaults to the rule's
+    generic hint."""
+    rule: str
+    location: str
+    message: str
+    fix_hint: str = ""
+
+    @property
+    def severity(self) -> str:
+        return RULES[self.rule].severity
+
+    def render(self) -> str:
+        hint = self.fix_hint or RULES[self.rule].hint
+        return f"[{self.rule}:{self.severity}] {self.location}: {self.message}\n    hint: {hint}"
+
+
+def worst_severity(findings: List[Finding]) -> str | None:
+    if not findings:
+        return None
+    return max((f.severity for f in findings), key=lambda s: Severity.ORDER[s])
+
+
+@dataclass
+class AuditReport:
+    """Findings plus what was actually audited (so 'zero findings' is
+    distinguishable from 'audited nothing')."""
+    findings: List[Finding] = field(default_factory=list)
+    audited: List[str] = field(default_factory=list)
+
+    def extend(self, tag: str, findings: List[Finding]):
+        self.audited.append(tag)
+        self.findings.extend(findings)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == Severity.ERROR]
+
+    def render(self) -> str:
+        lines = [f"audited {len(self.audited)} graphs: "
+                 f"{len(self.findings)} findings ({len(self.errors)} errors)"]
+        for f in sorted(self.findings, key=lambda f: (-Severity.ORDER[f.severity], f.rule)):
+            lines.append(f.render())
+        return "\n".join(lines)

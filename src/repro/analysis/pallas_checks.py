@@ -1,0 +1,86 @@
+"""Pallas static checks: block divisibility, VMEM tile estimates, MXU
+alignment — over the kernel registry's tile models, never tracing a kernel.
+
+Each kernel's wrapper raises at trace time when a block fails to divide its
+dim; this audit reproduces that arithmetic (``kernels.KERNEL_TILE_MODELS``)
+for the shapes a config will actually run, so a bad (shape, block) pairing
+fails the audit instead of a production trace.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro import kernels as K
+
+from .findings import Finding
+
+
+def audit_kernel_tiles(tag: str, kernel: str, *, elt: int = 4, **dims) -> List[Finding]:
+    """Audit one kernel at one shape.  ``dims`` are the tile model's
+    keyword shape/block args (e.g. ``B=.., In=.., H=.., block_b=..``)."""
+    model = K.KERNEL_TILE_MODELS[kernel](elt=elt, **dims)
+    findings: List[Finding] = []
+    for dim_name, dim, block in model["divides"]:
+        if dim % block:
+            findings.append(Finding(
+                rule="PL001",
+                location=f"{tag}/{kernel}/{dim_name}",
+                message=f"{dim_name}={dim} not divisible by block {block}",
+            ))
+        if block < 1:
+            findings.append(Finding(
+                rule="PL001",
+                location=f"{tag}/{kernel}/{dim_name}",
+                message=f"degenerate block {block} for {dim_name}={dim}",
+            ))
+    if model["vmem_bytes"] > K.VMEM_BUDGET_BYTES:
+        findings.append(Finding(
+            rule="PL002",
+            location=f"{tag}/{kernel}/vmem",
+            message=(f"resident tiles estimate {model['vmem_bytes'] / 2**20:.1f} MB "
+                     f"> {K.VMEM_BUDGET_BYTES / 2**20:.0f} MB/core budget"),
+        ))
+    # dims at or under one lane-width pad in hardware no matter what the
+    # block choice is; only a >128 misaligned minor dim wastes MXU tiles
+    minor = sorted({d for d in model["minor_dims"] if d > K.MXU_LANES and d % K.MXU_LANES})
+    if minor:
+        findings.append(Finding(
+            rule="PL003",
+            location=f"{tag}/{kernel}/alignment",
+            message=f"minor tile dims {minor} not multiples of the {K.MXU_LANES}-lane MXU tile",
+        ))
+    return findings
+
+
+def audit_config_kernels(tag: str, cfg, *, batch: int, seq_len: int) -> List[Finding]:
+    """The kernels a config's train step can dispatch, at its real shapes,
+    with the blocks the ops wrappers would actually pick (fit_block)."""
+    h = cfg.d_model
+    findings: List[Finding] = []
+    if cfg.family == "seq2seq":
+        emb = cfg.emb_size
+        findings += audit_kernel_tiles(
+            tag, "lstm_cell",
+            B=batch, In=emb, H=h,
+            block_b=K.fit_block(batch, 256), block_h=K.fit_block(h, 256),
+        )
+        findings += audit_kernel_tiles(
+            tag, "luong_attn",
+            B=batch, N=seq_len, M=seq_len, h=h,
+            block_n=K.fit_block(seq_len, 128),
+        )
+    else:
+        heads = max(1, cfg.num_heads)
+        findings += audit_kernel_tiles(
+            tag, "flash_attn",
+            BH=batch * heads, S=seq_len, T=seq_len, D=max(1, cfg.head_dim),
+            block_q=K.fit_block(seq_len, 512), block_kv=K.fit_block(seq_len, 512),
+        )
+        if cfg.moe is not None:
+            cap = max(1, batch * seq_len // cfg.moe.num_experts)
+            findings += audit_kernel_tiles(
+                tag, "moe_gemm",
+                E=cfg.moe.num_experts, C=cap, d=h, F=cfg.moe.d_ff_expert,
+                block_c=K.fit_block(cap, 512), block_f=K.fit_block(cfg.moe.d_ff_expert, 512),
+            )
+    return findings

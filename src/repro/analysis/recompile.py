@@ -1,0 +1,110 @@
+"""Recompile-hazard audit: statically enumerate the serve path's jit cache
+keys and fail if the key space is unbounded or exceeds the declared budget.
+
+The serve hot loop must never hit the compiler after warmup: every jitted
+closure's key set is a pure function of the ServePlan (prefill buckets from
+``prefill_chunk`` padding, one tick per sampler variant, the spec round's
+fallback ticks reuse the plain tick keys).  This audit re-derives that key
+arithmetic from the plan — no lowering needed — so an engine change that
+leaks a per-request shape into a jit boundary fails CI before anyone
+measures a recompile stall.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional
+
+from .findings import Finding
+
+
+@dataclass(frozen=True)
+class KeySpace:
+    """One jit boundary's static key count.  ``keys=None`` means unbounded:
+    some per-request value (a raw prompt length, a python scalar) reaches
+    the trace, and every new request recompiles."""
+    name: str
+    keys: Optional[int]
+    why: str = ""
+
+
+def serve_cache_keyspaces(plan, *, n_samplers: int = 1) -> List[KeySpace]:
+    """Key spaces of the ContinuousEngine's jitted closures for ``plan``.
+
+    Mirrors the engine's jit structure (serve/engine.py):
+
+    * chunked prefill pads every chunk to ``prefill_chunk`` and runs the
+      ragged tail token-by-token — exactly 2 shape buckets;
+    * the decode tick is keyed by sampler (``_tick_cache``), 1 key each,
+      plus 1 extra for the rng=None greedy specialization family;
+    * recycle has a static ``use_sentinel`` flag — 2 keys;
+    * paged twins double the prefill/tick families; the spec round adds
+      draft prefill/tick/round/commit/recycle plus one verify variant.
+    """
+    if plan.prefill_chunk is None or plan.prefill_chunk < 1:
+        return [KeySpace("prefill", None,
+                         "no prefill_chunk bucket: chunk shape follows the prompt")]
+    spaces = [
+        KeySpace("init_table", 1),
+        KeySpace("prefill", 2, "full chunk + ragged single-token tail"),
+        KeySpace("decode_tick", 2 * n_samplers, "per sampler, rng and rng-less"),
+        KeySpace("recycle", 2, "static use_sentinel"),
+    ]
+    if plan.page_size:
+        spaces += [
+            KeySpace("init_pools", 1),
+            KeySpace("paged_prefill", 2),
+            KeySpace("paged_decode_tick", 2 * n_samplers),
+            KeySpace("paged_recycle", 2),
+            KeySpace("copy_page", 1),
+        ]
+    if plan.draft_arch:
+        spaces += [
+            KeySpace("draft_init_table", 1),
+            KeySpace("draft_prefill", 2),
+            KeySpace("draft_tick", 1, "spec serves greedy only"),
+            KeySpace("draft_round", 1),
+            KeySpace("draft_commit", 1),
+            KeySpace("draft_recycle", 2),
+            KeySpace("verify", 1, "one chunked-or-scan variant per plan"),
+        ]
+    return spaces
+
+
+def static_cache_keyspaces(plan) -> List[KeySpace]:
+    """The static (admission='static') engine pads caches to prefill_chunk
+    buckets: one extend-step key per cache-length bucket."""
+    if plan.prefill_chunk is None or plan.prefill_chunk < 1:
+        return [KeySpace("extend", None, "unbucketed cache length")]
+    buckets = math.ceil(plan.max_len / plan.prefill_chunk)
+    return [KeySpace("extend", buckets, f"cache padded to {plan.prefill_chunk}-token buckets")]
+
+
+def declared_key_budget(plan, *, n_samplers: int = 1) -> int:
+    """The plan's declared jit-key ceiling: the closed-form count plus one
+    spare slot per sampler family for a warmup/probe variant."""
+    spaces = (serve_cache_keyspaces(plan, n_samplers=n_samplers)
+              if plan.admission == "continuous" else static_cache_keyspaces(plan))
+    total = sum(s.keys for s in spaces if s.keys is not None)
+    return total + n_samplers
+
+
+def audit_recompile(tag: str, keyspaces: List[KeySpace], budget: int) -> List[Finding]:
+    findings: List[Finding] = []
+    total = 0
+    for ks in keyspaces:
+        if ks.keys is None:
+            findings.append(Finding(
+                rule="RC001",
+                location=f"{tag}/jit/{ks.name}",
+                message=f"unbounded jit key space: {ks.why or 'per-request shape reaches the trace'}",
+            ))
+        else:
+            total += ks.keys
+    if total > budget:
+        findings.append(Finding(
+            rule="RC002",
+            location=f"{tag}/jit",
+            message=f"{total} static jit keys exceed the declared budget of {budget}",
+        ))
+    return findings

@@ -140,6 +140,92 @@ def strategy_comm_cost(
     raise ValueError(strategy)
 
 
+@dataclass(frozen=True)
+class CommContract:
+    """The plan's *declared* comm set, matchable against lowered HLO.
+
+    ``allowed`` is the closed set of collective kinds GSPMD may emit for
+    this plan; anything else is an unexpected reshard (SHRD001 — the PR 1
+    stack-into-shard_map bug class).  ``required`` kinds must appear or the
+    step is not actually synchronizing (SHRD003).  ``ceiling_bytes`` is a
+    per-kind per-device order-of-magnitude tripwire (SHRD002), NOT the
+    analytic CommCost: GSPMD legitimately all-reduces per scan timestep, so
+    the lowered volume runs ~seq_len x the single-shot analytic terms.
+    ``min_all_reduce_ops`` pins the bucketed delayed-psum promise: at least
+    one all-reduce instruction per grad bucket must survive lowering."""
+    allowed: frozenset
+    required: frozenset
+    ceiling_bytes: float
+    min_all_reduce_ops: int = 0
+
+
+def comm_contract(
+    cfg: ModelConfig,
+    *,
+    strategy: str,
+    devices: int,
+    batch: int,
+    src_len: int,
+    tgt_len: int,
+    micro_batches: int = 1,
+    overlap: bool = False,
+    pipelined: bool = False,
+    compute_dtype: Optional[str] = None,
+    bucket_count: int = 0,
+) -> CommContract:
+    """Build the audit contract for one training plan from the same terms
+    as :func:`strategy_comm_cost`.
+
+    Kind sets are the empirically closed sets per strategy family:
+
+    * no mesh / 1 device — NO collectives at all;
+    * ``data`` — grad all-reduce (per-timestep under the scan), the
+      microbatch loop's collective-permute, and the bucketed path's small
+      all-to-alls.  **Never all-gather**: a data-parallel graph gathering an
+      activation means GSPMD un-sharded the batch axis mid-graph — exactly
+      the PR 1 stack-into-shard_map reshard;
+    * model/hybrid/hybrid_opt — every kind is legitimate (stacked-stage
+      shard_map pipelines all-gather their stage params each step, rings
+      permute, phase boundaries all-to-all)."""
+    all_kinds = frozenset(
+        {"all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute"}
+    )
+    if devices <= 1:
+        return CommContract(frozenset(), frozenset(), 0.0)
+    pb, ph = seq2seq_param_split(cfg)
+    ab = act_bytes_for(compute_dtype, 4)
+    steps = src_len + tgt_len
+    grad_volume = 4.0 * (pb + ph)  # grads sync fp32 under master weights
+    act_volume = float(ab) * batch * steps * cfg.d_model
+    # per-timestep resharding under the scan multiplies either term by the
+    # step count; 16x on top of that is slack, not precision — the ceiling
+    # is a tripwire for runaway resharding, the KIND set does the real work
+    ceiling = 16.0 * steps * (grad_volume + act_volume)
+    if strategy == "data":
+        allowed = frozenset({"all-reduce", "reduce-scatter", "all-to-all", "collective-permute"})
+        required = frozenset({"all-reduce"})
+    else:
+        allowed = all_kinds
+        required = frozenset({"all-reduce"}) if strategy in ("hybrid", "hybrid_opt") else frozenset()
+        if pipelined:
+            required = required | frozenset({"collective-permute"})
+    min_ar = bucket_count if (strategy in ("data", "hybrid") and overlap and bucket_count) else 0
+    return CommContract(allowed, required, ceiling, min_all_reduce_ops=min_ar)
+
+
+def serve_comm_contract(*, devices: int) -> CommContract:
+    """Serve ticks: a meshless engine must lower to zero collectives; a
+    sharded one may use any kind (KV-head gathers, vocab-shard psums,
+    slot-axis permutes) but the per-tick volume is activation-scale —
+    the ceiling is set by the audit caller from the cache byte size."""
+    if devices <= 1:
+        return CommContract(frozenset(), frozenset(), 0.0)
+    all_kinds = frozenset(
+        {"all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute"}
+    )
+    return CommContract(all_kinds, frozenset(), float("inf"))
+
+
 def pipeline_activation_model(
     cfg: ModelConfig,
     *,

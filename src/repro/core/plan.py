@@ -55,7 +55,11 @@ class WavefrontSchedule:
 
     def __post_init__(self):
         if self.seq_len < 1 or self.num_stages < 1 or self.micro_batches < 1:
-            raise ValueError(f"degenerate schedule {self}")
+            raise ValueError(
+                "seq_len/num_stages/micro_batches must all be >= 1, got "
+                f"seq_len={self.seq_len}, num_stages={self.num_stages}, "
+                f"micro_batches={self.micro_batches}"
+            )
 
     @property
     def ticks(self) -> int:
@@ -151,14 +155,18 @@ class ExecutionPlan:
                 # buckets only change WHEN each grad's all-reduce runs; with
                 # no delayed fold they would compile to the same program —
                 # reject rather than record a knob that did nothing
-                raise ValueError("bucket_bytes requires overlap=True")
+                raise ValueError(
+                    f"bucket_bytes={self.bucket_bytes} requires overlap=True, "
+                    f"got overlap={self.overlap}"
+                )
         if self.overlap and self.pipelined:
             # the pipelined schedule runs ONE fwd/bwd (head grads sync once),
             # so there is no per-microbatch sync to delay — reject rather
             # than silently compile a program where the flag did nothing
             raise ValueError(
-                "overlap applies to the accumulation schedule; a pipelined plan "
-                "interleaves its microbatches inside one wavefront fwd/bwd"
+                f"overlap={self.overlap} with use_pipeline={self.use_pipeline}: overlap "
+                "applies to the accumulation schedule; a pipelined plan interleaves "
+                "its microbatches inside one wavefront fwd/bwd"
             )
 
     # -- derived structure --------------------------------------------------
@@ -335,7 +343,7 @@ class ExecutionPlan:
         "names": [dot paths]}]`` covering every leaf exactly once;
         ``tree`` may hold arrays or ShapeDtypeStructs (dryrun)."""
         if self.bucket_bytes is None:
-            raise ValueError("grad_buckets requires bucket_bytes to be set")
+            raise ValueError("grad_buckets requires bucket_bytes to be set, got bucket_bytes=None")
         leaves, _ = jax.tree.flatten(tree)
         paths = [
             jax.tree_util.keystr(kp).replace("'", "").strip("[]").replace("][", ".")
@@ -434,7 +442,9 @@ class ServePlan:
             )
         if self.cache_policy == "window":
             if self.window is None or self.window < 1:
-                raise ValueError("cache_policy='window' requires a positive window")
+                raise ValueError(
+                    f"cache_policy='window' requires a positive window, got window={self.window!r}"
+                )
             if self.prefill_chunk > self.window:
                 raise ValueError(
                     f"prefill_chunk={self.prefill_chunk} cannot exceed window={self.window} "
@@ -443,14 +453,18 @@ class ServePlan:
         elif self.window is not None:
             raise ValueError(f"window is only meaningful for cache_policy='window', got {self.cache_policy!r}")
         if self.num_pages is not None and self.page_size is None:
-            raise ValueError("num_pages without page_size: set page_size to enable the paged pool")
+            raise ValueError(
+                f"num_pages={self.num_pages} without page_size: set page_size to enable the paged pool"
+            )
         if self.share_prefixes and self.page_size is None:
-            raise ValueError("share_prefixes requires a paged plan (set page_size)")
+            raise ValueError(
+                f"share_prefixes={self.share_prefixes} requires a paged plan, got page_size=None"
+            )
         if self.page_size is not None:
             if self.cache_policy == "recurrent":
                 raise ValueError(
                     "cache_policy='recurrent' keeps O(1) state per slot — there is "
-                    "no positional cache to page; drop page_size"
+                    f"no positional cache to page; drop page_size={self.page_size}"
                 )
             if self.page_size < 1:
                 raise ValueError(f"page_size must be >= 1, got {self.page_size}")
@@ -471,7 +485,8 @@ class ServePlan:
                 )
             if self.share_prefixes and self.cache_policy != "full_kv":
                 raise ValueError(
-                    "share_prefixes requires cache_policy='full_kv': a rolling window "
+                    f"share_prefixes={self.share_prefixes} requires cache_policy='full_kv', "
+                    f"got cache_policy={self.cache_policy!r}: a rolling window "
                     "evicts shared positions and the encdec encoder's carried LSTM "
                     "states cannot skip a prefix"
                 )
@@ -479,7 +494,9 @@ class ServePlan:
             raise ValueError(f"acceptance must be one of {ACCEPTANCES}, got {self.acceptance!r}")
         if self.draft_arch is None:
             if self.draft_len:
-                raise ValueError("draft_len without draft_arch: set draft_arch to enable speculation")
+                raise ValueError(
+                    f"draft_len={self.draft_len} without draft_arch: set draft_arch to enable speculation"
+                )
         else:
             if self.draft_len < 1:
                 raise ValueError(f"draft_arch={self.draft_arch!r} needs draft_len >= 1, got {self.draft_len}")
@@ -495,18 +512,23 @@ class ServePlan:
                 )
             if self.cache_policy == "encdec_memory":
                 raise ValueError(
-                    "speculative decoding does not serve cache_policy='encdec_memory': "
-                    "the Luong decode consumes exactly one token per step, so there is "
-                    "no chunked extend to verify drafts against"
+                    f"draft_arch={self.draft_arch!r} does not serve "
+                    f"cache_policy={self.cache_policy!r}: the Luong decode consumes "
+                    "exactly one token per step, so there is no chunked extend to "
+                    "verify drafts against (encdec_memory)"
                 )
             if self.share_prefixes:
                 raise ValueError(
-                    "draft_arch with share_prefixes: speculative rollback retracts page "
+                    f"draft_arch={self.draft_arch!r} with share_prefixes="
+                    f"{self.share_prefixes}: speculative rollback retracts page "
                     "reservations mid-request, which COW prefix chains cannot express — "
                     "pick one"
                 )
             if self.admission != "continuous":
-                raise ValueError("speculative decoding rides the continuous engine; admission='static' has no draft path")
+                raise ValueError(
+                    "speculative decoding rides the continuous engine; "
+                    f"admission={self.admission!r} has no draft path"
+                )
         if self.mesh is not None:
             # an explicit mesh must never be quietly ignored: the slot table
             # (the vmapped batch axis of the decode tick) shards over the
@@ -515,9 +537,10 @@ class ServePlan:
             # uses at least one of the mesh's axes
             if self.strategy == stg.Strategy.SINGLE:
                 raise ValueError(
-                    "ServePlan carries a mesh but strategy='single' would leave the "
-                    "slot table unsharded — pick a data-parallel strategy (e.g. "
-                    "'data') or drop the mesh"
+                    f"ServePlan carries mesh axes {tuple(self.mesh.axis_names)} but "
+                    f"strategy={self.strategy.value!r} would leave the slot table "
+                    "unsharded — pick a data-parallel strategy (e.g. 'data') or "
+                    "drop the mesh"
                 )
             spec = self.slot_spec()
             axes = spec[0] if len(spec) else ()

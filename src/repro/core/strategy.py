@@ -31,11 +31,9 @@ batch-parallel, which the roofline table then shows honestly).
 from __future__ import annotations
 
 import enum
-import functools
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

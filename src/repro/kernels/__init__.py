@@ -25,3 +25,76 @@ def fit_block(n: int, want: int) -> int:
     while n % want:
         want -= 1
     return want
+
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
+MXU_LANES = 128
+
+
+def _tile_model(divides, tiles, scratch=0, elt=4):
+    n = 0
+    for shape in tiles:
+        t = elt
+        for d in shape:
+            t *= d
+        n += t
+    return {
+        "divides": list(divides),
+        "vmem_bytes": n + scratch,
+        # alignment only matters for the 2-D+ MXU operand tiles; 1-D
+        # bias/mask vectors ride the VPU and pad freely
+        "minor_dims": [shape[-1] for shape in tiles if len(shape) >= 2],
+    }
+
+
+def lstm_cell_tile_model(*, B, In, H, block_b=256, block_h=256, elt=4):
+    """Static mirror of lstm_cell_pallas's tiling: the analysis auditor
+    checks these numbers without tracing the kernel.  Tiles: x, h, c, wx,
+    wh, b in + (h', c') out; scratch = the fp32 gates block."""
+    bb, bh = min(block_b, B), min(block_h, H)
+    return _tile_model(
+        divides=[("B", B, bb), ("H", H, bh)],
+        tiles=[(bb, In), (bb, H), (bb, bh), (In, 4, bh), (H, 4, bh), (4, bh), (bb, bh), (bb, bh)],
+        scratch=4 * bb * 4 * bh,
+        elt=elt,
+    )
+
+
+def luong_attn_tile_model(*, B, N, M, h, block_n=128, elt=4):
+    bn = min(block_n, N)
+    return _tile_model(
+        divides=[("N", N, bn)],
+        tiles=[(bn, h), (M, h), (M,), (h, h), (h, h), (h, h), (bn, h)],
+        scratch=4 * bn * M * 2,  # fp32 scores + probs
+        elt=elt,
+    )
+
+
+def flash_attn_tile_model(*, BH, S, T, D, block_q=512, block_kv=512, elt=4):
+    bq, bkv = min(block_q, S), min(block_kv, T)
+    return _tile_model(
+        divides=[("S", S, bq), ("T", T, bkv)],
+        tiles=[(bq, D), (T, D), (T, D), (bq, D)],  # q + full-stream k/v + out
+        scratch=4 * (bq * D + bq * bkv + 2 * bq),  # fp32 acc, scores, (m, l)
+        elt=elt,
+    )
+
+
+def moe_gemm_tile_model(*, E, C, d, F, block_c=512, block_f=512, elt=4):
+    bc, bf = min(block_c, C), min(block_f, F)
+    return _tile_model(
+        divides=[("C", C, bc), ("F", F, bf)],
+        tiles=[(bc, d), (d, bf), (d, bf), (bf, d), (bc, d)],
+        scratch=4 * bc * bf,  # fp32 gated h block
+        elt=elt,
+    )
+
+
+# name -> static tile model, mirrored from each kernel.py's wrapper math;
+# the analysis subsystem audits divisibility / VMEM / alignment over these
+KERNEL_TILE_MODELS = {
+    "lstm_cell": lstm_cell_tile_model,
+    "luong_attn": luong_attn_tile_model,
+    "flash_attn": flash_attn_tile_model,
+    "moe_gemm": moe_gemm_tile_model,
+}

@@ -1,7 +1,6 @@
 """Public wrapper: grouped-layout adaptation for the flash attention kernel."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro import kernels
 from repro.kernels.flash_attn.kernel import flash_attention_pallas

@@ -1,7 +1,6 @@
 """Oracle: dense_attention from models/attention.py, adapted to the kernel layout."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.models.attention import dense_attention
 

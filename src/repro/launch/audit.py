@@ -1,0 +1,55 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# Must run before any jax import: the audit matrix's data8/model2/d2m2
+# meshes need 8 forced host devices (launch/dryrun.py forces 512 the same
+# way; setdefault lets an outer harness pick a bigger count).
+
+"""Plan-contract auditor CLI — static lint over lowered train & serve graphs.
+
+    PYTHONPATH=src python -m repro.launch.audit                 # full matrix
+    PYTHONPATH=src python -m repro.launch.audit --only train/   # train side
+    PYTHONPATH=src python -m repro.launch.audit --list          # entry names
+
+Lowers (never executes) every entry of the analysis matrices and checks
+each graph against its plan's declared contract: collective kind/volume
+(SHRD*), buffer donation (DON*), mixed-precision dtype policy (DT*),
+serve-path jit key budgets (RC*) and Pallas tile arithmetic (PL*).  Exits
+non-zero iff any error-severity finding fires — the CI `analysis` step
+runs exactly this.  DESIGN.md §10 documents the rule catalog.
+"""
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Plan-contract auditor: static lint over lowered train & serve graphs")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on entry names (e.g. 'train/', 'serve/lm_')")
+    ap.add_argument("--no-train", action="store_true", help="skip the train matrix")
+    ap.add_argument("--no-serve", action="store_true", help="skip the serve matrix")
+    ap.add_argument("--no-kernels", action="store_true", help="skip the kernel tile audits")
+    ap.add_argument("--list", action="store_true", help="print matrix entry names and exit")
+    ap.add_argument("-q", "--quiet", action="store_true", help="no per-entry progress lines")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.audit import KERNEL_MATRIX, SERVE_MATRIX, TRAIN_MATRIX, run_matrix
+
+    if args.list:
+        for entry in (*TRAIN_MATRIX, *SERVE_MATRIX, *KERNEL_MATRIX):
+            print(entry["name"])
+        return 0
+
+    report = run_matrix(
+        train=not args.no_train,
+        serve=not args.no_serve,
+        kernels=not args.no_kernels,
+        only=args.only,
+        verbose=not args.quiet,
+    )
+    print(report.render())
+    return 1 if report.errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

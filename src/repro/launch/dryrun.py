@@ -19,8 +19,6 @@ import json
 import time
 import traceback
 
-import jax
-
 from repro.configs import ARCH_IDS, get_config, get_shape, supported_shapes
 from repro.core import compat
 from repro.core.schedule import SCHEDULES
@@ -373,7 +371,19 @@ def main():
     ap.add_argument("--cache-policy", default="full_kv",
                     choices=("full_kv", "window", "recurrent", "encdec_memory"))
     ap.add_argument("--smoke", action="store_true", help="use the reduced smoke config for --serve-tick")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the plan-contract audit matrix (repro.analysis) and exit; "
+                         "non-zero iff any error-severity finding fires")
+    ap.add_argument("--audit-only", default=None,
+                    help="substring filter on audit entry names (implies --audit)")
     args = ap.parse_args()
+
+    if args.audit or args.audit_only:
+        from repro.analysis.audit import run_matrix
+
+        report = run_matrix(only=args.audit_only, verbose=True)
+        print(report.render())
+        raise SystemExit(1 if report.errors else 0)
 
     if args.serve_tick:
         assert args.arch, "--arch required with --serve-tick"

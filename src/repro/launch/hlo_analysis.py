@@ -37,6 +37,24 @@ _DTYPE_BYTES = {
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
 
+
+def collective_kind(op: str):
+    """(base_kind, variant) for a collective op name, else (None, None).
+
+    Async pairs lower as ``<kind>-start`` / ``<kind>-done``: the start op
+    carries the payload (its output is the result — or an (input, output)
+    context tuple), the done op merely retires the handle.  Counting both
+    (as the old suffix-regex did) triple-counted every async collective:
+    start tuple = 2x payload, done = 1x more."""
+    for kind in COLLECTIVES:
+        if op == kind:
+            return kind, "sync"
+        if op == kind + "-start":
+            return kind, "start"
+        if op == kind + "-done":
+            return kind, "done"
+    return None, None
+
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^=]*?\))|(?:\w+\[[^\]]*\]\S*))\s+([\w\-]+)\(")
 _PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^()]*\))|(?:\w+\[[^\]]*\]))")
@@ -128,6 +146,10 @@ def _dims(shape_str: str):
 
 
 def _shape_bytes(shape_str: str) -> int:
+    """Total bytes over every array shape in the string.  ``token[]`` and
+    other non-array types contribute 0 (their "dtype" is not in the table);
+    a tuple shape sums its elements — correct for variadic sync collectives,
+    NOT for async ``-start`` tuples (use :func:`_payload_bytes` there)."""
     total = 0
     for m in _SHAPE_RE.finditer(shape_str):
         dt, dims = m.group(1), m.group(2)
@@ -141,11 +163,47 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+def _payload_bytes(shape_str: str) -> int:
+    """Payload of an async ``-start`` output: the largest array in the
+    shape.  Covers ``all-reduce-start`` (plain result shape), ``all-gather-
+    start`` ((input, output) tuples — output is the larger), and
+    ``collective-permute-start`` ((in, out, u32[], u32[]) context tuples)."""
+    best = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n * _DTYPE_BYTES[dt])
+    return best
+
+
+@dataclass(frozen=True)
+class CollectiveOp:
+    """One collective instruction as seen in the HLO text (per device).
+
+    ``bytes`` is the trip-multiplied payload; ``mult`` the while-loop
+    multiplier it inherited; ``computation`` where it lives.  The plan
+    auditor matches these against the plan's comm contract."""
+    kind: str
+    op: str
+    computation: str
+    shape: str
+    bytes: float
+    mult: float
+
+
 @dataclass
 class HloStats:
     flops: float = 0.0
     bytes: float = 0.0
     collectives: Dict[str, float] = field(default_factory=dict)
+    # every collective instruction individually (async pairs counted once,
+    # at the -start op) — the analysis subsystem audits these per-op
+    collective_ops: list = field(default_factory=list)
     # opt-in (analyze_hlo(detail=True)): bytes per "computation/op[shape]"
     # key — the §Perf hillclimb uses this to find the dominant traffic.
     detail: Dict[str, float] = field(default_factory=dict)
@@ -222,9 +280,6 @@ def analyze_hlo(text: str, fallback_trip: int = 1, detail: bool = False) -> HloS
     if entry is None:
         return stats
 
-    coll_re = re.compile(
-        r"=\s*((?:\([^=]*?\))|(?:\w+\[[^\]]*\]\S*))\s+(" + "|".join(COLLECTIVES) + r")[\-\w]*\("
-    )
     visited = set()
     reducing_cache: Dict[str, bool] = {}
 
@@ -267,12 +322,20 @@ def analyze_hlo(text: str, fallback_trip: int = 1, detail: bool = False) -> HloS
             if not d:
                 continue
             out_shape, op = d.group(2), d.group(3)
-            cm = coll_re.search(line)
-            if cm:
-                stats.collectives[cm.group(2)] += mult * _shape_bytes(out_shape)
+            ckind, cvariant = collective_kind(op)
+            if ckind is not None and cvariant != "done":
+                # sync ops may be variadic (tuple output = sum of elements);
+                # async -start outputs carry (input, output) context tuples —
+                # count the payload exactly once, at the start op
+                b = _payload_bytes(out_shape) if cvariant == "start" else _shape_bytes(out_shape)
+                stats.collectives[ckind] += mult * b
+                stats.collective_ops.append(
+                    CollectiveOp(kind=ckind, op=op, computation=name,
+                                 shape=out_shape, bytes=mult * b, mult=mult)
+                )
             if op == "dot":
                 stats.flops += mult * _dot_flops(line, shapes, out_shape)
-            if op not in _SKIP_BYTES_OPS and op not in COLLECTIVES:
+            if op not in _SKIP_BYTES_OPS and ckind is None:
                 out_b = _shape_bytes(out_shape)
                 operand_b = []
                 opstr = _extract_call(line, op)

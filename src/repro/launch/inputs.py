@@ -13,7 +13,6 @@ sees the production layout.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax

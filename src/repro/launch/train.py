@@ -13,8 +13,6 @@ import argparse
 import dataclasses
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_IDS, get_config
@@ -107,13 +105,13 @@ def main():
     plan.validate_batch(args.batch)
     if args.pipeline and not plan.pipelined:
         print(f"warning: --pipeline has no effect for strategy={strat.value} "
-              f"(wavefront needs model/hybrid); microbatches run as grad accumulation")
+              "(wavefront needs model/hybrid); microbatches run as grad accumulation")
     if args.stage_kernel != "jnp" and not plan.pipelined:
         print(f"warning: --stage-kernel={args.stage_kernel} has no effect without "
-              f"the wavefront pipeline (needs --pipeline and model/hybrid)")
+              "the wavefront pipeline (needs --pipeline and model/hybrid)")
     if args.schedule != "gpipe" and not plan.pipelined:
         print(f"warning: --schedule={args.schedule} has no effect without "
-              f"the wavefront pipeline (needs --pipeline and model/hybrid)")
+              "the wavefront pipeline (needs --pipeline and model/hybrid)")
 
     key = jax.random.key(args.seed)
     if cfg.family == "seq2seq":

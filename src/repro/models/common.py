@@ -24,7 +24,7 @@ state  SSM state / conv width / small internal dims
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ the sequence is produced before any attention/softmax work starts.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -8,12 +8,12 @@ time with chunked remat (`scan_utils.chunked_scan`).  Decode carries the
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import MambaConfig, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.models.common import Initializer
 from repro.models.scan_utils import chunked_scan
 

@@ -8,7 +8,7 @@ interval (5k / 20k batches for WMT14 / WMT17).  It is host-side state
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass

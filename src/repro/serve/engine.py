@@ -1180,6 +1180,76 @@ class ContinuousEngine:
             self._paged_tick_cache[sampler] = tick
         return tick
 
+    def audit_lowerables(self):
+        """name -> (jitted_fn, args) for every jit'd closure on the serve
+        hot path, with abstract (ShapeDtypeStruct) arguments.
+
+        The static auditor (``repro.analysis``) lowers these — never
+        executes them — and checks the donation / collective / recompile
+        contracts the plan declares.  Args mirror the run()-loop call sites
+        exactly: shapes here ARE the jit cache keys the loop will hit."""
+        sds = jax.ShapeDtypeStruct
+
+        def abstract(tree):
+            return jax.tree.map(lambda a: sds(jnp.shape(a), jnp.result_type(a)), tree)
+
+        K, C = self._K, self._C
+        params = abstract(self.params)
+        caches = jax.eval_shape(self._init_table, abstract(self._single))
+        i32 = sds((), jnp.int32)
+        toks = sds((K,), jnp.int32)
+        act = sds((K,), jnp.bool_)
+        chunk = sds((1, C), jnp.int32)
+        if self._paged:
+            # a paged engine never calls the contiguous closures: its slot
+            # state has zero-length positional caches (pages live in pools)
+            pools = abstract(self._pool_template)
+            wp = self.plan.pages_per_slot
+            pages = sds((self._phys_pages,), jnp.bool_)
+            out = {
+                "paged_prefill": (
+                    self._paged_prefill,
+                    (params, caches, pools, i32, chunk, sds((wp,), jnp.int32), i32, i32),
+                ),
+                "paged_decode_tick": (
+                    self._paged_tick_for(greedy),
+                    (params, caches, pools, toks, act, sds((K, wp), jnp.int32),
+                     toks, toks, None, i32),
+                ),
+                "paged_recycle": (
+                    self._paged_recycle,
+                    (caches, pools, act, act, pages, pages, toks, True),
+                ),
+            }
+        else:
+            out = {
+                "prefill": (self._prefill_step, (params, caches, i32, chunk)),
+                "decode_tick": (self._decode_tick, (params, caches, toks, act, None, i32)),
+                "recycle": (self._recycle, (caches, act, act, True)),
+            }
+        if self._spec:
+            dparams = abstract(self.draft_params)
+            dcaches = jax.eval_shape(self._draft_init_table)
+            drafts = sds((self.plan.draft_len, K), jnp.int32)
+            out["draft_prefill"] = (self._draft_prefill, (dparams, dcaches, i32, chunk))
+            out["draft_tick"] = (self._draft_tick, (dparams, dcaches, toks, act))
+            out["draft_recycle"] = (self._draft_recycle, (dcaches, act, act, True))
+            if self._paged:
+                out["verify"] = (
+                    self._verify,
+                    (params, caches, pools, toks, drafts, act,
+                     sds((K, self.plan.pages_per_slot), jnp.int32)),
+                )
+            else:
+                out["verify"] = (self._verify, (params, caches, toks, drafts, act))
+        return out
+
+    # jit'd closures whose table/pool argument is donated (their lowerings
+    # must keep at least one input-output alias); the others never donate
+    AUDIT_DONATING = ("prefill", "decode_tick", "recycle", "paged_prefill",
+                      "paged_decode_tick", "paged_recycle", "draft_prefill",
+                      "draft_tick", "draft_recycle", "verify")
+
     def _param_placements(self):
         """The plan's parameter NamedShardings, resolved from the family's
         logical-axis specs via an abstract init (no second allocation)."""

@@ -12,8 +12,7 @@ optionally the microbatch-interleaved wavefront pipeline backbone).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

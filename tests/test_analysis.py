@@ -1,0 +1,389 @@
+"""Plan-contract auditor tests (marker ``analysis``; own CI step).
+
+Three layers, mirroring how the auditor is meant to be trusted:
+
+* rule-level seeded violations — synthetic stats / tiny real lowerings
+  that each trip EXACTLY their expected rule (forced GSPMD reshard ->
+  SHRD001 in a forced-8-device subprocess, dropped donation -> DON001,
+  unpinned softmax exp -> DT001, half accumulation -> DT004, ...);
+* known-good graphs — matrix entries and clean twins of every seeded
+  violation must produce ZERO findings;
+* the orchestrator — one meshless train entry and one serve entry run
+  end-to-end through ``repro.analysis.audit`` (the multi-device matrix
+  is CI's ``python -m repro.launch.audit`` step, not a pytest job).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import types
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import RULES, Severity, worst_severity
+from repro.analysis import collectives as coll
+from repro.analysis import donation, dtypes, pallas_checks, recompile
+from repro.analysis.audit import (
+    KERNEL_MATRIX,
+    SERVE_MATRIX,
+    TRAIN_MATRIX,
+    _SERVE_PLAN_BASE,
+    audit_kernel_entry,
+    audit_serve_entry,
+    audit_train_entry,
+)
+from repro.analysis.findings import AuditReport, Finding
+from repro.configs import get_config
+from repro.core import hybrid
+from repro.core.plan import ServePlan
+from repro.launch.hlo_analysis import CollectiveOp, HloStats
+
+pytestmark = pytest.mark.analysis
+
+_TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+_SRC_DIR = os.path.join(_TESTS_DIR, "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# rule catalog
+# ---------------------------------------------------------------------------
+
+
+def test_rule_catalog_is_well_formed():
+    assert RULES, "empty rule catalog"
+    for rid, rule in RULES.items():
+        assert rule.id == rid
+        assert rule.severity in Severity.ORDER
+        assert rule.title and rule.hint
+    f = Finding(rule="SHRD001", location="a/b", message="m")
+    assert f.severity == Severity.ERROR
+    assert "SHRD001" in f.render() and RULES["SHRD001"].hint in f.render()
+    assert worst_severity([]) is None
+    assert worst_severity([f, Finding(rule="PL003", location="x", message="y")]) == Severity.ERROR
+
+
+def test_audit_report_tracks_coverage():
+    rep = AuditReport()
+    rep.extend("g1", [])
+    rep.extend("g2", [Finding(rule="DON002", location="g2", message="m")])
+    assert rep.audited == ["g1", "g2"]
+    assert not rep.errors  # DON002 is a warning
+    assert "audited 2 graphs" in rep.render()
+
+
+# ---------------------------------------------------------------------------
+# collective contract (SHRD*) — synthetic per-op stats against real contracts
+# ---------------------------------------------------------------------------
+
+_CFG = get_config("seq2seq-rnn", smoke=True)
+
+
+def _data_contract(**kw):
+    return hybrid.comm_contract(
+        _CFG, strategy="data", devices=8, batch=64, src_len=16, tgt_len=16, **kw
+    )
+
+
+def _stats(*ops):
+    s = HloStats()
+    s.collective_ops.extend(ops)
+    return s
+
+
+def _op(kind, nbytes, mult=1.0, op="%x.1"):
+    return CollectiveOp(kind=kind, op=op, computation="main", shape="f32[...]",
+                        bytes=nbytes, mult=mult)
+
+
+def test_shrd001_unexpected_reshard_kind():
+    """The PR 1 bug class: an all-gather under a DATA plan is a GSPMD
+    reshard the plan never priced — the kind set catches it."""
+    findings = coll.audit_collectives(
+        "t", _stats(_op("all-reduce", 1024), _op("all-gather", 4096)), _data_contract()
+    )
+    assert [f.rule for f in findings] == ["SHRD001"]
+    assert "all-gather" in findings[0].message
+
+
+def test_shrd002_volume_ceiling():
+    c = _data_contract()
+    findings = coll.audit_collectives(
+        "t", _stats(_op("all-reduce", int(c.ceiling_bytes) + 1)), c
+    )
+    assert [f.rule for f in findings] == ["SHRD002"]
+
+
+def test_shrd003_missing_required_sync():
+    findings = coll.audit_collectives("t", _stats(), _data_contract())
+    assert [f.rule for f in findings] == ["SHRD003"]
+    assert "all-reduce" in findings[0].message
+
+
+def test_shrd004_bucket_all_reduce_floor():
+    c = _data_contract(overlap=True, bucket_count=3)
+    assert c.min_all_reduce_ops == 3
+    ops = [_op("all-reduce", 64, op=f"%ar.{i}") for i in range(3)]
+    assert coll.audit_collectives("t", _stats(*ops), c) == []
+    findings = coll.audit_collectives("t", _stats(ops[0]), c)
+    assert [f.rule for f in findings] == ["SHRD004"]
+    assert findings[0].severity == Severity.WARNING
+
+
+def test_clean_data_stats_zero_findings():
+    findings = coll.audit_collectives(
+        "t", _stats(_op("all-reduce", 1024), _op("collective-permute", 64)), _data_contract()
+    )
+    assert findings == []
+
+
+def test_single_device_contract_is_empty():
+    c = hybrid.comm_contract(_CFG, strategy="single", devices=1, batch=64, src_len=16, tgt_len=16)
+    assert c.allowed == frozenset() and c.required == frozenset()
+    assert coll.audit_collectives("t", _stats(), c) == []
+
+
+
+def test_forced_reshard_lowering_trips_shrd001():
+    """End to end on REAL lowerings in a forced-8-device subprocess: a
+    replicate with_sharding_constraint mid-graph under a DATA plan lowers
+    an all-gather and trips SHRD001; the clean twin is finding-free."""
+    code = textwrap.dedent(
+        """
+        import json
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+        from repro.analysis import collectives as coll
+        from repro.configs import get_config
+        from repro.core import hybrid
+        from repro.launch import hlo_analysis
+
+        mesh = Mesh(np.asarray(jax.devices()), ("data",))
+        cfg = get_config("seq2seq-rnn", smoke=True)
+        contract = hybrid.comm_contract(
+            cfg, strategy="data", devices=8, batch=64, src_len=16, tgt_len=16)
+        arg = jax.ShapeDtypeStruct((64, 128), jnp.float32,
+                                   sharding=NamedSharding(mesh, P("data")))
+
+        def good(x):
+            return (x * 2).sum()
+
+        def bad(x):
+            y = jax.lax.with_sharding_constraint(x * 2, NamedSharding(mesh, P()))
+            return y.sum()
+
+        out = {}
+        for name, fn in (("good", good), ("bad", bad)):
+            text = jax.jit(fn).lower(arg).compile().as_text()
+            stats = hlo_analysis.analyze_hlo(text, fallback_trip=1)
+            out[name] = [f.rule for f in coll.audit_collectives(name, stats, contract)]
+        print(json.dumps(out))
+        """
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC_DIR
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rules = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rules["good"] == []
+    assert "SHRD001" in rules["bad"]
+
+
+# ---------------------------------------------------------------------------
+# donation (DON*) — real single-device lowerings + the header parser
+# ---------------------------------------------------------------------------
+
+
+def _lower_texts(fn, *args, donate=(0,)):
+    jitted = jax.jit(fn, donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    return lowered.as_text(), lowered.compile().as_text()
+
+
+def test_donated_buffer_survives_as_alias():
+    sh, comp = _lower_texts(lambda x: x + 1, jnp.ones((8,), jnp.float32))
+    assert donation.stablehlo_alias_count(sh) == 1
+    assert donation.compiled_alias_params(comp) == {0}
+    assert donation.audit_donation("t", sh, comp) == []
+
+
+def test_don001_dtype_change_drops_donation():
+    """The classic silent-copy bug: donating a buffer whose returned value
+    changed dtype — jax drops the donation with only a UserWarning."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # jax's "donated buffers not usable"
+        sh, comp = _lower_texts(lambda x: x.astype(jnp.bfloat16), jnp.ones((8,), jnp.float32))
+    findings = donation.audit_donation("t", sh, comp)
+    assert [f.rule for f in findings] == ["DON001"]
+    assert findings[0].severity == Severity.ERROR
+
+
+def test_don002_compiler_kept_fewer_aliases():
+    sh = "func @main(%arg0 {tf.aliasing_output = 0 : i32}, %arg1 {tf.aliasing_output = 1 : i32})"
+    comp = "HloModule jit_f, input_output_alias={ {0}: (0, {}, may-alias) }\n\nENTRY ..."
+    findings = donation.audit_donation("t", sh, comp)
+    assert [f.rule for f in findings] == ["DON002"]
+    assert findings[0].severity == Severity.WARNING
+
+
+# ---------------------------------------------------------------------------
+# dtype policy (DT*) — real traced jaxprs
+# ---------------------------------------------------------------------------
+
+
+def _jaxpr(fn, *args):
+    return jax.jit(fn).trace(*args).jaxpr
+
+
+def test_dt001_half_softmax_exp():
+    """The seeded 'unpinned softmax': exp on bf16 scores."""
+    x = jnp.ones((4, 8), jnp.bfloat16)
+    jaxpr = _jaxpr(lambda x: jnp.exp(x).sum(dtype=jnp.float32), x)
+    findings = dtypes.audit_dtypes("t", jaxpr)
+    assert [f.rule for f in findings] == ["DT001"]
+
+
+def test_dt002_half_gate_logistic():
+    x = jnp.ones((4,), jnp.float16)
+    jaxpr = _jaxpr(lambda x: jax.nn.sigmoid(x).sum(dtype=jnp.float32), x)
+    findings = dtypes.audit_dtypes("t", jaxpr)
+    assert [f.rule for f in findings] == ["DT002"]
+
+
+def test_dt003_half_output_leaf():
+    x = jnp.ones((4,), jnp.float32)
+    jaxpr = _jaxpr(lambda x: (x.sum(), x.astype(jnp.bfloat16)), x)
+    findings = dtypes.audit_dtypes("t", jaxpr)
+    assert [f.rule for f in findings] == ["DT003"]
+
+
+def test_fp32_exp_and_outputs_clean():
+    x = jnp.ones((4, 8), jnp.float32)
+    jaxpr = _jaxpr(lambda x: jax.nn.softmax(x).sum(), x)
+    assert dtypes.audit_dtypes("t", jaxpr) == []
+
+
+def _accum_step(accum_dtype):
+    def step(p, xs):
+        w = p.astype(jnp.bfloat16)
+
+        def body(acc, x):
+            g = (w * x.astype(jnp.bfloat16)).astype(accum_dtype)
+            return acc + g, ()
+
+        acc, _ = jax.lax.scan(body, jnp.zeros(p.shape, accum_dtype), xs)
+        return acc.astype(jnp.float32)
+
+    return step
+
+
+def test_dt004_half_grad_accumulation():
+    """The seeded Ott-et-al violation: microbatch grads summed at bf16."""
+    p = jnp.ones((4, 4), jnp.float32)
+    xs = jnp.ones((3, 4, 4), jnp.float32)
+    bad = _jaxpr(_accum_step(jnp.bfloat16), p, xs)
+    findings = dtypes.audit_grad_accumulation("t", bad)
+    assert [f.rule for f in findings] == ["DT004"]
+    good = _jaxpr(_accum_step(jnp.float32), p, xs)
+    assert dtypes.audit_grad_accumulation("t", good) == []
+
+
+# ---------------------------------------------------------------------------
+# recompile hazards (RC*)
+# ---------------------------------------------------------------------------
+
+
+def test_rc001_unbounded_key_space():
+    stub = types.SimpleNamespace(prefill_chunk=None)
+    spaces = recompile.serve_cache_keyspaces(stub)
+    assert spaces[0].keys is None
+    findings = recompile.audit_recompile("t", spaces, budget=100)
+    assert [f.rule for f in findings] == ["RC001"]
+
+
+def test_rc002_budget_exceeded():
+    spaces = [recompile.KeySpace("a", 4), recompile.KeySpace("b", 3)]
+    findings = recompile.audit_recompile("t", spaces, budget=6)
+    assert [f.rule for f in findings] == ["RC002"]
+    assert recompile.audit_recompile("t", spaces, budget=7) == []
+
+
+@pytest.mark.parametrize("entry", SERVE_MATRIX, ids=lambda e: e["name"])
+def test_serve_matrix_key_spaces_fit_their_budgets(entry):
+    plan = ServePlan(**{**_SERVE_PLAN_BASE, **entry["plan"]})
+    spaces = recompile.serve_cache_keyspaces(plan)
+    budget = recompile.declared_key_budget(plan)
+    assert recompile.audit_recompile(entry["name"], spaces, budget) == []
+    # paged plans carry the paged closure families, spec plans the draft ones
+    names = {s.name for s in spaces}
+    assert ("paged_prefill" in names) == bool(plan.page_size)
+    assert ("draft_tick" in names) == bool(plan.draft_arch)
+
+
+def test_static_admission_buckets():
+    plan = ServePlan(max_slots=2, max_len=32, prefill_chunk=4, admission="static")
+    (space,) = recompile.static_cache_keyspaces(plan)
+    assert space.keys == 8  # 32 / 4 cache-length buckets
+
+
+# ---------------------------------------------------------------------------
+# pallas static checks (PL*)
+# ---------------------------------------------------------------------------
+
+
+def test_pl001_block_does_not_divide():
+    findings = pallas_checks.audit_kernel_tiles(
+        "t", "lstm_cell", B=48, In=8, H=16, block_b=32, block_h=16)
+    assert [f.rule for f in findings] == ["PL001"]
+    assert "B=48" in findings[0].message
+
+
+def test_pl002_vmem_over_budget():
+    # full-stream K/V at T=64k, D=128: ~67 MB of fp32 tiles >> 16 MB/core
+    findings = pallas_checks.audit_kernel_tiles(
+        "t", "flash_attn", BH=1, S=512, T=65536, D=128, block_q=512, block_kv=512)
+    assert "PL002" in [f.rule for f in findings]
+
+
+def test_pl003_misaligned_minor_dim():
+    findings = pallas_checks.audit_kernel_tiles(
+        "t", "lstm_cell", B=256, In=256, H=192, block_b=256, block_h=192)
+    assert [f.rule for f in findings] == ["PL003"]
+    assert findings[0].severity == Severity.WARNING
+
+
+@pytest.mark.parametrize("entry", KERNEL_MATRIX, ids=lambda e: e["name"])
+def test_kernel_matrix_zero_findings(entry):
+    assert audit_kernel_entry(entry) == []
+
+
+# ---------------------------------------------------------------------------
+# the orchestrator end to end (single-device entries only; the full
+# multi-device matrix is the CI `python -m repro.launch.audit` step)
+# ---------------------------------------------------------------------------
+
+
+
+def test_train_single_entry_zero_findings():
+    entry = TRAIN_MATRIX[0]
+    assert entry["mesh"] == "none"
+    assert audit_train_entry(entry) == []
+
+
+
+def test_serve_encdec_entry_zero_findings():
+    entry = next(e for e in SERVE_MATRIX if e["name"] == "serve/seq2seq_encdec")
+    assert audit_serve_entry(entry) == []
+
+
+
+def test_serve_paged_spec_entry_zero_findings():
+    entry = next(e for e in SERVE_MATRIX if e["name"] == "serve/lm_paged_spec")
+    assert audit_serve_entry(entry) == []

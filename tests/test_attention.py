@@ -1,6 +1,5 @@
 """Attention substrate: chunked==dense, sliding window, GQA mapping,
 rolling cache, decode-vs-prefill equivalence."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

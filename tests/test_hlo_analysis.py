@@ -112,6 +112,30 @@ def test_fixture_gather_clipped_pinned():
     assert s.bytes == 2 * (8 * 64 * 4) + 8 * 4
 
 
+def test_fixture_async_collective_pairs_counted_once():
+    """Async pairs (``all-reduce-start``/``-done`` etc., captured from the
+    jax-0.4.37 async-collective format) count their payload exactly once:
+    the old suffix regex counted the start's (input, output) context tuple
+    twice and the done op a third time.  token[] operands parse as 0-byte."""
+    s = analyze_hlo(_fixture("hlo_async_collectives_jax0437.txt"))
+    assert s.collectives["all-reduce"] == 1024 * 64 * 4  # payload once, not 2x/3x
+    assert s.collectives["all-gather"] == 512 * 64 * 4  # the gathered output, once
+    assert s.collectives["collective-permute"] == 32 * 4
+    kinds = sorted(o.kind for o in s.collective_ops)
+    assert kinds == ["all-gather", "all-reduce", "collective-permute"]
+    assert all(o.op.endswith("-start") for o in s.collective_ops)
+    # -start/-done are comm, not HBM traffic: only the slice moves bytes
+    assert s.bytes == (128 * 64 * 4) + (512 * 64 * 4)
+
+
+def test_fixture_async_per_op_records_have_multipliers():
+    s = analyze_hlo(_fixture("hlo_async_collectives_jax0437.txt"))
+    for o in s.collective_ops:
+        assert o.mult == 1.0
+        assert o.bytes > 0
+        assert o.computation == "main.20"
+
+
 def test_collectives_bucketed_by_type():
     mesh = jax.make_mesh((1,), ("x",))
 

@@ -27,7 +27,6 @@ from repro.models import seq2seq as s2s
 from repro.optim import adam
 from repro.train.trainer import (
     LossScale,
-    TrainState,
     init_train_state,
     make_grad_fn,
     make_train_step,

@@ -611,6 +611,49 @@ def test_serve_plan_validation_errors():
     ServePlan(max_slots=2, admission="continuous").validate_batch(64)
 
 
+def test_plan_validation_errors_name_field_and_value():
+    """Every __post_init__ raise names the offending field AND the value it
+    got — pinned here so error text stays actionable (the audit CLI surfaces
+    these verbatim when a matrix entry is mis-specified)."""
+    import re
+
+    # ExecutionPlan: the overlap/bucket levers
+    with pytest.raises(ValueError, match=re.escape("bucket_bytes=4096 requires overlap=True, got overlap=False")):
+        ExecutionPlan(strategy=st.Strategy.DATA, bucket_bytes=4096)
+    with pytest.raises(ValueError, match=r"overlap=True with use_pipeline=True"):
+        ExecutionPlan(
+            strategy=st.Strategy.HYBRID, mesh=jax.make_mesh((1, 1), ("data", "model")),
+            micro_batches=2, use_pipeline=True, overlap=True,
+        )
+    with pytest.raises(ValueError, match=r"virtual_stages=2 requires schedule='interleaved'.*got 'gpipe'"):
+        ExecutionPlan(
+            strategy=st.Strategy.HYBRID, micro_batches=2, use_pipeline=True,
+            schedule="gpipe", virtual_stages=2,
+        )
+    plan = ExecutionPlan(strategy=st.Strategy.DATA)
+    with pytest.raises(ValueError, match=r"grad_buckets requires bucket_bytes.*got bucket_bytes=None"):
+        plan.grad_buckets({"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError, match=r"seq_len=0, num_stages=2, micro_batches=1"):
+        PipelineSchedule(seq_len=0, num_stages=2)
+
+    # ServePlan: cache-policy / paging / speculation levers
+    with pytest.raises(ValueError, match=r"cache_policy='window' requires a positive window, got window=None"):
+        ServePlan(cache_policy="window")
+    with pytest.raises(ValueError, match=r"num_pages=8 without page_size"):
+        ServePlan(num_pages=8)
+    with pytest.raises(ValueError, match=r"share_prefixes=True requires a paged plan, got page_size=None"):
+        ServePlan(share_prefixes=True)
+    with pytest.raises(ValueError, match=r"share_prefixes=True requires cache_policy='full_kv'.*cache_policy='window'"):
+        ServePlan(cache_policy="window", window=8, prefill_chunk=8,
+                  page_size=8, num_pages=64, share_prefixes=True)
+    with pytest.raises(ValueError, match=r"draft_len=3 without draft_arch"):
+        ServePlan(draft_len=3)
+    with pytest.raises(ValueError, match=r"draft_arch='xlstm-350m' does not serve cache_policy='encdec_memory'"):
+        ServePlan(cache_policy="encdec_memory", draft_arch="xlstm-350m", draft_len=2)
+    with pytest.raises(ValueError, match=r"admission='static' has no draft path"):
+        ServePlan(draft_arch="xlstm-350m", draft_len=2, admission="static")
+
+
 def test_serve_plan_family_policy_matrix():
     """window/full_kv on the recurrent family, recurrent on an attention
     family, and seq2seq <-> encdec_memory mismatches are all rejected."""

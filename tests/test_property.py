@@ -8,7 +8,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as hst  # noqa: E402
 
 from repro.models import common, moe
-from repro.optim.optimizers import Adam, SGD, apply_updates, clip_by_global_norm
+from repro.optim.optimizers import Adam, apply_updates, clip_by_global_norm
 
 SET = settings(max_examples=25, deadline=None)
 
@@ -484,3 +484,54 @@ def test_hlo_shape_bytes_parser(seed, n):
     dims = rng.integers(1, 9, size=n)
     s = f"f32[{','.join(map(str, dims))}]{{0}}"
     assert _shape_bytes(s) == 4 * int(np.prod(dims))
+
+
+@SET
+@given(hst.integers(0, 3), hst.integers(0, 2), hst.booleans(), hst.booleans())
+def test_analysis_dtype_walker_counts_nested_half_exps(n_top, n_scan, nest_pjit, half):
+    """The jaxpr walker finds EVERY half-precision exp regardless of
+    nesting depth (top level, inside a scan body, behind an inner pjit) —
+    and an fp32 twin of the same program is always clean."""
+    from repro.analysis import dtypes as adt
+
+    dt = jnp.bfloat16 if half else jnp.float32
+
+    def f(x):
+        y = x
+        for _ in range(n_top):
+            y = jnp.exp(y)
+
+        def body(c, _):
+            z = c
+            for _ in range(n_scan):
+                z = jnp.exp(z)
+            return z, ()
+
+        y, _ = jax.lax.scan(body, y, jnp.arange(3))
+        return y.astype(jnp.float32)
+
+    g = (lambda x: jax.jit(f)(x)) if nest_pjit else f
+    jaxpr = jax.jit(g).trace(jnp.ones((4,), dt)).jaxpr
+    findings = adt.audit_dtypes("t", jaxpr)
+    total = n_top + n_scan
+    if not half or total == 0:
+        assert findings == []
+    else:
+        assert [f_.rule for f_ in findings] == ["DT001"]
+        assert int(findings[0].message.split()[0]) == total
+
+
+@SET
+@given(hst.lists(hst.integers(0, 30), min_size=0, max_size=6, unique=True))
+def test_analysis_compiled_alias_header_parser(params):
+    """Balanced-brace parsing of the compiled input_output_alias header —
+    nested tuple-index braces and trailing header fields never confuse it."""
+    from repro.analysis import donation
+
+    entries = ", ".join("{%d}: (%d, {}, may-alias)" % (i, p) for i, p in enumerate(params))
+    header = (
+        "HloModule jit_f, input_output_alias={ " + entries + " }, "
+        "entry_computation_layout={(f32[2,3]{1,0})->f32[2]{0}}"
+    )
+    assert donation.compiled_alias_params(header + "\n\nENTRY main {}") == set(params)
+    assert donation.compiled_alias_params("HloModule jit_f\n\nENTRY main {}") == set()

@@ -5,12 +5,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core.hybrid import seq2seq_param_split, strategy_comm_cost, scaling_factor_model
 from repro.models import seq2seq as s2s
-from repro.models.common import leaf_count
 
 RNG = np.random.default_rng(0)
 

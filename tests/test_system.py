@@ -2,12 +2,10 @@
 LM), serving generates consistently with teacher forcing, checkpoints
 round-trip, plateau decay fires, micro-batching == full batch."""
 import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_config
